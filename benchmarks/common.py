@@ -1,0 +1,145 @@
+"""Shared benchmark infrastructure.
+
+The paper's experiments target a phone; ours target one v5e shard (the
+analytic cost model). The benchmark model is a reduced transformer with
+*compute-meaningful* dims (so the cost model is not overhead-dominated) but
+CPU-trainable sizes; accuracy comes from real short-term training on the
+synthetic Markov task.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core import CPruneConfig, TrainHooks, Workload
+from repro.data.pipeline import DataPipeline
+from repro.models.model import Model, init_params, prune_sites
+
+BENCH_TOKENS = 65536          # target-workload tokens for the cost model
+BENCH_SEQ = 256
+
+
+def bench_config(arch: str = "qwen3_1_7b", **over):
+    base = dict(n_layers=4, d_model=128, d_ff=1024, n_heads=8, n_kv_heads=2,
+                head_dim=16, vocab_size=256)
+    base.update(over)
+    return get_reduced_config(arch).with_overrides(**base)
+
+
+def bench_workload(tp: int = 1) -> Workload:
+    return Workload(tokens_global=BENCH_TOKENS, dp=1, tp=tp)
+
+
+@dataclasses.dataclass
+class BenchSetup:
+    cfg: object
+    model: Model
+    params: Dict
+    sites: List
+    pipe: DataPipeline
+    hooks: TrainHooks
+    pcfg: CPruneConfig
+    wl: Workload
+
+
+def make_setup(arch: str = "qwen3_1_7b", *, short_steps: int = 4,
+               long_steps: int = 16, lr: float = 0.05, a_g: float = 0.0,
+               alpha: float = 0.9, beta: float = 0.98,
+               max_iterations: int = 8, seed: int = 0, **cfg_over
+               ) -> BenchSetup:
+    from repro.optim.optimizers import sgd_init, sgd_update
+
+    cfg = bench_config(arch, **cfg_over)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    sites = prune_sites(cfg)
+    pipe = DataPipeline(cfg, global_batch=8, seq_len=64, seed=seed)
+    val = pipe.batch(10 ** 6)
+    jloss = jax.jit(model.loss_fn)
+
+    @jax.jit
+    def jstep(p, o, b):
+        # SGD + momentum — the paper trains pruned models with SGD
+        (_, m), g = jax.value_and_grad(
+            lambda pp: model.loss_fn(pp, b), has_aux=True)(p)
+        p2, o2 = sgd_update(p, g, o, lr=lr, momentum=0.9)
+        return p2, o2, m
+
+    counter = {"step": 0}
+
+    def train(p, sites, n):
+        o = sgd_init(p)    # fresh momentum after each pruning surgery
+        for _ in range(n):
+            counter["step"] += 1
+            p, o, _ = jstep(p, o, pipe.batch(counter["step"]))
+        return p
+
+    def eval_acc(p, sites):
+        _, m = jloss(p, val)
+        return float(m["acc"])
+
+    hooks = TrainHooks(
+        short_term_train=lambda p, s: train(p, s, short_steps),
+        eval_acc=eval_acc,
+        long_term_train=lambda p, s: train(p, s, long_steps))
+    pcfg = CPruneConfig(a_g=a_g, alpha=alpha, beta=beta,
+                        max_iterations=max_iterations, seq_len=BENCH_SEQ)
+    return BenchSetup(cfg=cfg, model=model, params=params, sites=sites,
+                      pipe=pipe, hooks=hooks, pcfg=pcfg, wl=bench_workload())
+
+
+def pretrain(setup: BenchSetup, steps: int = 48, lr: float = 0.05) -> None:
+    """Give the benchmark model real (above-chance) accuracy to protect.
+
+    One contiguous momentum-SGD run (the CPrune hooks re-init momentum per
+    call, which is right after surgery but too slow for pretraining)."""
+    from repro.optim.optimizers import sgd_init, sgd_update
+    model = setup.model
+
+    @jax.jit
+    def jstep(p, o, b):
+        (_, m), g = jax.value_and_grad(
+            lambda pp: model.loss_fn(pp, b), has_aux=True)(p)
+        return (*sgd_update(p, g, o, lr=lr, momentum=0.9), m)
+
+    p, o = setup.params, sgd_init(setup.params)
+    for i in range(steps):
+        p, o, _ = jstep(p, o, setup.pipe.batch(i))
+    setup.params = p
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def model_flops_per_token(cfg, sites=None) -> float:
+    """2 * N_active per token (forward)."""
+    n = cfg.active_param_count()
+    return 2.0 * n
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def us(self) -> float:
+        return (time.time() - self.t0) * 1e6
+
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def all_rows() -> List[str]:
+    return list(_ROWS)

@@ -1,0 +1,28 @@
+"""Fig. 6 reproduction: FPS increase rate and short-term accuracy across
+CPrune iterations (real short-term training on the synthetic task)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import CPrune
+
+
+def run():
+    t = common.Timer()
+    setup = common.make_setup(max_iterations=10, alpha=0.85, beta=0.99)
+    common.pretrain(setup, steps=30)
+    cp = CPrune(setup.cfg, setup.sites, setup.wl, setup.hooks, setup.pcfg)
+    res = cp.run(setup.params)
+    curve = [(h.iteration, round(h.fps_rate, 3), round(h.a_s, 3),
+              h.accepted) for h in res.history]
+    accepted = [h for h in res.history if h.accepted]
+    common.emit(
+        "fig6_iterations", t.us(),
+        f"iters={len(res.history)};accepted={len(accepted)};"
+        f"final_fps_rate={res.fps_increase:.3f};"
+        f"final_acc={res.final_acc:.3f};"
+        f"curve={curve}")
+    return res
+
+
+if __name__ == "__main__":
+    run()

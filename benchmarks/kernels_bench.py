@@ -1,0 +1,83 @@
+"""Kernel microbenchmarks: interpret-mode wall time (CPU correctness path)
+plus the analytic v5e latency of the tuned program for the same shape —
+the number the CPrune loop actually optimizes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import tuner
+from repro.core.cost_model import Block
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # matmul: the tuner's target program
+    m, k, n = 512, 512, 1024
+    a = jax.random.normal(ks[0], (m, k))
+    b = jax.random.normal(ks[1], (k, n))
+    prog = tuner.tune_gemm(m, k, n, dtype_bytes=4)
+    us = _time(lambda x, y: matmul(x, y, block=prog.block, interpret=True),
+               a, b)
+    common.emit("kernel_matmul", us,
+                f"shape={m}x{k}x{n};block={prog.block};"
+                f"v5e_cost_us={prog.latency*1e6:.2f}")
+
+    # flash attention
+    B, S, Hq, Hkv, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[2], (B, S, Hq, D))
+    kk = jax.random.normal(ks[3], (B, S, Hkv, D))
+    v = jax.random.normal(ks[4], (B, S, Hkv, D))
+    us = _time(lambda *x: flash_attention(*x, causal=True, bq=64, bk=64,
+                                          interpret=True), q, kk, v)
+    from repro.core.cost_model import attention_cost
+    common.emit("kernel_flash_attention", us,
+                f"BSHD={B}x{S}x{Hq}x{D};"
+                f"v5e_cost_us={attention_cost(B,S,S,Hq,D)*1e6:.2f}")
+
+    # rglru scan
+    aa = jax.nn.sigmoid(jax.random.normal(ks[5], (2, 256, 128)))
+    xx = jax.random.normal(ks[6], (2, 256, 128))
+    us = _time(lambda *x: rglru_scan(*x, bs=64, bw=128, interpret=True),
+               aa, xx)
+    from repro.core.cost_model import scan_cost
+    common.emit("kernel_rglru_scan", us,
+                f"BSW=2x256x128;v5e_cost_us={scan_cost(2,256,128,0)*1e6:.2f}")
+
+    # rwkv6 scan
+    r = jax.random.normal(ks[7], (1, 128, 2, 32))
+    w = jax.nn.sigmoid(jax.random.normal(ks[0], (1, 128, 2, 32)))
+    u = jax.random.normal(ks[1], (2, 32)) * 0.1
+    us = _time(lambda: rwkv6_scan(r, r, r, w, u, bs=32, interpret=True)[0])
+    common.emit("kernel_rwkv6_scan", us, "BSHD=1x128x2x32")
+
+    # moe grouped GEMM
+    x = jax.random.normal(ks[2], (4, 128, 128))
+    wgt = jax.random.normal(ks[3], (4, 128, 256))
+    us = _time(lambda: moe_gmm(x, wgt, block=Block(64, 128, 128),
+                               interpret=True))
+    common.emit("kernel_moe_gmm", us, "ECKN=4x128x128x256")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Render the §Roofline-table markdown from the final dry-run artifacts
+and splice it into EXPERIMENTS.md (idempotent: replaces the table block).
+
+    PYTHONPATH=src python -m benchmarks.render_roofline
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from benchmarks.roofline import analyze_cell
+from repro.configs import ARCH_IDS, SHAPES
+
+MARK_BEGIN = "<!-- ROOFLINE-TABLE:BEGIN -->"
+MARK_END = "<!-- ROOFLINE-TABLE:END -->"
+
+
+def render(mesh: str = "single") -> str:
+    lines = [
+        MARK_BEGIN,
+        "",
+        f"Per-device roofline terms, {mesh}-pod mesh "
+        "(final artifacts; seconds per step):",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " useful | frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = analyze_cell(arch, shape, mesh)
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | skipped |"
+                    f" {r['reason'][:36]} | — |")
+                continue
+            if r.get("status") != "ok":
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']:.3g} |"
+                f" {r['memory_s']:.3g} | {r['collective_s']:.3g} |"
+                f" {r['dominant']} | {r['useful_ratio']:.2f} |"
+                f" {r['roofline_fraction']:.4f} |")
+    lines += ["", MARK_END]
+    return "\n".join(lines)
+
+
+def main():
+    exp = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+    text = exp.read_text()
+    table = render("single")
+    if MARK_BEGIN in text:
+        text = re.sub(
+            re.escape(MARK_BEGIN) + r".*?" + re.escape(MARK_END),
+            table, text, flags=re.S)
+    else:
+        text += "\n\n" + table + "\n"
+    exp.write_text(text)
+    print(f"wrote roofline table ({table.count(chr(10))} lines) into "
+          f"{exp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) cell.
+
+    compute term    = HLO_FLOPs / (chip peak 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chip HBM 819 GB/s)
+    collective term = collective wire bytes / (chip ICI ~50 GB/s/link)
+
+Inputs: the dry-run artifacts (benchmarks/dryrun_artifacts/*.json), whose
+``hlo_stats`` are loop-corrected per-device numbers parsed from the
+post-SPMD HLO (launch/hlo_stats.py) — raw ``cost_analysis`` is retained in
+the artifacts but undercounts scan bodies (trip counts not applied).
+
+Also reported per cell: MODEL_FLOPS = 6·N·D (train) or 2·N_active·D
+(decode/prefill), the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, the
+dominant term, and a one-line "what would move it" note.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks import common
+from repro.configs import ARCH_IDS, SHAPES, get_config
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ART = Path(__file__).resolve().parent / "dryrun_artifacts"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int
+                           ) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / n_devices
+
+
+def _bottleneck_note(dom: str, arch: str, shape: str) -> str:
+    return {
+        "compute": "raise MXU occupancy: larger fused GEMM tiles / fewer "
+                   "recompute passes (remat policy)",
+        "memory": "cut HBM traffic: bf16 intermediates, fuse converts, "
+                  "larger attention blocks, save fewer activations",
+        "collective": "reshard: move all-gathers off the critical axis / "
+                      "overlap with compute / hierarchical reduction",
+    }[dom]
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single") -> Optional[dict]:
+    p = ART / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def analyze_cell(arch: str, shape: str, mesh: str = "single"
+                 ) -> Optional[Dict]:
+    rec = load_cell(arch, shape, mesh)
+    if rec is None:
+        return None
+    if rec["status"] == "skipped":
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": rec["reason"]}
+    if rec["status"] != "ok" or "hlo_stats" not in rec:
+        return {"arch": arch, "shape": shape, "status": rec["status"]}
+    st = rec["hlo_stats"]
+    n_dev = rec["n_devices"]
+    t_c = st["flops"] / PEAK
+    t_m = st["bytes"] / HBM
+    t_x = st["collective_bytes"] / ICI
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(arch, shape, n_dev)
+    step_s = max(t_c, t_m, t_x)
+    mfu = mf / PEAK / max(step_s, 1e-12)      # roofline-fraction proxy
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "status": "ok",
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / max(st["flops"], 1.0),
+        "roofline_fraction": mfu,
+        "temp_bytes": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes", 0),
+        "note": _bottleneck_note(dom, arch, shape),
+    }
+
+
+def run(mesh: str = "single"):
+    t = common.Timer()
+    rows: List[Dict] = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = analyze_cell(arch, shape, mesh)
+            if r is not None:
+                rows.append(r)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll = max(ok, key=lambda r: r.get("collective_s", 0))
+        common.emit(
+            "roofline_summary", t.us(),
+            f"cells_ok={len(ok)};"
+            f"worst_cell={worst['arch']}/{worst['shape']}"
+            f"({worst['roofline_fraction']:.3f});"
+            f"most_collective={coll['arch']}/{coll['shape']}"
+            f"({coll['collective_s']*1e3:.2f}ms)")
+    for r in ok:
+        common.emit(
+            f"roofline[{r['arch']}/{r['shape']}]",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"c={r['compute_s']*1e3:.2f}ms;m={r['memory_s']*1e3:.2f}ms;"
+            f"x={r['collective_s']*1e3:.2f}ms;dom={r['dominant']};"
+            f"useful={r['useful_ratio']:.3f};"
+            f"frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

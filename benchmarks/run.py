@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig1_correlation   paper Fig. 1  (pruned-vs-tuned non-correlation)
+  fig6_iterations    paper Fig. 6  (iterative FPS rate + accuracy)
+  table1_methods     paper Table 1 (CPrune vs L1/FPGM/NetAdapt)
+  table2_ablations   paper Table 2 + Fig. 9 + Fig. 10 (tuning,
+                     associated-subgraph ablations)
+  fig11_search_cost  paper Fig. 11 (selective vs exhaustive search)
+  kernel_*           Pallas kernel microbenches (interpret + v5e cost)
+  roofline[*]        deliverable (g): per-cell roofline terms from the
+                     dry-run artifacts (run launch/dryrun.py first)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig1_correlation, fig6_iterations,
+                            fig8_cross_target, fig11_search_cost,
+                            kernels_bench, roofline, table1_methods,
+                            table2_ablations)
+    from benchmarks import common
+
+    print("name,us_per_call,derived")
+    mods = [
+        ("fig1_correlation", fig1_correlation.run),
+        ("fig6_iterations", fig6_iterations.run),
+        ("table1_methods", table1_methods.run),
+        ("table2_ablations", table2_ablations.run),
+        ("fig8_cross_target", fig8_cross_target.run),
+        ("fig11_search_cost", fig11_search_cost.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+    failures = []
+    for name, fn in mods:
+        try:
+            fn()
+        except Exception as e:
+            failures.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == '__main__':
+    main()

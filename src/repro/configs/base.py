@@ -1,0 +1,246 @@
+"""Model configuration system.
+
+One frozen dataclass covers every assigned architecture family (dense, MoE,
+hybrid recurrent, SSM/RWKV, audio encoder, VLM backbone). Each architecture
+ships as ``src/repro/configs/<id>.py`` exposing ``CONFIG`` (the exact
+published shape) and ``reduced()`` (a tiny same-family variant for CPU smoke
+tests and the CPrune example loops).
+
+Configs are pure data — no jax imports here, so the launcher can read them
+before device initialization (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+# Block kinds understood by models/blocks.py
+ATTN = "attn"            # global (causal or bidirectional) attention block
+LOCAL_ATTN = "local_attn"  # sliding-window attention block
+RGLRU = "rglru"          # Griffin RG-LRU recurrent block
+RWKV = "rwkv"            # RWKV-6 time-mix + channel-mix block
+
+VALID_BLOCKS = (ATTN, LOCAL_ATTN, RGLRU, RWKV)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (exact published values in configs/<id>.py)."""
+
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                   # query heads (0 for attention-free archs)
+    n_kv_heads: int                # KV heads (GQA); == n_heads means MHA
+    d_ff: int                      # dense-FFN hidden width
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0              # expert hidden width (0 -> d_ff)
+    moe_cf: float = 1.25           # expert capacity factor (per-row dispatch)
+
+    # --- attention details ---
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0        # 0 -> no sliding window on LOCAL_ATTN/ATTN
+    causal: bool = True            # False for encoder-only (hubert)
+    logits_softcap: float = 0.0
+
+    # --- block pattern (repeated; remainder layers reuse the prefix) ---
+    block_pattern: Tuple[str, ...] = (ATTN,)
+
+    # --- FFN ---
+    activation: str = "swiglu"     # swiglu | geglu | gelu | relu2 | silu
+
+    # --- positional encoding ---
+    rope: str = "rope"             # rope | mrope | none
+    rope_theta: float = 10000.0
+
+    # --- embeddings / norm ---
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+
+    # --- RWKV specifics ---
+    rwkv_head_dim: int = 64
+
+    # --- RG-LRU specifics ---
+    rglru_width: int = 0           # recurrence width (0 -> d_model)
+    conv1d_width: int = 4          # temporal conv in recurrent block
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"         # none | audio_frames | vision_patches
+    frontend_seq: int = 0          # patches/frames per sample for stub inputs
+
+    # --- numerics / compile strategy ---
+    dtype: str = "bfloat16"
+    scan_layers: bool = True       # scan over layer stacks (keeps HLO small)
+    remat: str = "dots"            # none | dots | full
+
+    # --- provenance ---
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.moe_d_ff == 0 and self.n_experts > 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.rglru_width == 0:
+            object.__setattr__(self, "rglru_width", self.d_model)
+        for b in self.block_pattern:
+            if b not in VALID_BLOCKS:
+                raise ValueError(f"unknown block kind {b!r}")
+
+    # ------------------------------------------------------------------
+    # Derived structure
+    # ------------------------------------------------------------------
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, repeating ``block_pattern`` with remainder."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    def stacks(self) -> Dict[str, int]:
+        """Block kind -> number of layers of that kind."""
+        out: Dict[str, int] = {}
+        for k in self.layer_kinds():
+            out[k] = out.get(k, 0) + 1
+        return out
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k == RWKV for k in self.block_pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if the arch supports O(1)-state or windowed decode at 500k ctx."""
+        kinds = set(self.block_pattern)
+        if kinds <= {RWKV, RGLRU, LOCAL_ATTN}:
+            return True
+        # global attention with a sliding window is still bounded-KV
+        return self.sliding_window > 0
+
+    @property
+    def n_q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    # ------------------------------------------------------------------
+    # Parameter counting (used by roofline: MODEL_FLOPS = 6·N·D)
+    # ------------------------------------------------------------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, dff, hd = self.d_model, self.d_ff, self.head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        total = 0
+        glu = self.activation in ("swiglu", "geglu")
+        for kind in self.layer_kinds():
+            if kind in (ATTN, LOCAL_ATTN):
+                attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+                if self.qkv_bias:
+                    attn += (nq + 2 * nkv) * hd
+                total += attn
+            elif kind == RGLRU:
+                w = self.rglru_width
+                # linear in/out + gates + conv1d + recurrence params
+                total += 2 * d * w + 2 * w * w // 1 + self.conv1d_width * w + 2 * w
+            elif kind == RWKV:
+                # time-mix: r,k,v,g,o projections + decay LoRAs; channel-mix
+                total += 5 * d * d + 6 * 32 * d * 2
+            # FFN (dense or MoE)
+            if self.n_experts > 0 and kind in (ATTN, LOCAL_ATTN, RGLRU):
+                e_ff = self.moe_d_ff
+                per_e = d * e_ff * (3 if glu else 2)
+                total += self.n_experts * per_e + d * self.n_experts  # + router
+            elif kind == RWKV:
+                total += 2 * d * self.d_ff  # channel-mix (relu^2 k, v)
+            else:
+                total += d * dff * (3 if glu else 2)
+        total += self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE uses top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        dense = self.param_count()
+        glu = self.activation in ("swiglu", "geglu")
+        per_e = self.d_model * self.moe_d_ff * (3 if glu else 2)
+        n_moe_layers = sum(1 for k in self.layer_kinds() if k != RWKV)
+        unused = (self.n_experts - self.top_k) * per_e * n_moe_layers
+        return dense - unused
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (assigned shapes from the public pool)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+ARCH_IDS = (
+    "recurrentgemma_9b",
+    "mixtral_8x22b",
+    "granite_moe_1b_a400m",
+    "nemotron_4_15b",
+    "qwen1_5_110b",
+    "qwen3_1_7b",
+    "internlm2_20b",
+    "rwkv6_1_6b",
+    "hubert_xlarge",
+    "qwen2_vl_2b",
+)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch x shape) cell runs, with the reason when skipped."""
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k decode is the quadratic regime"
+    return True, ""
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    """Load the full published config for an assigned architecture."""
+    arch_id = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch_id: str) -> ModelConfig:
+    """Load the reduced same-family smoke config for an architecture.
+
+    Reduced configs run in float32 (CPU test numerics) — the full configs
+    keep their production dtype (bfloat16).
+    """
+    arch_id = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.reduced().with_overrides(dtype="float32")
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,44 @@
+"""Granite-3.0-1B-A400M — fine-grained MoE, 32 experts top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf] 24L d_model=1024 16H
+(GQA kv=8) d_ff=512 vocab=49155, MoE 32 experts top-8.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite_moe_1b_a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=32,
+    top_k=8,
+    moe_d_ff=512,
+    activation="swiglu",
+    rope="rope",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="granite_moe_1b_a400m_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64,
+        moe_d_ff=64,
+        vocab_size=256,
+        n_experts=8,
+        top_k=2,
+        moe_cf=8.0,     # dropless at smoke scale (decode==forward tests)
+    )

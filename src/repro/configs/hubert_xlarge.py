@@ -1,0 +1,38 @@
+"""HuBERT X-Large — encoder-only audio transformer (w2v2-style backbone).
+
+[arXiv:2106.07447; unverified] 48L d_model=1280 16H (kv=16, i.e. MHA)
+d_ff=5120 vocab=504 (cluster codebook). The conv waveform frontend is a
+STUB: input_specs() provides precomputed frame embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert_xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,              # encoder-only, bidirectional
+    activation="gelu",
+    rope="none",               # conv-positional frontend is stubbed
+    norm="layernorm",
+    frontend="audio_frames",
+    source="arXiv:2106.07447",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="hubert_xlarge_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=32,
+    )

@@ -1,0 +1,37 @@
+"""InternLM2-20B — dense GQA transformer.
+
+[arXiv:2403.17297; hf] 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92544.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2_20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92544,
+    activation="swiglu",
+    rope="rope",
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    remat="full",
+    source="arXiv:2403.17297",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="internlm2_20b_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )

@@ -1,0 +1,46 @@
+"""Mixtral-8x22B — sparse MoE transformer, 8 experts top-2, sliding window.
+
+[arXiv:2401.04088; hf] 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, SWA.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral_8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=16384,
+    sliding_window=4096,
+    activation="swiglu",
+    rope="rope",
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    remat="full",
+    source="arXiv:2401.04088",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="mixtral_8x22b_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        moe_d_ff=128,
+        vocab_size=256,
+        n_experts=4,
+        top_k=2,
+        sliding_window=32,
+        moe_cf=8.0,     # dropless at smoke scale (decode==forward tests)
+    )

@@ -1,0 +1,37 @@
+"""Nemotron-4-15B — dense transformer with squared-ReLU FFN.
+
+[arXiv:2402.16819; unverified] 32L d_model=6144 48H (GQA kv=8)
+d_ff=24576 vocab=256000, squared-ReLU activation (no GLU).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron_4_15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256000,
+    activation="relu2",
+    rope="rope",
+    rope_theta=10000.0,
+    norm="layernorm",
+    remat="full",
+    source="arXiv:2402.16819",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="nemotron_4_15b_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=256,
+        vocab_size=256,
+    )

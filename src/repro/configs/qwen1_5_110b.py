@@ -1,0 +1,38 @@
+"""Qwen1.5-110B — dense transformer with QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B family; hf] 80L d_model=8192 64H (GQA kv=8)
+d_ff=49152 vocab=152064, QKV bias.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1_5_110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=49152,
+    vocab_size=152064,
+    qkv_bias=True,
+    activation="swiglu",
+    rope="rope",
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    remat="full",
+    source="hf:Qwen/Qwen1.5-110B",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="qwen1_5_110b_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=256,
+        vocab_size=256,
+    )

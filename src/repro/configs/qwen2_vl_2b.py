@@ -1,0 +1,43 @@
+"""Qwen2-VL-2B — VLM language backbone with M-RoPE.
+
+[arXiv:2409.12191; hf] 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936, M-RoPE, dynamic resolution. The vision frontend (ViT) is a
+STUB: input_specs() provides precomputed patch embeddings merged into the
+token stream, plus 3-channel (t,h,w) M-RoPE position ids.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2_vl_2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    activation="swiglu",
+    rope="mrope",
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    frontend="vision_patches",
+    frontend_seq=256,
+    source="arXiv:2409.12191",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="qwen2_vl_2b_reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        frontend_seq=8,
+    )

@@ -1,0 +1,47 @@
+"""RecurrentGemma-9B — Griffin-style hybrid: RG-LRU + local attention, 1:2.
+
+[arXiv:2402.19427; unverified] 38L d_model=4096 16H (GQA kv=1, i.e. MQA)
+d_ff=12288 vocab=256000. Pattern: two RG-LRU recurrent blocks then one
+local-attention block (window 2048), repeating.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma_9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    sliding_window=2048,
+    rglru_width=4096,
+    conv1d_width=4,
+    activation="geglu",
+    rope="rope",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    norm="rmsnorm",
+    logits_softcap=30.0,
+    remat="full",
+    source="arXiv:2402.19427",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="recurrentgemma_9b_reduced",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        sliding_window=32,
+        rglru_width=64,
+        logits_softcap=30.0,
+    )

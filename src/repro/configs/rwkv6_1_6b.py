@@ -1,0 +1,35 @@
+"""RWKV-6 "Finch" 1.6B — attention-free, data-dependent decay.
+
+[arXiv:2404.05892; unverified] 24L d_model=2048 (attn-free) d_ff=7168
+vocab=65536. Head size 64 -> 32 WKV heads.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6_1_6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=7168,
+    vocab_size=65536,
+    block_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    activation="relu2",   # RWKV channel-mix uses squared ReLU
+    rope="none",
+    norm="layernorm",
+    source="arXiv:2404.05892",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="rwkv6_1_6b_reduced",
+        n_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=256,
+        rwkv_head_dim=16,
+    )

@@ -1,0 +1,27 @@
+"""CPrune core: compiler-informed model pruning (the paper's contribution).
+
+cost_model  — analytic TPU v5e latency model (the "target device")
+program     — tuned Pallas block configs + iterator factorizations
+tuner       — per-task program search (the AutoTVM/Ansor role)
+tasks       — subgraph/task decomposition + relationship table C
+prune_step  — the LCM structure-preserving prune quantum (§3.5)
+ranking     — L1 / FPGM filter selection
+applier     — functional param-pytree surgery
+latency     — whole-model latency/FPS estimates
+cprune      — Algorithm 1 (the iterative loop)
+baselines   — uniform-L1 / FPGM / NetAdapt-style comparisons
+"""
+from repro.core.cost_model import Block, matmul_cost
+from repro.core.cprune import (CPrune, CPruneConfig, CPruneResult,
+                               TrainHooks)
+from repro.core.program import Iterator, Program
+from repro.core.prune_step import lcm_prune_step, program_prune_step
+from repro.core.tasks import Task, TaskTable, Workload
+from repro.core.tuner import TunerStats, build_tuned_table, tune_gemm
+
+__all__ = [
+    "Block", "matmul_cost", "CPrune", "CPruneConfig", "CPruneResult",
+    "TrainHooks", "Iterator", "Program", "lcm_prune_step",
+    "program_prune_step", "Task", "TaskTable", "Workload", "TunerStats",
+    "build_tuned_table", "tune_gemm",
+]

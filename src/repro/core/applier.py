@@ -1,0 +1,123 @@
+"""Functional pruning: slice param pytrees along a site's prunable axes.
+
+Models read dimensions from param shapes at trace time, so pruning is pure
+array surgery — no config rewrites, no module reconstruction. Stacked
+(scanned) sites support *per-layer* keep indices: each subgraph prunes its
+own lowest-ranked filters (paper §4.5) while the stack keeps one uniform
+shape.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import PruneSite
+
+
+def _get_parent(tree, path: str):
+    parts = path.split("/")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    return node, parts[-1]
+
+
+def _shallow_copy_along(tree, path: str):
+    """Copy the dict spine along path so the original pytree is unchanged."""
+    parts = path.split("/")
+    new_tree = dict(tree)
+    node = new_tree
+    for part in parts[:-1]:
+        node[part] = dict(node[part])
+        node = node[part]
+    return new_tree, node, parts[-1]
+
+
+def _take(arr: jax.Array, idx: np.ndarray, axis: int) -> jax.Array:
+    return jnp.take(arr, jnp.asarray(idx), axis=axis)
+
+
+def _take_per_layer(arr: jax.Array, idx: np.ndarray, axis: int) -> jax.Array:
+    """arr: (L, ...); idx: (L, n_keep); gather along `axis` per layer."""
+    idx = jnp.asarray(idx)
+    shape = [arr.shape[0]] + [1] * (arr.ndim - 1)
+    shape[axis] = idx.shape[1]
+    idx_b = idx.reshape(shape)
+    idx_b = jnp.broadcast_to(
+        idx_b, tuple(arr.shape[i] if i != axis else idx.shape[1]
+                     for i in range(arr.ndim)))
+    return jnp.take_along_axis(arr, idx_b, axis=axis)
+
+
+def apply_keep(params: Dict, site: PruneSite, keep_idx: np.ndarray) -> Dict:
+    """Return a new params pytree with the site pruned to ``keep_idx`` units.
+
+    keep_idx: (n_keep,) shared or (L, n_keep) per-layer for stacked sites —
+    indices in *unit* space (heads/channels/experts).
+    """
+    out = params
+    per_layer = site.stacked and keep_idx.ndim == 2
+    for rel_path, axis in site.param_axes:
+        path = site.block_path + "/" + rel_path
+        out, parent, leaf = _shallow_copy_along(out, path)
+        arr = parent[leaf]
+        ax = axis + (1 if site.stacked else 0)
+        idx = keep_idx
+        if site.unit_cols > 1 and arr.shape[ax] == site.dim * site.unit_cols:
+            # expand unit indices to column indices
+            cols = (idx[..., None] * site.unit_cols
+                    + np.arange(site.unit_cols)[None])
+            idx = cols.reshape(idx.shape[:-1] + (-1,))
+        if per_layer:
+            parent[leaf] = _take_per_layer(arr, idx, ax)
+        else:
+            parent[leaf] = _take(arr, idx, ax)
+    return out
+
+
+def prune_site_by_rank(params: Dict, site: PruneSite, n_prune_units: int,
+                       scores: np.ndarray, *, single_subgraph: bool = False
+                       ) -> Tuple[Dict, PruneSite]:
+    """Prune ``n_prune_units`` lowest-scored units from the site.
+
+    ``single_subgraph=True`` reproduces the NetAdapt-style ablation: only
+    the first layer of a stacked site is pruned — but since scanned stacks
+    must stay uniform, we emulate it by *masking* (zeroing) instead of
+    slicing for all layers but the first. Used only by the Fig-9 ablation.
+    """
+    group = site.granularity if site.kind == "heads" else 1
+    if single_subgraph and site.stacked and scores.ndim == 2:
+        # zero the pruned channels of layer 0 only, keep shapes
+        from repro.core.ranking import keep_indices
+        drop = np.setdiff1d(np.arange(site.dim),
+                            keep_indices(scores[0], n_prune_units, group=group))
+        out = params
+        for rel_path, axis in site.param_axes:
+            path = site.block_path + "/" + rel_path
+            out, parent, leaf = _shallow_copy_along(out, path)
+            arr = parent[leaf]
+            ax = axis + 1
+            cols = drop
+            if site.unit_cols > 1 and arr.shape[ax] == site.dim * site.unit_cols:
+                cols = (drop[:, None] * site.unit_cols
+                        + np.arange(site.unit_cols)[None]).reshape(-1)
+            mask = np.ones((arr.shape[ax],), np.float32)
+            mask[cols] = 0.0
+            shape = [1] * arr.ndim
+            shape[ax] = arr.shape[ax]
+            parent[leaf] = arr * jnp.asarray(mask, arr.dtype).reshape(shape)
+        return out, site
+    from repro.core.ranking import keep_indices
+    keep = keep_indices(scores, n_prune_units, group=group)
+    new_params = apply_keep(params, site, keep)
+    return new_params, site.with_dim(site.dim - n_prune_units)
+
+
+def refresh_sites(sites: Sequence[PruneSite], pruned: Dict[str, PruneSite]
+                  ) -> List[PruneSite]:
+    """Replace sites by their pruned versions (by site_id)."""
+    return [pruned.get(s.site_id, s) for s in sites]

@@ -1,0 +1,143 @@
+"""Baseline pruning schemes for the paper's Table 1 / Fig. 11 comparisons.
+
+* ``uniform_prune``   — L1-magnitude structured pruning, uniform ratio per
+                        site (Li et al. 2016; "PQF/FPGM+TVM" rows use the
+                        same search with different ranking).
+* ``netadapt_prune``  — hardware-aware exhaustive search: per iteration,
+                        build one candidate per site (pruned just enough to
+                        hit a latency reduction quantum), short-term train
+                        every candidate, keep the most accurate. This is
+                        the paper's main comparison point; it measures every
+                        candidate (expensive) and knows nothing about the
+                        compiler's program structure.
+
+All baselines share the applier/cost-model so the comparison isolates the
+*search policy*, exactly as the paper's Table 1 does (every row runs
+through the same TVM auto-tuner).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import applier, latency, ranking, tuner
+from repro.core.cprune import CPruneConfig, TrainHooks
+from repro.core.tasks import TaskTable, Workload
+from repro.models.model import PruneSite
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    params: Dict
+    sites: List[PruneSite]
+    latency: latency.LatencyReport
+    acc: float
+    candidates_evaluated: int   # "measurements" on device
+    name: str
+
+
+def _tuned_latency(cfg, sites, wl, pcfg, stats=None):
+    table = tuner.build_tuned_table(sites, wl, use_tuning=pcfg.use_tuning,
+                                    stats=stats)
+    return latency.model_latency(cfg, sites, table, seq_len=pcfg.seq_len,
+                                 use_tuning=pcfg.use_tuning)
+
+
+def uniform_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
+                  wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig, *,
+                  ratio: float, method: str = "l1",
+                  name: str = "l1_uniform") -> BaselineResult:
+    """Prune every site by ``ratio`` with the given ranking, then tune."""
+    sites = [s for s in sites if s.kind in pcfg.prunable_kinds
+             and s.kind != "experts"]
+    pruned: Dict[str, PruneSite] = {}
+    new_params = params
+    for site in sites:
+        group = site.granularity if site.kind == "heads" else 1
+        n_units = int(round(site.dim * ratio / max(group, 1))) * max(group, 1)
+        n_units = min(n_units, site.dim - pcfg.min_dim_units)
+        if n_units <= 0:
+            continue
+        scores = ranking.rank_units(new_params, site, method)
+        new_params, new_site = applier.prune_site_by_rank(
+            new_params, site, n_units, scores)
+        pruned[site.site_id] = new_site
+    new_sites = applier.refresh_sites(sites, pruned)
+    if hooks.long_term_train is not None:
+        new_params = hooks.long_term_train(new_params, new_sites)
+    else:
+        new_params = hooks.short_term_train(new_params, new_sites)
+    acc = hooks.eval_acc(new_params, new_sites)
+    rep = _tuned_latency(cfg, new_sites, wl, pcfg)
+    return BaselineResult(new_params, new_sites, rep, acc, len(sites), name)
+
+
+def netadapt_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
+                   wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig, *,
+                   latency_decay: float = 0.97, max_iterations: int = 30
+                   ) -> BaselineResult:
+    """NetAdapt-style exhaustive hardware-aware pruning (paper §4.7).
+
+    Per iteration: one candidate per site, each pruned by the smallest
+    multiple of its semantic granularity that beats the latency budget;
+    every candidate is short-term trained and measured (exhaustive), the
+    best-accuracy candidate wins.
+    """
+    sites = [s for s in sites if s.kind in pcfg.prunable_kinds
+             and s.kind != "experts"]
+    stats = tuner.TunerStats()
+    rep = _tuned_latency(cfg, sites, wl, pcfg, stats)
+    rep0 = rep
+    budget = rep.total_s * latency_decay
+    evaluated = 0
+
+    for it in range(max_iterations):
+        acc_p = hooks.eval_acc(params, sites)
+        if acc_p <= pcfg.a_g:
+            break
+        candidates = []
+        for si, site in enumerate(sites):
+            group = site.granularity if site.kind == "heads" else 1
+            # grow the prune count until the latency budget is met
+            # (NetAdapt has no program structure to consult, so it walks in
+            # semantic-granularity steps — often too fine, cf. §3.5)
+            found = None
+            step = max(group, max(1, site.dim // 16))
+            step = (step // max(group, 1)) * max(group, 1) or group
+            n_units = step
+            while site.dim - n_units >= pcfg.min_dim_units:
+                scores = ranking.rank_units(params, site, pcfg.rank_method)
+                cand_params, cand_site = applier.prune_site_by_rank(
+                    params, site, n_units, scores)
+                cand_sites = applier.refresh_sites(
+                    sites, {site.site_id: cand_site})
+                cand_rep = _tuned_latency(cfg, cand_sites, wl, pcfg, stats)
+                evaluated += 1
+                if cand_rep.total_s <= budget:
+                    found = (cand_params, cand_sites, cand_rep)
+                    break
+                n_units += step
+            if found is None:
+                continue
+            cand_params, cand_sites, cand_rep = found
+            cand_params = hooks.short_term_train(cand_params, cand_sites)
+            a = hooks.eval_acc(cand_params, cand_sites)
+            evaluated += 1
+            candidates.append((a, cand_params, cand_sites, cand_rep))
+        if not candidates:
+            break
+        a, params, sites, rep = max(candidates, key=lambda c: c[0])
+        budget = rep.total_s * latency_decay
+        if a < pcfg.a_g:
+            break
+
+    if hooks.long_term_train is not None:
+        params = hooks.long_term_train(params, sites)
+    acc = hooks.eval_acc(params, sites)
+    return BaselineResult(params, sites, rep, acc,
+                          evaluated + stats.candidates_evaluated,
+                          "netadapt")

@@ -1,0 +1,131 @@
+"""Analytic TPU v5e cost model — the "target device" of this reproduction.
+
+The paper measures tuned programs on a phone; this container has no TPU, so
+the cost model plays that role. It is deliberately a *step function* of the
+tensor dims (ceil-division to MXU/VREG tiles and to the program's block
+shape), which reproduces the paper's observation that conv/GEMM latency
+grows in steps — the fact that makes structure-aware prune quanta matter.
+
+Hardware constants (given for this assignment):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+  MXU tile          : 128 x 128 (lane dim 128, sublane 8)
+  VMEM budget       : 64 MiB usable for kernel working sets (configurable)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 4      # MXU f32 is ~4x slower
+HBM_BW = 819e9
+ICI_BW = 50e9
+VMEM_BYTES = 64 * 1024 * 1024
+LANE = 128
+SUBLANE = 8
+MXU = 128
+# fixed per-grid-step overhead (dispatch, semaphores) and per-call overhead
+BLOCK_OVERHEAD_S = 0.4e-6
+CALL_OVERHEAD_S = 2e-6
+VPU_THROUGHPUT = 4e12                      # elementwise ops/s (epilogues)
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _ceil(a, b) * b
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """A Pallas matmul block config — the tuner's search unit."""
+
+    bm: int
+    bk: int
+    bn: int
+
+    def vmem_bytes(self, dtype_bytes: int) -> int:
+        # A-tile + B-tile + fp32 accumulator, double-buffered inputs
+        a = self.bm * self.bk * dtype_bytes * 2
+        b = self.bk * self.bn * dtype_bytes * 2
+        c = self.bm * self.bn * 4
+        return a + b + c
+
+
+def matmul_cost(m: int, k: int, n: int, block: Block, *,
+                dtype_bytes: int = 2, batch: int = 1,
+                epilogue_ops: int = 0) -> float:
+    """Latency (s) of a (batch x) [m,k]x[k,n] GEMM with the given block config.
+
+    Step-function semantics: dims are padded to the block grid, blocks are
+    padded to hardware tiles. Compute and HBM-traffic terms overlap (take
+    max), block dispatch overhead does not.
+    """
+    if m <= 0 or k <= 0 or n <= 0:
+        return 0.0
+    gm, gk, gn = _ceil(m, block.bm), _ceil(k, block.bk), _ceil(n, block.bn)
+    # hardware padding inside a block
+    bm_h = _round_up(block.bm, SUBLANE)
+    bk_h = _round_up(block.bk, LANE)
+    bn_h = _round_up(block.bn, LANE)
+    n_blocks = gm * gk * gn * batch
+    flops_per_block = 2 * bm_h * bk_h * bn_h
+    peak = PEAK_FLOPS_BF16 if dtype_bytes <= 2 else PEAK_FLOPS_F32
+    t_compute = n_blocks * flops_per_block / peak
+    # HBM traffic: A panel re-read per N-block, B per M-block, C once
+    bytes_a = gn * (gm * bm_h) * (gk * bk_h) * dtype_bytes
+    bytes_b = gm * (gk * bk_h) * (gn * bn_h) * dtype_bytes
+    bytes_c = (gm * bm_h) * (gn * bn_h) * dtype_bytes
+    t_mem = batch * (bytes_a + bytes_b + bytes_c) / HBM_BW
+    # epilogue (activation / bias / norm fused on output tile)
+    t_epi = batch * epilogue_ops * (gm * bm_h) * (gn * bn_h) / VPU_THROUGHPUT
+    return max(t_compute, t_mem) + t_epi + n_blocks * BLOCK_OVERHEAD_S \
+        + CALL_OVERHEAD_S
+
+
+def matmul_terms(m: int, k: int, n: int, block: Block, *,
+                 dtype_bytes: int = 2, batch: int = 1
+                 ) -> Tuple[float, float]:
+    """(compute_s, memory_s) roofline terms for the blocked GEMM."""
+    gm, gk, gn = _ceil(m, block.bm), _ceil(k, block.bk), _ceil(n, block.bn)
+    bm_h = _round_up(block.bm, SUBLANE)
+    bk_h = _round_up(block.bk, LANE)
+    bn_h = _round_up(block.bn, LANE)
+    peak = PEAK_FLOPS_BF16 if dtype_bytes <= 2 else PEAK_FLOPS_F32
+    t_c = batch * gm * gk * gn * 2 * bm_h * bk_h * bn_h / peak
+    bytes_a = gn * (gm * bm_h) * (gk * bk_h) * dtype_bytes
+    bytes_b = gm * (gk * bk_h) * (gn * bn_h) * dtype_bytes
+    bytes_c = (gm * bm_h) * (gn * bn_h) * dtype_bytes
+    t_m = batch * (bytes_a + bytes_b + bytes_c) / HBM_BW
+    return t_c, t_m
+
+
+def default_block(m: int, k: int, n: int) -> Block:
+    """The *untuned* program: a deliberately generic config (the paper's
+    "without tuning" ablation uses this for every task)."""
+    return Block(bm=min(_round_up(m, 8), 128), bk=min(_round_up(k, 128), 128),
+                 bn=min(_round_up(n, 128), 128))
+
+
+def attention_cost(batch: int, sq: int, sk: int, n_heads: int, head_dim: int,
+                   *, window: int = 0, dtype_bytes: int = 2) -> float:
+    """Latency of the attention score+value contraction (non-prunable op)."""
+    if n_heads == 0:
+        return 0.0
+    kv_span = min(sk, window) if window > 0 else sk
+    flops = 2 * 2 * batch * n_heads * sq * kv_span * head_dim
+    t_c = flops / PEAK_FLOPS_BF16
+    bytes_qkv = batch * (sq + 2 * kv_span) * n_heads * head_dim * dtype_bytes
+    t_m = bytes_qkv / HBM_BW
+    return max(t_c, t_m) + CALL_OVERHEAD_S
+
+
+def scan_cost(batch: int, seq: int, width: int, state_bytes: int) -> float:
+    """Latency of a linear-recurrence scan (RG-LRU / WKV): bandwidth bound."""
+    bytes_total = batch * seq * width * 4 + state_bytes
+    return bytes_total * 3 / HBM_BW + CALL_OVERHEAD_S

@@ -1,0 +1,250 @@
+"""CPrune Algorithm 1 — the paper's iterative compiler-informed prune loop.
+
+Symbols follow the paper:
+  a_g    target (minimum) accuracy the user requires
+  a_p    short-term accuracy of the previous best model
+  a_s    short-term accuracy of the pruned candidate
+  l_t    target execution time for the next iteration
+  l_m    measured execution time of the candidate
+  alpha  min allowable accuracy ratio after one prune step
+  beta   ratio defining the next latency target
+  R      prioritized task list; C  task/subgraph/program table
+
+The training/eval half is injected (``TrainHooks``) so the same loop drives
+the real JAX trainer in examples/ and fast synthetic surrogates in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import applier, latency, prune_step, ranking, tuner
+from repro.core.tasks import Task, TaskTable, Workload
+from repro.models.model import PruneSite
+
+
+@dataclasses.dataclass
+class CPruneConfig:
+    a_g: float                     # accuracy requirement (absolute)
+    alpha: float = 0.97            # min acc ratio per accepted iteration
+    beta: float = 0.98             # next latency target = beta * l_m
+    max_iterations: int = 100
+    rank_method: str = "l1"
+    use_tuning: bool = True        # Fig. 10 ablation switch
+    associated_subgraphs: bool = True   # Fig. 9 ablation switch
+    selective_search: bool = True  # Fig. 11 ablation switch (False=NetAdapt-ish)
+    min_dim_units: int = 8         # never prune a dim below this many units
+    seq_len: int = 128             # workload sequence length (for fixed ops)
+    prunable_kinds: Tuple[str, ...] = ("ffn", "moe_ffn", "heads", "experts")
+    # beyond-paper (DESIGN.md §7): lane-granular steps for memory-bound tasks
+    roofline_steps: bool = False
+
+
+@dataclasses.dataclass
+class TrainHooks:
+    """Injected accuracy machinery.
+
+    short_term_train(params, sites) -> params   (few steps of fine-tuning)
+    eval_acc(params, sites) -> float            (short-term accuracy)
+    long_term_train(params, sites) -> params    (final training, Alg.1 L17)
+    """
+
+    short_term_train: Callable
+    eval_acc: Callable
+    long_term_train: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    iteration: int
+    task_id: int
+    task_kind: str
+    prune_units: int
+    dim_before: int
+    dim_after: int
+    l_before: float
+    l_m: float
+    a_s: float
+    accepted: bool
+    reason: str
+    fps_rate: float                 # FPS gain vs original (paper Fig. 6)
+    candidates_tried: int
+
+
+@dataclasses.dataclass
+class CPruneResult:
+    params: Dict
+    sites: List[PruneSite]
+    history: List[IterationRecord]
+    final_latency: latency.LatencyReport
+    original_latency: latency.LatencyReport
+    final_acc: float
+    tuner_stats: tuner.TunerStats
+
+    @property
+    def fps_increase(self) -> float:
+        return self.original_latency.total_s / self.final_latency.total_s
+
+
+class CPrune:
+    """The paper's Algorithm 1 over a JAX model."""
+
+    def __init__(self, cfg: ModelConfig, sites: Sequence[PruneSite],
+                 wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig):
+        self.cfg = cfg
+        self.wl = wl
+        self.hooks = hooks
+        self.pcfg = pcfg
+        self.stats = tuner.TunerStats()
+        self.sites = [s for s in sites if s.kind in pcfg.prunable_kinds]
+
+    # -- helpers ------------------------------------------------------------
+
+    def _tuned_table(self, sites: Sequence[PruneSite]) -> TaskTable:
+        return tuner.build_tuned_table(
+            sites, self.wl, use_tuning=self.pcfg.use_tuning, stats=self.stats)
+
+    def _latency(self, sites, table) -> latency.LatencyReport:
+        return latency.model_latency(
+            self.cfg, sites, table, seq_len=self.pcfg.seq_len,
+            use_tuning=self.pcfg.use_tuning, stats=None)
+
+    def _prune_step_for(self, task: Task) -> int:
+        site = task.sites[0]
+        progs = task.prunable_programs()
+        if not progs:
+            return site.granularity
+        return prune_step.program_prune_step(
+            progs, granularity=site.granularity,
+            shard_multiple=self.wl.tp if site.kind != "experts" else 1,
+            unit_cols=site.unit_cols,
+            roofline_guided=self.pcfg.roofline_steps)
+
+    def _prune_task(self, params, sites: List[PruneSite], task: Task,
+                    n_units: int) -> Tuple[Dict, List[PruneSite]]:
+        """Prune all subgraphs associated with the task (§4.5) — or only the
+        first site when associated_subgraphs=False (ablation)."""
+        targets = task.sites if self.pcfg.associated_subgraphs \
+            else task.sites[:1]
+        pruned: Dict[str, PruneSite] = {}
+        new_params = params
+        for site in targets:
+            if site.dim - n_units < self.pcfg.min_dim_units:
+                continue
+            scores = ranking.rank_units(new_params, site,
+                                        self.pcfg.rank_method)
+            new_params, new_site = applier.prune_site_by_rank(
+                new_params, site, n_units, scores)
+            pruned[site.site_id] = new_site
+        if not pruned:
+            return params, sites
+        return new_params, applier.refresh_sites(sites, pruned)
+
+    # -- Algorithm 1 ----------------------------------------------------------
+
+    def run(self, params, *, verbose: bool = False) -> CPruneResult:
+        pcfg = self.pcfg
+        sites = list(self.sites)
+
+        # Line 1: tune M, initialize l_t, a_p, C, R
+        table = self._tuned_table(sites)
+        rep0 = self._latency(sites, table)
+        l_t = pcfg.beta * rep0.total_s
+        a_p = self.hooks.eval_acc(params, sites)
+        retired: set = set()          # tasks removed from R (Line 12)
+        history: List[IterationRecord] = []
+        rep = rep0
+
+        it = 0
+        # Line 2: while a_p > a_g and R != {}
+        while a_p > pcfg.a_g and it < pcfg.max_iterations:
+            R = [t for t in table.ordered() if t.signature not in retired]
+            if not R:
+                break
+            accepted = False
+            tried = 0
+            # Line 3: for r in R (priority order; selective search tries the
+            # head of the list first — exhaustive mode scores all of them)
+            for r in R:
+                tried += 1
+                # Lines 4-6: prune step from the fastest program's structure
+                n_units = self._prune_step_for(r)
+                if r.prunable_dim - n_units < pcfg.min_dim_units:
+                    retired.add(r.signature)
+                    continue
+                cand_params, cand_sites = self._prune_task(
+                    params, sites, r, n_units)
+                if cand_sites is sites:
+                    retired.add(r.signature)
+                    continue
+                # Lines 7-9: extract tasks, tune, measure l_m
+                cand_table = self._tuned_table(cand_sites)
+                cand_rep = self._latency(cand_sites, cand_table)
+                l_m = cand_rep.total_s
+                # Line 10: must beat the latency target
+                if l_m >= l_t:
+                    if verbose:
+                        print(f"  task {r.task_id}: l_m {l_m*1e3:.3f}ms >= "
+                              f"l_t {l_t*1e3:.3f}ms, next task")
+                    continue
+                # Line 11: short-term train + accuracy
+                cand_params = self.hooks.short_term_train(cand_params,
+                                                          cand_sites)
+                a_s = self.hooks.eval_acc(cand_params, cand_sites)
+                # Line 12: accuracy gate -> retire task permanently
+                if a_s < pcfg.alpha * a_p:
+                    retired.add(r.signature)
+                    history.append(IterationRecord(
+                        iteration=it, task_id=r.task_id,
+                        task_kind=r.sites[0].kind, prune_units=n_units,
+                        dim_before=r.prunable_dim,
+                        dim_after=r.prunable_dim - n_units,
+                        l_before=rep.total_s, l_m=l_m, a_s=a_s,
+                        accepted=False, reason="accuracy",
+                        fps_rate=rep0.total_s / l_m,
+                        candidates_tried=tried))
+                    continue
+                # Line 13: accept
+                params, sites, table, rep = (cand_params, cand_sites,
+                                             cand_table, cand_rep)
+                l_t = pcfg.beta * l_m
+                a_p = a_s
+                history.append(IterationRecord(
+                    iteration=it, task_id=r.task_id,
+                    task_kind=r.sites[0].kind, prune_units=n_units,
+                    dim_before=r.prunable_dim,
+                    dim_after=r.prunable_dim - n_units,
+                    l_before=history[-1].l_m if history else rep0.total_s,
+                    l_m=l_m, a_s=a_s, accepted=True, reason="",
+                    fps_rate=rep0.total_s / l_m, candidates_tried=tried))
+                if verbose:
+                    print(f"iter {it}: pruned task {r.task_id} "
+                          f"({r.sites[0].kind}) by {n_units} -> "
+                          f"l_m {l_m*1e3:.3f}ms  a_s {a_s:.4f}  "
+                          f"FPSx {rep0.total_s/l_m:.2f}")
+                accepted = True
+                break   # Line 14
+            it += 1
+            if not accepted:
+                # every task failed the latency or accuracy gate
+                remaining = [t for t in table.ordered()
+                             if t.signature not in retired]
+                if not remaining:
+                    break
+                # relax the latency target (the paper implicitly re-enters
+                # with the same l_t; without a candidate below l_t the loop
+                # would spin, so we terminate)
+                break
+
+        # Line 17: final long-term training
+        if self.hooks.long_term_train is not None:
+            params = self.hooks.long_term_train(params, sites)
+        final_acc = self.hooks.eval_acc(params, sites)
+        return CPruneResult(
+            params=params, sites=sites, history=history,
+            final_latency=rep, original_latency=rep0, final_acc=final_acc,
+            tuner_stats=self.stats)

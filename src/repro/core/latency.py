@@ -1,0 +1,128 @@
+"""Whole-model latency estimate on the target shard (FPS denominator).
+
+latency(model) = sum over prunable tasks (tuned program latency x subgraphs)
+               + fixed ops: non-prunable GEMMs (kv projections, recurrence
+                 projections, unembed), attention score/value contractions,
+                 and linear-recurrence scans.
+
+The paper reports FPS = images/s on the phone; here
+FPS = global_batch / step_latency on the target mesh shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
+from repro.core import cost_model, tuner
+from repro.core.tasks import TaskTable, Workload
+from repro.models.model import PruneSite
+
+
+@dataclasses.dataclass
+class LatencyReport:
+    total_s: float
+    task_s: float
+    fixed_s: float
+    breakdown: Dict[str, float]
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / max(self.total_s, 1e-12)
+
+
+def _head_dim_of(cfg, sites: Sequence[PruneSite], block_path: str) -> int:
+    """Current q-head count for a block (after possible pruning)."""
+    for s in sites:
+        if s.kind == "heads" and s.block_path == block_path:
+            return s.dim
+    return cfg.n_heads
+
+
+def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
+                  *, seq_len: int, use_tuning: bool = True,
+                  stats: Optional[tuner.TunerStats] = None
+                  ) -> Tuple[float, Dict[str, float]]:
+    """Latency of the non-prunable ops, per step, per shard."""
+    d = cfg.d_model
+    m = wl.tokens_local
+    batch_local = max(1, m // max(seq_len, 1))
+    tp = wl.tp
+    tune = (lambda *a, **k: tuner.tune_gemm(*a, stats=stats, **k)) \
+        if use_tuning else tuner.untuned_gemm
+    bd: Dict[str, float] = {}
+
+    def add(name: str, sec: float):
+        bd[name] = bd.get(name, 0.0) + sec
+
+    pattern_paths = {}
+    P = len(cfg.block_pattern)
+    n_p = cfg.n_layers // P
+    blocks = [(f"stack/pos{i}", k, n_p) for i, k in enumerate(cfg.block_pattern)
+              if n_p > 0]
+    blocks += [(f"tail/{i}", k, 1)
+               for i, k in enumerate(cfg.layer_kinds()[n_p * P:])]
+
+    for path, kind, mult in blocks:
+        if kind in (ATTN, LOCAL_ATTN):
+            hq = _head_dim_of(cfg, sites, path)
+            hkv, hd = cfg.n_kv_heads, cfg.head_dim
+            # kv projections (always fixed)
+            kvp = tune(m, d, max(1, hkv * hd // min(tp, max(hkv, 1))),
+                       dtype_bytes=wl.dtype_bytes)
+            add("kv_proj", 2 * kvp.latency * mult)
+            # q/o fixed only when there is no heads site (MHA)
+            if not any(s.kind == "heads" and s.block_path == path
+                       for s in sites):
+                qp = tune(m, d, max(1, hq * hd // tp),
+                          dtype_bytes=wl.dtype_bytes)
+                op = tune(m, max(1, hq * hd // tp), d,
+                          dtype_bytes=wl.dtype_bytes)
+                add("qo_proj", (qp.latency + op.latency) * mult)
+            window = cfg.sliding_window if (kind == LOCAL_ATTN or
+                                            cfg.sliding_window > 0) else 0
+            att = cost_model.attention_cost(
+                batch_local, seq_len, seq_len, max(1, hq // tp), hd,
+                window=window, dtype_bytes=wl.dtype_bytes)
+            add("attention", att * mult)
+        elif kind == RGLRU:
+            w = cfg.rglru_width
+            for nm, (kk, nn) in (("rg_in", (d, w // tp)),
+                                 ("rg_gate", (d, w // tp)),
+                                 ("rg_out", (w // tp, d))):
+                p = tune(m, max(1, kk), max(1, nn), dtype_bytes=wl.dtype_bytes)
+                add(nm, p.latency * mult)
+            nb = max(1, cfg.n_heads)
+            wb = max(1, w // nb)
+            gate = tune(m, wb, wb, batch=nb, dtype_bytes=wl.dtype_bytes)
+            add("rg_gates", 2 * gate.latency * mult)
+            add("rg_scan", cost_model.scan_cost(
+                batch_local, seq_len, w // tp, 4 * w // tp) * mult)
+        elif kind == RWKV:
+            for _ in range(5):
+                p = tune(m, d, max(1, d // tp), dtype_bytes=wl.dtype_bytes)
+                add("rwkv_proj", p.latency * mult)
+            H = max(1, d // cfg.rwkv_head_dim)
+            add("rwkv_scan", cost_model.scan_cost(
+                batch_local, seq_len, d // tp,
+                4 * (H // tp + 1) * cfg.rwkv_head_dim ** 2) * mult)
+
+    # embedding gather + unembed GEMM (vocab TP-sharded)
+    add("embed", m * d * wl.dtype_bytes / cost_model.HBM_BW)
+    un = tune(m, d, max(1, cfg.vocab_size // tp), dtype_bytes=wl.dtype_bytes)
+    add("unembed", un.latency)
+    return sum(bd.values()), bd
+
+
+def model_latency(cfg: ModelConfig, sites: Sequence[PruneSite],
+                  table: TaskTable, *, seq_len: int, use_tuning: bool = True,
+                  stats: Optional[tuner.TunerStats] = None) -> LatencyReport:
+    task_s = table.total_task_latency()
+    fixed_s, bd = fixed_latency(cfg, sites, table.wl, seq_len=seq_len,
+                                use_tuning=use_tuning, stats=stats)
+    bd = dict(bd)
+    for t in table.tasks:
+        key = f"task_{t.sites[0].kind}"
+        bd[key] = bd.get(key, 0.0) + t.latency * t.n_subgraphs
+    return LatencyReport(total_s=task_s + fixed_s, task_s=task_s,
+                         fixed_s=fixed_s, breakdown=bd)

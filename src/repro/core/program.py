@@ -1,0 +1,96 @@
+"""Program: a tuned kernel configuration and its iterator factorizations.
+
+The paper (§3.5) reads the fastest TVM program's loop-split factors for the
+filter-related iterators and derives the minimal structure-preserving prune
+count. On TPU the analogous structure is the Pallas block config:
+
+  * compute iterator over a GEMM dim X blocked by bx:
+        X = grid_x x (bx // LANE) x LANE        (LANE = 128, immutable hw)
+  * layout iterator over the output tile:
+        X = (X_pad // LANE) x LANE
+
+Factors flagged immutable (the hardware lane/sublane extents) cannot be
+decremented by pruning — that is the TPU adaptation of "maintaining the
+program structure": you can drop whole blocks or whole lane-groups, never
+fractions of a lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import LANE, Block, _ceil
+
+
+@dataclasses.dataclass(frozen=True)
+class Iterator:
+    """One loop nest over a prunable dim: split factors + mutability flags."""
+
+    name: str
+    factors: Tuple[int, ...]
+    mutable: Tuple[bool, ...]   # False = hardware extent, cannot shrink
+
+    @property
+    def extent(self) -> int:
+        return math.prod(self.factors)
+
+    def prune_quanta(self) -> List[int]:
+        """Sizes removable by decrementing one mutable factor (paper Fig 5f).
+
+        Decrementing factor a_i removes prod(factors)/a_i elements.
+        """
+        total = self.extent
+        return [total // f for f, m in zip(self.factors, self.mutable)
+                if m and f > 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """A tuned program for one GEMM: block config + derived iterators."""
+
+    m: int
+    k: int
+    n: int
+    block: Block
+    latency: float
+    dtype_bytes: int = 2
+    batch: int = 1
+
+    @property
+    def memory_bound(self) -> bool:
+        """Whether HBM traffic (not MXU compute) dominates this program.
+
+        Memory-bound GEMMs step at *lane* granularity (padded bytes), not
+        block granularity — the roofline-guided prune-step extension
+        (DESIGN.md §7) exploits this with finer steps.
+        """
+        from repro.core.cost_model import matmul_terms
+        t_c, t_m = matmul_terms(self.m, self.k, self.n, self.block,
+                                dtype_bytes=self.dtype_bytes,
+                                batch=self.batch)
+        return t_m > t_c
+
+    def dim_iterators(self, which: str) -> List[Iterator]:
+        """Iterators over GEMM dim 'n' or 'k' (the prunable ones).
+
+        Returns the compute-grid iterator and the memory-layout iterator —
+        the two iterator families the paper's LCM formula combines.
+        """
+        size = self.n if which == "n" else self.k
+        b = self.block.bn if which == "n" else self.block.bk
+        b = min(b, size)
+        grid = _ceil(size, b)
+        lanes = max(b // LANE, 1)
+        lane_extent = min(b, LANE)
+        compute = Iterator(
+            name=f"{which}.compute",
+            factors=(grid, lanes, lane_extent),
+            mutable=(True, True, False),
+        )
+        layout = Iterator(
+            name=f"{which}.layout",
+            factors=(max(_ceil(size, LANE), 1), min(size, LANE)),
+            mutable=(True, False),
+        )
+        return [compute, layout]

@@ -1,0 +1,72 @@
+"""The structure-preserving prune step (paper §3.5).
+
+    step = LCM over iterators i of  min_{mutable factor a in i} extent_i / a
+         = LCM_i ( extent_i / max_mutable_factor_i )
+
+extended with two TPU/cluster divisibility terms:
+  * ``granularity`` — the semantic prune unit of the site (e.g. prune whole
+    attention heads, one q-head per KV group);
+  * ``shard_multiple`` — the tensor-parallel degree: pruned dims must remain
+    divisible by the mesh axis they are sharded over, or every shard pads.
+    (This is the multi-device generalization the paper did not need.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Sequence
+
+from repro.core.program import Iterator, Program
+
+
+def lcm(*vals: int) -> int:
+    out = 1
+    for v in vals:
+        if v > 0:
+            out = out * v // math.gcd(out, v)
+    return out
+
+
+def iterator_step(it: Iterator) -> int:
+    """Minimal prunable count that keeps this iterator's structure."""
+    quanta = it.prune_quanta()
+    if not quanta:
+        return it.extent  # fully immutable: can only remove everything
+    return min(quanta)
+
+
+def lcm_prune_step(iterators: Sequence[Iterator], *, granularity: int = 1,
+                   shard_multiple: int = 1) -> int:
+    """Paper formula + granularity/sharding divisibility."""
+    steps = [iterator_step(it) for it in iterators]
+    return lcm(*steps, granularity, shard_multiple)
+
+
+def program_prune_step(programs: Sequence[tuple], *, granularity: int = 1,
+                       shard_multiple: int = 1, unit_cols: int = 1,
+                       roofline_guided: bool = False) -> int:
+    """Prune step (in semantic units) for a site from its tuned programs.
+
+    ``programs``: sequence of (Program, which_dim) where which_dim is 'n'
+    or 'k' — the GEMM dim the prunable dimension maps to. ``unit_cols`` is
+    the number of GEMM columns per semantic unit (head_dim for head
+    pruning, 1 for channel pruning).
+
+    ``roofline_guided`` (beyond-paper, DESIGN.md §7): restrict memory-bound
+    programs to their layout iterators (lane-granular steps). NOTE: the A/B
+    in EXPERIMENTS.md §Perf REFUTED this hypothesis — sub-block pruning
+    leaves the padded block grid unchanged so the latency gate never
+    passes; it independently re-validates the paper's §3.5 thesis. The
+    flag stays for the ablation; default off.
+
+    Returns the number of *semantic units* to prune at minimum.
+    """
+    its: List[Iterator] = []
+    for prog, which in programs:
+        dim_its = prog.dim_iterators(which)
+        if roofline_guided and prog.memory_bound:
+            dim_its = [it for it in dim_its if it.name.endswith(".layout")]
+        its.extend(dim_its)
+    step_cols = lcm_prune_step(its, granularity=1, shard_multiple=1)
+    # convert columns -> semantic units (round up to whole units)
+    step_units = max(1, -(-step_cols // unit_cols))
+    return lcm(step_units, granularity, shard_multiple)

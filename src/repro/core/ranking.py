@@ -1,0 +1,122 @@
+"""Filter selection: which channels/heads/experts to remove.
+
+The paper (§3.5, end): once the *count* is fixed by the program structure,
+the *selection* is classical L1-norm magnitude ranking [Li et al. 2016].
+FPGM (geometric-median) ranking is included for the Table 1 baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import PruneSite
+
+
+def _get_path(tree, path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def site_param(params, site: PruneSite, rel_path: str):
+    return _get_path(params, site.block_path + "/" + rel_path)
+
+
+def _channel_scores_l1(params, site: PruneSite) -> np.ndarray:
+    """L1 importance per prunable unit. Shape (L?, dim) — per-layer scores
+    for stacked sites (each subgraph ranks its own filters, §4.5)."""
+    total = None
+    for rel_path, axis in site.param_axes:
+        w = np.asarray(site_param(params, site, rel_path), np.float32)
+        ax = axis + (1 if site.stacked else 0)
+        # move prunable axis to position -1... then reduce all others except
+        # (optional leading layer axis) to get per-unit scores
+        w = np.moveaxis(np.abs(w), ax, -1)
+        if site.stacked:
+            red = tuple(range(1, w.ndim - 1))
+            s = w.sum(axis=red)                       # (L, cols)
+        else:
+            s = w.sum(axis=tuple(range(w.ndim - 1)))  # (cols,)
+        # fold unit_cols (e.g. head_dim columns per head)
+        if site.unit_cols > 1 and s.shape[-1] == site.dim * site.unit_cols:
+            s = s.reshape(s.shape[:-1] + (site.dim, site.unit_cols)).sum(-1)
+        total = s if total is None else total + s
+    return total
+
+
+def _channel_scores_fpgm(params, site: PruneSite) -> np.ndarray:
+    """FPGM: distance of each filter to the geometric median (approximated
+    by the mean filter) — smaller distance = more redundant."""
+    # use the first prunable-N param as the filter bank
+    rel_path, axis = site.param_axes[0]
+    w = np.asarray(site_param(params, site, rel_path), np.float32)
+    ax = axis + (1 if site.stacked else 0)
+    w = np.moveaxis(w, ax, -1)
+    if site.stacked:
+        L = w.shape[0]
+        w = w.reshape(L, -1, w.shape[-1])              # (L, feat, cols)
+        if site.unit_cols > 1:
+            w = w.reshape(L, w.shape[1], site.dim, site.unit_cols)
+            w = np.swapaxes(w, 1, 2).reshape(L, site.dim, -1)
+        else:
+            w = np.swapaxes(w, 1, 2)                   # (L, cols, feat)
+        med = w.mean(axis=1, keepdims=True)
+        return np.linalg.norm(w - med, axis=-1)        # (L, cols)
+    w = w.reshape(-1, w.shape[-1])
+    if site.unit_cols > 1:
+        w = w.reshape(w.shape[0], site.dim, site.unit_cols)
+        w = np.swapaxes(w, 0, 1).reshape(site.dim, -1)
+    else:
+        w = w.T
+    med = w.mean(axis=0, keepdims=True)
+    return np.linalg.norm(w - med, axis=-1)
+
+
+def rank_units(params, site: PruneSite, method: str = "l1") -> np.ndarray:
+    """Scores per prunable unit; lower = pruned first. (L?, dim)."""
+    if method == "l1":
+        return _channel_scores_l1(params, site)
+    if method == "fpgm":
+        return _channel_scores_fpgm(params, site)
+    raise ValueError(method)
+
+
+def keep_indices(scores: np.ndarray, n_prune: int, *,
+                 group: int = 1) -> np.ndarray:
+    """Indices of units to KEEP (sorted), pruning the n_prune lowest.
+
+    ``group`` > 1 enforces uniform pruning across interleaved groups (GQA:
+    prune the same number of q-heads from each KV group). Unit i belongs to
+    group i % group... heads are laid out [g0u0, g1u0, ...]? We use
+    contiguous blocks: head h belongs to group h // (dim/group).
+    """
+    dim = scores.shape[-1]
+    n_keep = dim - n_prune
+    if group <= 1:
+        if scores.ndim == 1:
+            idx = np.argsort(scores)[n_prune:]
+            return np.sort(idx)
+        keep = []
+        for row in scores:
+            idx = np.argsort(row)[n_prune:]
+            keep.append(np.sort(idx))
+        return np.stack(keep)
+    # grouped: prune n_prune/group lowest inside each contiguous group
+    per_group = dim // group
+    prune_per_group = n_prune // group
+
+    def _one(row):
+        kept = []
+        for g in range(group):
+            seg = row[g * per_group:(g + 1) * per_group]
+            idx = np.argsort(seg)[prune_per_group:] + g * per_group
+            kept.append(np.sort(idx))
+        return np.concatenate(kept)
+
+    if scores.ndim == 1:
+        return _one(scores)
+    return np.stack([_one(r) for r in scores])

@@ -1,0 +1,124 @@
+"""Task / subgraph decomposition and the relationship table C (paper §3.4).
+
+A *subgraph* is one prunable GEMM-shaped site instance; structurally
+identical subgraphs (same op kind and GEMM shapes) map to one *task*. The
+``TaskTable`` keeps the paper's three-way relationship:
+
+    task  <->  associated subgraphs (sites x multiplicity)
+    task  <->  fastest tuned Program per constituent GEMM
+
+Shapes are evaluated *per device shard*: M = local tokens (batch sharded
+over data axes), prunable N/K divided by the tensor-parallel degree when
+the dim is model-sharded. The paper tunes for one phone; we tune for one
+v5e shard of the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import cost_model
+from repro.core.program import Program
+from repro.models.model import GemmSpec, PruneSite
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """The target execution context a CPrune run optimizes for."""
+
+    tokens_global: int          # batch x seq per step
+    dp: int = 1                 # data-parallel degree (incl. pod axis)
+    tp: int = 1                 # tensor/model-parallel degree
+    dtype_bytes: int = 2
+
+    @property
+    def tokens_local(self) -> int:
+        return max(1, self.tokens_global // self.dp)
+
+
+def site_signature(site: PruneSite, wl: Workload) -> Tuple:
+    """Task identity: op kind + per-shard GEMM shapes (paper: same subgraph
+    properties -> same task)."""
+    gs = tuple((g.name, g.k, g.n, g.batch, round(g.m_scale, 6))
+               for g in site.gemms)
+    return (site.kind, site.op_kind, site.unit_cols, gs)
+
+
+def local_gemm_dims(site: PruneSite, g: GemmSpec, wl: Workload
+                    ) -> Tuple[int, int, int, int]:
+    """(m, k, n, batch) for one shard. The prunable dim is TP-sharded."""
+    m = max(1, int(wl.tokens_local * g.m_scale))
+    k, n, b = g.k, g.n, g.batch
+    if g.prunable == "n":
+        n = max(1, n // wl.tp)
+    elif g.prunable == "k":
+        k = max(1, k // wl.tp)
+    if site.kind == "experts":     # router: tiny GEMM, replicated
+        pass
+    return m, k, n, b
+
+
+@dataclasses.dataclass
+class Task:
+    """A group of identical subgraphs + their tuned programs."""
+
+    task_id: int
+    signature: Tuple
+    sites: List[PruneSite]
+    programs: Dict[str, Program] = dataclasses.field(default_factory=dict)
+    tuned: bool = False
+
+    @property
+    def n_subgraphs(self) -> int:
+        return sum(s.multiplicity for s in self.sites)
+
+    @property
+    def latency(self) -> float:
+        """Per-subgraph latency (sum of constituent GEMM programs)."""
+        return sum(p.latency for p in self.programs.values())
+
+    @property
+    def pruning_impact(self) -> float:
+        """Paper §3.3: execution time x number of associated subgraphs."""
+        return self.latency * self.n_subgraphs
+
+    @property
+    def prunable_dim(self) -> int:
+        return self.sites[0].dim
+
+    def prunable_programs(self) -> List[Tuple[Program, str]]:
+        out = []
+        for g in self.sites[0].gemms:
+            if g.prunable in ("n", "k") and g.name in self.programs:
+                out.append((self.programs[g.name], g.prunable))
+        return out
+
+
+class TaskTable:
+    """The paper's table C: tasks <-> subgraphs <-> fastest programs."""
+
+    def __init__(self, sites: Sequence[PruneSite], wl: Workload):
+        self.wl = wl
+        self.tasks: List[Task] = []
+        by_sig: Dict[Tuple, Task] = {}
+        for s in sites:
+            sig = site_signature(s, wl)
+            if sig not in by_sig:
+                t = Task(task_id=len(self.tasks), signature=sig, sites=[])
+                by_sig[sig] = t
+                self.tasks.append(t)
+            by_sig[sig].sites.append(s)
+
+    def task_for_site(self, site_id: str) -> Optional[Task]:
+        for t in self.tasks:
+            if any(s.site_id == site_id for s in t.sites):
+                return t
+        return None
+
+    def ordered(self) -> List[Task]:
+        """Prioritized task list R (descending pruning impact, §3.3)."""
+        return sorted(self.tasks, key=lambda t: -t.pruning_impact)
+
+    def total_task_latency(self) -> float:
+        return sum(t.latency * t.n_subgraphs for t in self.tasks)

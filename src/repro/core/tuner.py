@@ -1,0 +1,122 @@
+"""Per-task program tuner (the AutoTVM/Ansor role, §2.2 of the paper).
+
+For each task the tuner enumerates Pallas block configurations that fit the
+VMEM budget, scores them with the analytic v5e cost model, and records the
+fastest ``Program`` per constituent GEMM. The search is exhaustive over a
+hardware-aligned candidate grid (a few hundred candidates) — deterministic,
+so CPrune iterations are reproducible.
+
+The tuner also counts candidate evaluations ("tuning cost"), which the
+paper's Fig. 9/11 ablations report as relative time cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import cost_model
+from repro.core.cost_model import Block, VMEM_BYTES
+from repro.core.program import Program
+from repro.core.tasks import Task, TaskTable, Workload, local_gemm_dims
+from repro.models.model import PruneSite
+
+
+@dataclasses.dataclass
+class TunerStats:
+    candidates_evaluated: int = 0
+    tasks_tuned: int = 0
+    measurements: int = 0      # "on-device" cost-model invocations
+
+
+# Lane-aligned candidate grid. bn/bk cover every multiple of 128 (not just
+# powers of two) so re-tuning after a prune step can re-express the new dim
+# without padding — the feedback loop the paper's TVM tuner provides.
+_BM_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+_BK_CHOICES = tuple(128 * i for i in range(1, 9))      # 128..1024
+_BN_CHOICES = tuple(128 * i for i in range(1, 17))     # 128..2048
+
+
+def candidate_blocks(m: int, k: int, n: int, dtype_bytes: int = 2,
+                     vmem: Optional[int] = None) -> List[Block]:
+    """Hardware-aligned candidate grid, filtered to the VMEM budget."""
+    if vmem is None:
+        vmem = cost_model.VMEM_BYTES      # read at call time (target swap)
+    bms = [b for b in _BM_CHOICES if b <= max(8, 2 * m)]
+    bks = [b for b in _BK_CHOICES if b <= max(128, 2 * k)]
+    bns = [b for b in _BN_CHOICES if b <= max(128, 2 * n)]
+    out = []
+    for bm, bk, bn in itertools.product(bms, bks, bns):
+        blk = Block(bm, bk, bn)
+        if blk.vmem_bytes(dtype_bytes) <= vmem:
+            out.append(blk)
+    return out or [Block(8, 128, 128)]
+
+
+def tune_gemm(m: int, k: int, n: int, *, batch: int = 1,
+              dtype_bytes: int = 2, epilogue_ops: int = 0,
+              stats: Optional[TunerStats] = None) -> Program:
+    """Exhaustive search for the fastest block config of one GEMM."""
+    best: Optional[Tuple[float, Block]] = None
+    for blk in candidate_blocks(m, k, n, dtype_bytes):
+        lat = cost_model.matmul_cost(m, k, n, blk, dtype_bytes=dtype_bytes,
+                                     batch=batch, epilogue_ops=epilogue_ops)
+        if stats is not None:
+            stats.candidates_evaluated += 1
+        if best is None or lat < best[0]:
+            best = (lat, blk)
+    lat, blk = best
+    return Program(m=m, k=k, n=n, block=blk, latency=lat,
+                   dtype_bytes=dtype_bytes, batch=batch)
+
+
+def untuned_gemm(m: int, k: int, n: int, *, batch: int = 1,
+                 dtype_bytes: int = 2, epilogue_ops: int = 0) -> Program:
+    """The 'without tuning' program (paper Fig. 10 ablation)."""
+    blk = cost_model.default_block(m, k, n)
+    lat = cost_model.matmul_cost(m, k, n, blk, dtype_bytes=dtype_bytes,
+                                 batch=batch, epilogue_ops=epilogue_ops)
+    return Program(m=m, k=k, n=n, block=blk, latency=lat,
+                   dtype_bytes=dtype_bytes, batch=batch)
+
+
+def _epilogue_ops_for(op_kind: str) -> int:
+    if "+" not in op_kind:
+        return 0
+    act = op_kind.split("+", 1)[1]
+    return {"swiglu": 4, "geglu": 6, "gelu": 6, "relu2": 2, "silu": 3}.get(act, 2)
+
+
+def tune_task(task: Task, wl: Workload, *, use_tuning: bool = True,
+              stats: Optional[TunerStats] = None) -> None:
+    """Tune every constituent GEMM of a task; records fastest programs."""
+    site = task.sites[0]
+    epi = _epilogue_ops_for(site.op_kind)
+    for g in site.gemms:
+        m, k, n, b = local_gemm_dims(site, g, wl)
+        if use_tuning:
+            task.programs[g.name] = tune_gemm(
+                m, k, n, batch=b, dtype_bytes=wl.dtype_bytes,
+                epilogue_ops=epi, stats=stats)
+        else:
+            task.programs[g.name] = untuned_gemm(
+                m, k, n, batch=b, dtype_bytes=wl.dtype_bytes, epilogue_ops=epi)
+    task.tuned = True
+    if stats is not None:
+        stats.tasks_tuned += 1
+        stats.measurements += 1
+
+
+def tune_table(table: TaskTable, *, use_tuning: bool = True,
+               stats: Optional[TunerStats] = None) -> TaskTable:
+    for t in table.tasks:
+        tune_task(t, table.wl, use_tuning=use_tuning, stats=stats)
+    return table
+
+
+def build_tuned_table(sites: Sequence[PruneSite], wl: Workload, *,
+                      use_tuning: bool = True,
+                      stats: Optional[TunerStats] = None) -> TaskTable:
+    table = TaskTable(sites, wl)
+    return tune_table(table, use_tuning=use_tuning, stats=stats)

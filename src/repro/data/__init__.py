@@ -1,0 +1,4 @@
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import markov_batch, masked_audio_batch, vlm_batch
+
+__all__ = ["DataPipeline", "markov_batch", "masked_audio_batch", "vlm_batch"]

@@ -1,0 +1,91 @@
+"""Deterministic synthetic datasets (learnable, CPU-fast).
+
+The LM task is a noisy permutation Markov chain: token_{t+1} = perm[token_t]
+with probability ``p_follow``, else uniform. A model that learns the
+permutation reaches ~p_follow next-token accuracy — so short-term training
+inside the CPrune loop produces a real, moving accuracy signal, which the
+accept/reject gates (a_s >= alpha * a_p) need.
+
+Everything is a pure function of (seed, step, shard) — restarts replay the
+exact same stream with zero loader state (the fault-tolerance story).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+P_FOLLOW = 0.9
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _markov_tokens(key, batch: int, seq: int, vocab: int) -> jax.Array:
+    kperm, kstart, knoise, kchoice = jax.random.split(key, 4)
+    # the permutation is derived from the dataset seed only (key foldable):
+    perm = jax.random.permutation(jax.random.PRNGKey(1234), vocab)
+    start = jax.random.randint(kstart, (batch,), 0, vocab)
+
+    def step(tok, ks):
+        k1, k2 = jax.random.split(ks)
+        follow = jax.random.uniform(k1, (batch,)) < P_FOLLOW
+        rand = jax.random.randint(k2, (batch,), 0, vocab)
+        nxt = jnp.where(follow, perm[tok], rand)
+        return nxt, nxt
+
+    keys = jax.random.split(knoise, seq - 1)
+    _, rest = jax.lax.scan(step, start, keys)
+    return jnp.concatenate([start[None], rest], axis=0).T  # (batch, seq)
+
+
+def markov_batch(seed: int, step: int, shard: int, *, batch: int, seq: int,
+                 vocab: int) -> Dict[str, jax.Array]:
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), shard)
+    return {"tokens": _markov_tokens(key, batch, seq, vocab)}
+
+
+def masked_audio_batch(seed: int, step: int, shard: int, *, batch: int,
+                       seq: int, vocab: int, d_model: int
+                       ) -> Dict[str, jax.Array]:
+    """HuBERT-style: frame embeddings + cluster labels + mask.
+
+    Frames carry a linear signature of their label so the task is learnable:
+    frame = W[label] + noise.
+    """
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), shard)
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = _markov_tokens(k1, batch, seq, vocab)
+    codebook = jax.random.normal(jax.random.PRNGKey(77), (vocab, d_model))
+    frames = codebook[labels] + 0.3 * jax.random.normal(
+        k2, (batch, seq, d_model))
+    mask = jax.random.uniform(k3, (batch, seq)) < 0.4
+    return {"frames": frames, "labels": labels, "mask": mask}
+
+
+def vlm_batch(seed: int, step: int, shard: int, *, batch: int, seq: int,
+              vocab: int, d_model: int, n_patches: int
+              ) -> Dict[str, jax.Array]:
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), shard)
+    k1, k2 = jax.random.split(key)
+    out = {"tokens": _markov_tokens(k1, batch, seq, vocab)}
+    F = min(n_patches, seq // 2)
+    out["patch_embeds"] = jax.random.normal(k2, (batch, F, d_model)) * 0.02
+    return out
+
+
+def batch_for(cfg, seed: int, step: int, shard: int, *, batch: int,
+              seq: int) -> Dict[str, jax.Array]:
+    """Dispatch on the arch family's frontend."""
+    if cfg.frontend == "audio_frames":
+        return masked_audio_batch(seed, step, shard, batch=batch, seq=seq,
+                                  vocab=cfg.vocab_size, d_model=cfg.d_model)
+    if cfg.frontend == "vision_patches":
+        return vlm_batch(seed, step, shard, batch=batch, seq=seq,
+                         vocab=cfg.vocab_size, d_model=cfg.d_model,
+                         n_patches=cfg.frontend_seq)
+    return markov_batch(seed, step, shard, batch=batch, seq=seq,
+                        vocab=cfg.vocab_size)

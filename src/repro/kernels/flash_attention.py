@@ -1,0 +1,123 @@
+"""Flash attention Pallas kernel: blocked online-softmax, causal / sliding
+window / GQA.
+
+Grid: (B * Hq, Sq/bq, Sk/bk) with the KV dim minor — running max / sum /
+accumulator live in VMEM scratch across KV steps (the FlashAttention-2
+schedule adapted to the TPU pipeline; scores never touch HBM).
+
+GQA is handled in the BlockSpec index maps: query head h reads KV head
+h // (Hq // Hkv) — no KV replication in HBM.
+
+Validated with interpret=True against ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.matmul import vmem
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int, n_k: int,
+               bq: int, bk: int, sq: int, sk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qi = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = k_pos < sk                                   # padding
+    ok &= q_pos < sq
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                        # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
+    l_new = l_ref[...][:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Sk, 8))
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    # layout: (B*H, S, D)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+    grid = (B * Hq, (Sq + pq) // bq, (Sk + pk) // bk)
+
+    def q_idx(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_idx(bh, qi, ki):
+        b = bh // Hq
+        h = bh % Hq
+        return (b * Hkv + h // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, n_k=grid[2], bq=bq, bk=bk,
+                          sq=Sq, sk=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_idx),
+            pl.BlockSpec((1, bk, D), kv_idx),
+            pl.BlockSpec((1, bk, D), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_idx),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            vmem((bq, 128), jnp.float32),   # running max (lane-replicated)
+            vmem((bq, 128), jnp.float32),   # running sum
+            vmem((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :Sq].reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    return out

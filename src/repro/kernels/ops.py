@@ -1,0 +1,57 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a real TPU these call the compiled kernels; on this CPU container they
+run in interpret mode (set ``REPRO_PALLAS_INTERPRET=0`` on TPU). The
+wrappers are what the model layer would plug in via ``use_pallas=True``
+paths and what the benchmarks time.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import Block
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _wkv
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a, b, *, bm: int = 128, bk: int = 256, bn: int = 256):
+    return _mm.matmul(a, b, block=Block(bm, bk, bn), interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bw"))
+def rglru_scan(a, x, *, bs: int = 128, bw: int = 128):
+    return _rg.rglru_scan(a, x, bs=bs, bw=bw, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def rwkv6_scan(r, k, v, w, u, *, bs: int = 64):
+    return _wkv.rwkv6_scan(r, k, v, w, u, bs=bs, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def moe_gmm(x, w, *, bm: int = 128, bk: int = 256, bn: int = 256):
+    return _gmm.moe_gmm(x, w, block=Block(bm, bk, bn),
+                        interpret=_interpret())

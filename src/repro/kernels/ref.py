@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (fp32 math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as _attn
+from repro.models import rglru as _rglru
+from repro.models import rwkv6 as _rwkv6
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale=None):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). Full-softmax oracle."""
+    return _attn.direct_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+
+
+def rglru_scan_ref(a: jax.Array, x: jax.Array, s0: jax.Array):
+    """Elementwise linear recurrence: s_t = a_t s_{t-1} + x_t.
+
+    a, x: (B, S, W); s0: (B, W). Returns (y (B,S,W), s_last)."""
+    def step(s, inp):
+        at, xt = inp
+        s = at * s + xt
+        return s, s
+
+    af = a.astype(jnp.float32).swapaxes(0, 1)
+    xf = x.astype(jnp.float32).swapaxes(0, 1)
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), (af, xf))
+    return ys.swapaxes(0, 1).astype(a.dtype), s_last
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """WKV oracle. r,k,v,w: (B, S, H, D); u: (H, D); s0: (B, H, D, D)."""
+    return _rwkv6.wkv_scan(r, k, v, w, u, s0)
+
+
+def moe_gmm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Grouped GEMM oracle: (E, C, K) x (E, K, N) -> (E, C, N)."""
+    return jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver
+  1. builds the full published config and its ShapeDtypeStruct inputs,
+  2. jits the right step (train_4k -> train_step with optimizer;
+     prefill_32k -> prefill_step; decode_* / long_* -> serve_step),
+  3. ``.lower().compile()`` on the 16x16 (single-pod, 256 chip) and
+     2x16x16 (multi-pod, 512 chip) meshes,
+  4. records memory_analysis / cost_analysis / per-collective bytes into a
+     JSON artifact consumed by the roofline benchmark and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_1_7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                get_config, shape_applicable)
+from repro.launch import specs, steps
+from repro.launch.mesh import make_production_mesh
+from repro.optim.optimizers import OptState
+from repro.sharding import logical, rules
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "dryrun_artifacts"
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_collectives(hlo_text: str):
+    """Sum result bytes per collective op class from post-SPMD HLO."""
+    out = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        for c in _COLLECTIVES:
+            # match the op name after '=', e.g.  %x = bf16[..] all-gather(
+            if f" {c}(" in s or f" {c}-start(" in s:
+                lhs = s.split("=", 1)[1]
+                op_pos = lhs.find(c)
+                typestr = lhs[:op_pos]
+                total = 0
+                for m in _SHAPE_RE.finditer(typestr):
+                    dt, dims = m.group(1), m.group(2)
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    total += n * _DTYPE_BYTES[dt]
+                out[c]["bytes"] += total
+                out[c]["count"] += 1
+                break
+    return out
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             save: bool = True, hlo_dump: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_devices": 512 if multi_pod else 256}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        _save(record, save)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        model = steps.build_model(cfg, mesh)
+        params_shape = specs.param_specs(cfg)
+        lrules = rules.logical_rules(mesh, seq_shard=shape.kind != "decode")
+
+        with mesh, logical.set_rules(mesh, lrules):
+            if shape.kind == "train":
+                batch = specs.batch_specs(cfg, shape)
+                step = steps.make_train_step(cfg, model)
+                jitted = steps.jit_train_step(step, mesh, params_shape, batch)
+                opt_shape = jax.eval_shape(
+                    lambda p: __import__("repro.optim.optimizers",
+                                         fromlist=["adamw_init"])
+                    .adamw_init(p), params_shape)
+                lowered = jitted.lower(params_shape, opt_shape, batch)
+            elif shape.kind == "prefill":
+                batch = specs.batch_specs(cfg, shape)
+                step = steps.make_prefill_step(cfg, model, shape.seq_len)
+                caches_shape = jax.eval_shape(
+                    lambda: model.init_caches(shape.global_batch,
+                                              shape.seq_len))
+                jitted = steps.jit_prefill_step(step, mesh, cfg, model,
+                                                params_shape, batch,
+                                                caches_shape)
+                lowered = jitted.lower(params_shape, batch)
+            else:  # decode
+                token, caches_shape = specs.decode_specs(cfg, shape)
+                step = steps.make_serve_step(cfg, model)
+                jitted = steps.jit_serve_step(step, mesh, cfg, model,
+                                              params_shape, caches_shape,
+                                              token)
+                lowered = jitted.lower(params_shape, token, caches_shape)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        from repro.launch import hlo_stats
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            param_bytes_global=specs.spec_bytes(params_shape),
+            memory_analysis=_mem_analysis(compiled),
+            cost_analysis=_cost_analysis(compiled),
+            collectives=_parse_collectives(hlo),
+            # loop-corrected per-device stats (see hlo_stats.py)
+            hlo_stats=hlo_stats.stats_from_text(
+                hlo, n_devices=record["n_devices"]),
+            hlo_lines=hlo.count("\n"),
+        )
+        if hlo_dump:
+            (ARTIFACT_DIR / f"{arch}__{shape_name}__{mesh_name}.hlo.txt"
+             ).write_text(hlo)
+        del compiled, lowered, hlo
+    except Exception as e:
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    _save(record, save)
+    return record
+
+
+def _save(record: dict, save: bool):
+    if not save:
+        return
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    (ARTIFACT_DIR / name).write_text(json.dumps(record, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--hlo-dump", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = list(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        r = run_cell(a, s, mp, hlo_dump=args.hlo_dump)
+        tag = {"ok": "OK  ", "skipped": "SKIP", "failed": "FAIL"}[r["status"]]
+        extra = ""
+        if r["status"] == "ok":
+            fl = r["cost_analysis"].get("flops", 0)
+            extra = (f"compile {r['compile_s']:.1f}s flops {fl:.3g} "
+                     f"hlo_lines {r['hlo_lines']}")
+            n_ok += 1
+        elif r["status"] == "skipped":
+            extra = r["reason"]
+            n_skip += 1
+        else:
+            extra = r["error"][:160]
+            n_fail += 1
+        print(f"[{tag}] {a:24s} {s:12s} {r['mesh']:6s} {extra}", flush=True)
+    print(f"\ntotal: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,293 @@
+"""Loop-aware HLO statistics for the roofline analysis.
+
+``compiled.cost_analysis()`` on the CPU backend counts while-loop bodies
+ONCE (HloCostAnalysis does not multiply by trip count), which undercounts a
+scan-over-layers model by ~n_layers x. This parser walks the
+post-optimization HLO text instead:
+
+  * per-computation: dot FLOPs (from result shape x contracting dims),
+    HBM bytes at fusion granularity (operands + results of top-level ops —
+    fusion-internal intermediates never touch HBM), collective wire bytes
+    (class-specific ring formulas using the replica-group size);
+  * a call graph (while bodies x known_trip_count from backend_config,
+    fusions / calls / conditionals x 1) propagates totals to ENTRY.
+
+Every number is per device (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\((.*)$")
+
+
+def _split_op(line: str):
+    """-> (name, typestr, opcode, args) or None. Handles tuple result types
+    containing '=' inside /*index=k*/ comments."""
+    m = _LHS_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2).strip()
+    if rhs.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        typestr, rest = rhs[:end + 1], rhs[end + 1:]
+    else:
+        j = rhs.find("(")
+        if j < 0:
+            return None
+        k = rhs.rfind(" ", 0, j)
+        if k < 0:
+            return None
+        typestr, rest = rhs[:k], rhs[k:]
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    return name, typestr, om.group(1), om.group(2)
+_TRIP_RE = re.compile(r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:'
+                      r'\s*[\'"](\d+)[\'"]')
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "reshape"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(typestr: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_shape(typestr: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _TYPE_RE.search(typestr)
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    # (child_comp, multiplier, kind) edges
+    children: List[Tuple[str, float, str]] = dataclasses.field(
+        default_factory=list)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "all-gather":
+        return result_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return result_bytes * (g - 1)           # input = result * g
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)                   # collective-permute
+
+
+def parse_hlo(text: str, *, n_devices: int = 256) -> Dict[str, CompStats]:
+    comps: Dict[str, CompStats] = {}
+    symtab: Dict[str, str] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None or line.endswith("{"):
+            h = _HEADER_RE.match(line.strip())
+            if h and line.strip().endswith("{"):
+                cur = h.group(1)
+                comps[cur] = CompStats()
+                symtab = {}
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _split_op(line)
+        if not parsed:
+            continue
+        name, typestr, opcode, rest = parsed
+        symtab[name] = typestr
+        if opcode in _SKIP_OPS:
+            continue
+        st = comps[cur]
+        result_bytes = _type_bytes(typestr)
+
+        # --- collectives ---
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in _COLLECTIVES:
+            g = _group_size(line, n_devices)
+            wb = _wire_bytes(base, result_bytes, g)
+            st.collective_bytes[base] = st.collective_bytes.get(base, 0.0) + wb
+            st.bytes += result_bytes        # it also touches HBM
+            st.collective_counts[base] = st.collective_counts.get(base, 0) + 1
+            continue
+
+        # --- call graph ---
+        if opcode == "while":
+            trip = 1
+            t = _TRIP_RE.search(line)
+            if t:
+                trip = int(t.group(1))
+            b = re.search(r"body=%?([\w\.\-]+)", line)
+            c = re.search(r"condition=%?([\w\.\-]+)", line)
+            if b:
+                st.children.append((b.group(1), float(trip), "while"))
+            if c:
+                st.children.append((c.group(1), float(trip), "while_cond"))
+            continue
+        if opcode == "fusion":
+            cc = re.search(r"calls=%?([\w\.\-]+)", line)
+            if cc:
+                # flops inside fusions count; bytes counted at this level
+                st.children.append((cc.group(1), 1.0, "fusion"))
+        if opcode in ("call", "custom-call"):
+            cc = re.search(r"to_apply=%?([\w\.\-]+)", line)
+            if cc:
+                st.children.append((cc.group(1), 1.0, "call"))
+        if opcode == "conditional":
+            for cc in re.finditer(r"(?:true_computation|false_computation|"
+                                  r"branch_computations=\{)%?([\w\.\-]+)",
+                                  line):
+                st.children.append((cc.group(1), 1.0, "cond"))
+
+        # --- dot flops ---
+        if opcode == "dot":
+            out = _type_shape(typestr)
+            lhs_m = re.match(r"\s*%?([\w\.\-]+)", rest)
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            contract = 1
+            if lhs_m and cdims and lhs_m.group(1) in symtab:
+                lshape = _type_shape(symtab[lhs_m.group(1)])
+                if lshape:
+                    for d in cdims.group(1).split(","):
+                        if d and int(d) < len(lshape[1]):
+                            contract *= lshape[1][int(d)]
+            if out:
+                st.flops += 2.0 * math.prod(out[1] or (1,)) * contract
+
+        # --- HBM bytes (fusion granularity) ---
+        # Sliced accesses read/write only the slice, not the full operand:
+        # counting the operand of a dynamic-slice inside a scan body (the
+        # whole xs array) once per trip would overstate traffic by the
+        # sequence length.
+        if opcode in ("dynamic-slice", "gather"):
+            st.bytes += 2 * result_bytes
+            continue
+        if opcode == "dynamic-update-slice":
+            # aliased in place: traffic = the update slice (2nd operand)
+            ops = re.findall(r"%([\w\.\-]+)", rest)
+            upd = symtab.get(ops[1]) if len(ops) > 1 else None
+            st.bytes += 2 * (_type_bytes(upd) if upd else result_bytes)
+            continue
+        if opcode in ("scatter", "select-and-scatter"):
+            ops = re.findall(r"%([\w\.\-]+)", rest)
+            upd = symtab.get(ops[-1]) if ops else None
+            st.bytes += 2 * (_type_bytes(upd) if upd else result_bytes)
+            continue
+        operand_bytes = 0
+        for om in re.finditer(r"%([\w\.\-]+)", rest.split("),")[0]):
+            t = symtab.get(om.group(1))
+            if t:
+                operand_bytes += _type_bytes(t)
+        st.bytes += result_bytes + operand_bytes
+
+    comps["__entry__"] = comps.get(entry, CompStats()) if entry else \
+        CompStats()
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def aggregate(comps: Dict[str, CompStats]) -> Dict[str, float]:
+    """Propagate child totals (x multiplier) up to ENTRY."""
+    entry = comps.get("__entry_name__")
+    memo: Dict[str, Dict[str, float]] = {}
+    visiting = set()
+
+    def total(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in comps or \
+                not isinstance(comps[name], CompStats):
+            return {"flops": 0.0, "bytes": 0.0,
+                    **{f"coll_{c}": 0.0 for c in _COLLECTIVES}}
+        visiting.add(name)
+        st = comps[name]
+        out = {"flops": st.flops, "bytes": st.bytes}
+        for c in _COLLECTIVES:
+            out[f"coll_{c}"] = st.collective_bytes.get(c, 0.0)
+        for child, mult, kind in st.children:
+            sub = total(child)
+            for k in out:
+                if kind == "fusion" and k == "bytes":
+                    continue        # fusion-internal traffic stays on-chip
+                out[k] += sub[k] * mult
+        visiting.discard(name)
+        memo[name] = out
+        return out
+
+    if not entry:
+        return {}
+    agg = total(entry)
+    agg["collective_bytes"] = sum(agg[f"coll_{c}"] for c in _COLLECTIVES)
+    return agg
+
+
+def stats_from_text(text: str, *, n_devices: int = 256) -> Dict[str, float]:
+    return aggregate(parse_hlo(text, n_devices=n_devices))

@@ -1,0 +1,40 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization — the dry-run must set
+XLA_FLAGS before anything initializes the backend.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod prepends a 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=_auto(len(shape)))
+
+
+def make_test_mesh(n_devices: Optional[int] = None, *,
+                   model: Optional[int] = None):
+    """Small mesh over however many (host) devices exist — for CI tests."""
+    n = n_devices or len(jax.devices())
+    model = model or (2 if n % 2 == 0 and n > 1 else 1)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model],
+                         axis_types=_auto(2))
+
+
+def required_devices(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

@@ -1,0 +1,61 @@
+"""Sharded serving driver (production entry point).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
+      --devices 4 --dp 2 --tp 2 --requests 8
+"""
+import argparse
+import os
+
+
+def _early_env():
+    ap = _parser()
+    args, _ = ap.parse_known_args()
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    return args
+
+
+def _parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    return ap
+
+
+def main():
+    args = _early_env()
+    import numpy as np
+    import jax
+
+    from repro.configs import get_config, get_reduced_config
+    from repro.models.model import init_params
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    if cfg.is_encoder_only:
+        raise SystemExit("encoder-only arch has no decode step")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=min(8, args.requests),
+                      max_seq=args.prompt_len + args.max_new)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new,
+            temperature=0.0 if i % 2 == 0 else 0.8))
+    stats = eng.run()
+    for k, v in stats.items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+``input_specs(cfg, shape)`` builds the batch for a train/prefill step or the
+(token, caches) pair for a decode step; ``param_specs`` and ``cache_specs``
+come from jax.eval_shape over the real initializers, so the dry-run lowers
+the exact production pytrees.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, init_params
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs of one train/prefill step."""
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": S((B, L, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "labels": S((B, L), jnp.int32),
+            "mask": S((B, L), jnp.bool_),
+        }
+    batch: Dict[str, Any] = {"tokens": S((B, L), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        F = min(cfg.frontend_seq, L // 2)
+        batch["patch_embeds"] = S((B, F, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    """(token, caches) for one decode step with a seq_len-deep cache."""
+    B, L = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(B, L))
+    token = S((B, 1), jnp.int32)
+    return token, caches
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def spec_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

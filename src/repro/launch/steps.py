@@ -1,0 +1,131 @@
+"""Jitted, sharded train / prefill / serve steps for the production meshes."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.optim.optimizers import (OptState, adamw_init, adamw_update,
+                                    clip_by_global_norm)
+from repro.sharding import logical, rules
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_model(cfg: ModelConfig, mesh: Optional[Mesh], *,
+                seq_shard: bool = True, zero3: bool = True) -> Model:
+    if mesh is None:
+        return Model(cfg)
+
+    def shard_fn(x):
+        return logical.constrain(x, ("batch", "seq", None))
+
+    gather_fn = rules.zero3_gather_fn(mesh) if zero3 else None
+    return Model(cfg, shard_fn=shard_fn, gather_fn=gather_fn)
+
+
+def make_train_step(cfg: ModelConfig, model: Model, *, lr: float = 1e-4,
+                    optimizer: str = "adamw", grad_clip: float = 1.0):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss_fn(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gn = clip_by_global_norm(grads, grad_clip)
+        if optimizer == "adamw":
+            params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        else:
+            from repro.optim.optimizers import sgd_update
+            params, opt_state = sgd_update(params, grads, opt_state, lr=lr)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gn
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, model: Model, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, model: Model):
+    def serve_step(params, token, caches):
+        return model.decode_step(params, token, caches)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+
+def train_shardings(mesh: Mesh, params_shape, batch_shape):
+    pspec = rules.param_pspecs(params_shape, mesh)
+    opt_spec = OptState(step=P(), m=pspec, v=pspec)
+    bspec = rules.batch_pspecs(batch_shape, mesh)
+    metrics_spec = None  # replicated scalars
+    return pspec, opt_spec, bspec
+
+
+def jit_train_step(train_step, mesh: Mesh, params_shape, batch_shape, *,
+                   optimizer: str = "adamw", donate: bool = True):
+    pspec, opt_spec, bspec = train_shardings(mesh, params_shape, batch_shape)
+    if optimizer != "adamw":
+        opt_spec = OptState(step=P(), m=opt_spec.m, v=P())
+    in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, bspec))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), None)
+    return jax.jit(
+        train_step, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(0, 1) if donate else ())
+
+
+def jit_serve_step(serve_step, mesh: Mesh, cfg, model, params_shape,
+                   caches_shape, token_shape, *, donate: bool = True):
+    pspec = rules.param_pspecs(params_shape, mesh)
+    cspec = rules.cache_pspecs(model, caches_shape, mesh)
+    DATA = rules.data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+    B = token_shape.shape[0]
+    tok_spec = rules.fit_spec((DATA, None), token_shape.shape, mesh)
+    logits_spec = rules.fit_spec((DATA, None, "model"),
+                                 (B, 1, cfg.vocab_size), mesh)
+    return jax.jit(
+        serve_step,
+        in_shardings=(_ns(mesh, pspec),
+                      NamedSharding(mesh, tok_spec),
+                      _ns(mesh, cspec)),
+        out_shardings=(NamedSharding(mesh, logits_spec), _ns(mesh, cspec)),
+        donate_argnums=(2,) if donate else ())
+
+
+def jit_prefill_step(prefill_step, mesh: Mesh, cfg, model, params_shape,
+                     batch_shape, caches_shape):
+    pspec = rules.param_pspecs(params_shape, mesh)
+    bspec = rules.batch_pspecs(batch_shape, mesh)
+    cspec = rules.cache_pspecs(model, caches_shape, mesh)
+    DATA = rules.data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+    B = jax.tree.leaves(batch_shape)[0].shape[0]
+    logits_spec = rules.fit_spec((DATA, None, "model"),
+                                 (B, 1, cfg.vocab_size), mesh)
+    return jax.jit(
+        prefill_step,
+        in_shardings=(_ns(mesh, pspec), _ns(mesh, bspec)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       {"stack": _ns(mesh, cspec["stack"]),
+                        "tail": _ns(mesh, cspec["tail"]),
+                        "pos": NamedSharding(mesh, P())}))

@@ -1,0 +1,3 @@
+from repro.models.model import Model, init_params
+
+__all__ = ["Model", "init_params"]

@@ -1,0 +1,160 @@
+"""Shared layer primitives: norms, activations, RoPE / M-RoPE, embeddings."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name in ("swiglu", "geglu"):
+        # gated variants handled in the FFN itself; this is the gate nonlinearity
+        return jax.nn.silu if name == "swiglu" else jax.nn.gelu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def group_norm_heads(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                     eps: float = 64e-5) -> jax.Array:
+    """Per-head group norm used by RWKV-6 on the WKV output.
+
+    x: (..., H, D). Normalizes over D within each head.
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,) in float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S) int32.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# Qwen2-VL M-RoPE: head_dim sections rotate with (t, h, w) position streams.
+# Section split follows the released config: [16, 24, 24] pairs for D=128
+# (scaled proportionally for other head dims).
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    half = head_dim // 2
+    t = round(half * 16 / 64)
+    h = round(half * 24 / 64)
+    w = half - t - h
+    return t, h, w
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
+    """M-RoPE. x: (..., S, H, D); positions3: (3, ..., S) int32 (t,h,w streams)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    sec = mrope_sections(d)
+    # For each frequency slot choose which position stream drives it.
+    stream_id = jnp.concatenate([
+        jnp.zeros((sec[0],), jnp.int32),
+        jnp.ones((sec[1],), jnp.int32),
+        jnp.full((sec[2],), 2, jnp.int32),
+    ])                                                  # (D/2,)
+    # positions3: (3, ..., S) -> (..., S, D/2) by gathering per-slot stream
+    pos = jnp.moveaxis(positions3, 0, -1)               # (..., S, 3)
+    pos_slot = jnp.take(pos.astype(jnp.float32), stream_id, axis=-1)  # (..., S, D/2)
+    ang = pos_slot * freqs                              # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_positional(rope_kind: str, x: jax.Array, positions, theta: float):
+    if rope_kind == "rope":
+        return apply_rope(x, positions, theta)
+    if rope_kind == "mrope":
+        return apply_mrope(x, positions, theta)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)

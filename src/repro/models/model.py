@@ -1,0 +1,496 @@
+"""Model assembly: scanned layer stacks, train/prefill/decode, prune metadata.
+
+Layer layout
+------------
+``cfg.block_pattern`` repeats across ``n_layers``. Layers are organized as
+``n_periods`` full repetitions of the pattern (stacked + lax.scan, keeps the
+HLO small enough that 512-device lowering of an 80-layer 110B model is fast)
+plus a small unscanned ``tail`` for the remainder layers.
+
+Params pytree::
+
+    params = {
+      "embed":      (V, d),
+      "lm_head":    (d, V),            # absent when tie_embeddings
+      "final_norm": {...},
+      "stack":      {"pos0": <block pytree, leaves lead with n_periods>, ...},
+      "tail":       {"0": <block pytree>, ...},      # remainder layers
+    }
+
+Prune metadata: ``prune_sites(cfg)`` exposes every prunable dimension as a
+``PruneSite`` (the paper's *subgraph* groups) for the CPrune core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
+from repro.models import attention, blocks, layers
+
+
+# ---------------------------------------------------------------------------
+# Prune-site metadata (consumed by repro.core)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """One GEMM inside a prunable subgraph (per-token shape)."""
+
+    name: str          # up | gate | down | q | o | router | ...
+    k: int
+    n: int
+    prunable: str      # 'n' | 'k' | '-' (which dim the prunable dim maps to)
+    batch: int = 1     # leading batched-GEMM dim (experts)
+    m_scale: float = 1.0  # M = m_scale * tokens (capacity factor for MoE)
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSite:
+    """One prunable structured dimension shared by `multiplicity` subgraphs.
+
+    param_axes maps param-path (relative to the block pytree, "/"-joined) to
+    the axis (in the *unstacked* layer params) sliced when pruning. Stacked
+    entries get +1 applied by the applier.
+    """
+
+    site_id: str                  # e.g. "stack/pos0:ffn"
+    kind: str                     # ffn | moe_ffn | heads | experts
+    block_path: str               # "stack/pos0" or "tail/3"
+    stacked: bool                 # True when leaves carry a leading layer axis
+    dim: int                      # current prunable dimension size
+    granularity: int              # minimal semantic prune unit
+    multiplicity: int             # number of subgraphs sharing this GEMM shape
+    unit_cols: int                # GEMM columns per prunable unit
+    param_axes: Tuple[Tuple[str, int], ...]
+    gemms: Tuple[GemmSpec, ...]
+    op_kind: str = "matmul"       # epilogue/op discriminator for task grouping
+
+    def with_dim(self, new_dim: int) -> "PruneSite":
+        """Site after pruning to ``new_dim`` units (GEMM shapes follow)."""
+        new_gemms = []
+        cols = new_dim * self.unit_cols
+        for g in self.gemms:
+            if g.prunable == "n":
+                new_gemms.append(dataclasses.replace(g, n=cols))
+            elif g.prunable == "k":
+                new_gemms.append(dataclasses.replace(g, k=cols))
+            else:
+                new_gemms.append(g)
+        return dataclasses.replace(self, dim=new_dim, gemms=tuple(new_gemms))
+
+
+def _block_sites(cfg: ModelConfig, kind: str, block_path: str, stacked: bool,
+                 mult: int) -> List[PruneSite]:
+    sites: List[PruneSite] = []
+    d = cfg.d_model
+    gated = layers.is_gated(cfg.activation)
+    # --- FFN / channel-mix / MoE ---
+    if kind == RWKV:
+        sites.append(PruneSite(
+            site_id=f"{block_path}:cmix", kind="ffn", block_path=block_path,
+            stacked=stacked, dim=cfg.d_ff, granularity=1, multiplicity=mult,
+            unit_cols=1,
+            param_axes=(("ffn/w_ck", 1), ("ffn/w_cv", 0)),
+            gemms=(GemmSpec("up", d, cfg.d_ff, "n"),
+                   GemmSpec("down", cfg.d_ff, d, "k")),
+            op_kind="matmul+relu2"))
+    elif cfg.n_experts > 0:
+        axes = [("ffn/w_up", 2), ("ffn/w_down", 1)]
+        gl = [GemmSpec("up", d, cfg.moe_d_ff, "n", batch=cfg.n_experts,
+                       m_scale=1.25 * cfg.top_k / cfg.n_experts),
+              GemmSpec("down", cfg.moe_d_ff, d, "k", batch=cfg.n_experts,
+                       m_scale=1.25 * cfg.top_k / cfg.n_experts)]
+        if gated:
+            axes.append(("ffn/w_gate", 2))
+            gl.append(GemmSpec("gate", d, cfg.moe_d_ff, "n",
+                               batch=cfg.n_experts,
+                               m_scale=1.25 * cfg.top_k / cfg.n_experts))
+        sites.append(PruneSite(
+            site_id=f"{block_path}:moe_ffn", kind="moe_ffn",
+            block_path=block_path, stacked=stacked, dim=cfg.moe_d_ff,
+            granularity=1, multiplicity=mult * cfg.n_experts,
+            unit_cols=1, param_axes=tuple(axes), gemms=tuple(gl),
+            op_kind=f"matmul+{cfg.activation}"))
+        sites.append(PruneSite(
+            site_id=f"{block_path}:experts", kind="experts",
+            block_path=block_path, stacked=stacked, dim=cfg.n_experts,
+            granularity=1, multiplicity=mult, unit_cols=1,
+            param_axes=(("ffn/w_up", 0), ("ffn/w_down", 0), ("ffn/router", 1))
+            + ((("ffn/w_gate", 0),) if gated else ()),
+            gemms=(GemmSpec("router", d, cfg.n_experts, "n"),),
+            op_kind="router"))
+    else:
+        axes = [("ffn/w_up", 1), ("ffn/w_down", 0)]
+        gl = [GemmSpec("up", d, cfg.d_ff, "n"),
+              GemmSpec("down", cfg.d_ff, d, "k")]
+        if gated:
+            axes.append(("ffn/w_gate", 1))
+            gl.append(GemmSpec("gate", d, cfg.d_ff, "n"))
+        sites.append(PruneSite(
+            site_id=f"{block_path}:ffn", kind="ffn", block_path=block_path,
+            stacked=stacked, dim=cfg.d_ff, granularity=1, multiplicity=mult,
+            unit_cols=1, param_axes=tuple(axes), gemms=tuple(gl),
+            op_kind=f"matmul+{cfg.activation}"))
+    # --- attention heads ---
+    if kind in (ATTN, LOCAL_ATTN) and cfg.n_heads > cfg.n_kv_heads:
+        axes = [("mixer/wq", 1), ("mixer/wo", 0)]
+        if cfg.qkv_bias:
+            axes.append(("mixer/bq", 0))
+        hd = cfg.head_dim
+        sites.append(PruneSite(
+            site_id=f"{block_path}:heads", kind="heads", block_path=block_path,
+            stacked=stacked, dim=cfg.n_heads,
+            granularity=cfg.n_kv_heads,      # keep q-per-kv uniform
+            multiplicity=mult, unit_cols=hd,
+            param_axes=tuple(axes),
+            gemms=(GemmSpec("q", d, cfg.n_heads * hd, "n"),
+                   GemmSpec("o", cfg.n_heads * hd, d, "k")),
+            op_kind="matmul"))
+    return sites
+
+
+def prune_sites(cfg: ModelConfig) -> List[PruneSite]:
+    pattern = cfg.block_pattern
+    P = len(pattern)
+    n_p = cfg.n_layers // P
+    tail_kinds = cfg.layer_kinds()[n_p * P:]
+    out: List[PruneSite] = []
+    for pos, kind in enumerate(pattern):
+        if n_p > 0:
+            out.extend(_block_sites(cfg, kind, f"stack/pos{pos}", True, n_p))
+    for i, kind in enumerate(tail_kinds):
+        out.extend(_block_sites(cfg, kind, f"tail/{i}", False, 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Positions (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _mrope_grid(cfg) -> int:
+    return int(round(math.sqrt(max(cfg.frontend_seq, 1))))
+
+
+def make_positions(cfg: ModelConfig, seq_len: int):
+    """Train/prefill position stream(s). (S,) for rope, (3, S) for mrope."""
+    if cfg.rope == "mrope":
+        F = cfg.frontend_seq
+        g = _mrope_grid(cfg)
+        i = jnp.arange(seq_len, dtype=jnp.int32)
+        vis = i < F
+        text = i - F + g
+        t = jnp.where(vis, 0, text)
+        h = jnp.where(vis, (i // max(g, 1)) % max(g, 1), text)
+        w = jnp.where(vis, i % max(g, 1), text)
+        return jnp.stack([t, h, w])
+    return jnp.arange(seq_len, dtype=jnp.int32)
+
+
+def decode_positions(cfg: ModelConfig, pos: jax.Array):
+    if cfg.rope == "mrope":
+        g = _mrope_grid(cfg)
+        text = (pos - cfg.frontend_seq + g).astype(jnp.int32)
+        return jnp.broadcast_to(text, (3, 1))
+    return pos[None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+def _dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = _dtype_of(cfg)
+    pattern = cfg.block_pattern
+    P = len(pattern)
+    n_p = cfg.n_layers // P
+    tail_kinds = cfg.layer_kinds()[n_p * P:]
+
+    k_embed, k_head, k_stack, k_tail = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": layers.dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                                   dtype, fan_in=cfg.d_model),
+        "final_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), dtype)
+
+    stack: Dict[str, Any] = {}
+    for pos, kind in enumerate(pattern):
+        if n_p == 0:
+            break
+        keys = jax.random.split(jax.random.fold_in(k_stack, pos), n_p)
+        per_layer = [blocks.init_block_params(keys[i], kind, cfg, dtype)
+                     for i in range(n_p)]
+        stack[f"pos{pos}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    params["stack"] = stack
+
+    tail: Dict[str, Any] = {}
+    for i, kind in enumerate(tail_kinds):
+        tail[str(i)] = blocks.init_block_params(
+            jax.random.fold_in(k_tail, i), kind, cfg, dtype)
+    params["tail"] = tail
+    return params
+
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+class Model:
+    """Functional model wrapper bound to a config."""
+
+    def __init__(self, cfg: ModelConfig, shard_fn=None, gather_fn=None):
+        self.cfg = cfg
+        self.pattern = cfg.block_pattern
+        self.P = len(self.pattern)
+        self.n_periods = cfg.n_layers // self.P
+        self.tail_kinds = cfg.layer_kinds()[self.n_periods * self.P:]
+        # optional residual-stream sharding constraint (set by launch/)
+        self.shard_fn = shard_fn or (lambda x: x)
+        # optional ZeRO-3 per-layer weight gathering (set by launch/)
+        self.gather_fn = gather_fn or (lambda p: p)
+
+    # -- embedding / head ---------------------------------------------------
+
+    def embed(self, params, tokens: jax.Array) -> jax.Array:
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def unembed(self, params, x: jax.Array) -> jax.Array:
+        # gather the (small) head weight over the data axes so the
+        # contraction dim d is unsharded — otherwise GSPMD all-gathers the
+        # (tokens x d) activations per CE chunk (EXPERIMENTS.md §Perf)
+        if self.cfg.tie_embeddings:
+            w = self.gather_fn({"embed": params["embed"]})["embed"]
+            logits = jnp.einsum("...d,vd->...v", x, w)
+        else:
+            w = self.gather_fn({"lm_head": params["lm_head"]})["lm_head"]
+            logits = jnp.einsum("...d,dv->...v", x, w)
+        return layers.softcap(logits, self.cfg.logits_softcap)
+
+    def _input_x(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            return batch["frames"].astype(_dtype_of(cfg))
+        x = self.embed(params, batch["tokens"])
+        if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+            F = batch["patch_embeds"].shape[1]
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(x.dtype), x[:, F:]], axis=1)
+        return x
+
+    # -- train forward ------------------------------------------------------
+
+    def backbone_train(self, params, x: jax.Array, positions
+                       ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+
+        if self.n_periods > 0:
+            def body(carry, p_params):
+                x, aux = carry
+                for pos, kind in enumerate(self.pattern):
+                    bp = self.gather_fn(p_params[f"pos{pos}"])
+                    x, a = blocks.apply_block_train(
+                        kind, bp, x, cfg, positions)
+                    aux = aux + a
+                return (self.shard_fn(x), aux), None
+            body = _remat_wrap(body, cfg)
+            (x, aux_total), _ = jax.lax.scan(
+                body, (self.shard_fn(x), aux_total), params["stack"])
+
+        for i, kind in enumerate(self.tail_kinds):
+            x, a = blocks.apply_block_train(
+                kind, self.gather_fn(params["tail"][str(i)]), x, cfg,
+                positions)
+            x = self.shard_fn(x)
+            aux_total = aux_total + a
+
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        return x, aux_total
+
+    def loss_fn(self, params, batch: Dict[str, jax.Array], *,
+                vocab_chunk: int = 0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Causal LM (or masked-prediction for encoder-only) loss + metrics."""
+        cfg = self.cfg
+        x = self._input_x(params, batch)
+        positions = make_positions(cfg, x.shape[1])
+        x, aux = self.backbone_train(params, x, positions)
+
+        if cfg.is_encoder_only:
+            labels = batch["labels"]
+            mask = batch["mask"].astype(jnp.float32)
+        else:
+            tokens = batch["tokens"]
+            labels = jnp.concatenate(
+                [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+            mask = jnp.concatenate(
+                [jnp.ones_like(tokens[:, 1:], jnp.float32),
+                 jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+            if "loss_mask" in batch:
+                mask = mask * batch["loss_mask"].astype(jnp.float32)
+
+        ce, acc = _chunked_ce(self, params, x, labels, mask,
+                              chunk=vocab_chunk)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux, "acc": acc}
+
+    # -- prefill ------------------------------------------------------------
+
+    def prefill(self, params, batch: Dict[str, jax.Array], max_seq: int):
+        """Run the full prompt; returns (last-position logits, caches)."""
+        cfg = self.cfg
+        x = self._input_x(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = make_positions(cfg, S)
+        caches_stack: Dict[str, Any] = {}
+
+        if self.n_periods > 0:
+            def body(x, p_params):
+                new_c = {}
+                for pos, kind in enumerate(self.pattern):
+                    bp = self.gather_fn(p_params[f"pos{pos}"])
+                    x, c, _ = blocks.apply_block_prefill(
+                        kind, bp, x, cfg, positions, max_seq)
+                    new_c[f"pos{pos}"] = c
+                return self.shard_fn(x), new_c
+            x, caches_stack = jax.lax.scan(body, x, params["stack"])
+
+        caches_tail: Dict[str, Any] = {}
+        for i, kind in enumerate(self.tail_kinds):
+            x, c, _ = blocks.apply_block_prefill(
+                kind, self.gather_fn(params["tail"][str(i)]), x, cfg,
+                positions, max_seq)
+            caches_tail[str(i)] = c
+
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = self.unembed(params, x[:, -1:])
+        caches = {"stack": caches_stack, "tail": caches_tail,
+                  "pos": jnp.int32(S)}
+        return logits, caches
+
+    def init_caches(self, batch_size: int, max_seq: int) -> Dict[str, Any]:
+        """Empty caches for pure-decode lowering (dry-run decode cells)."""
+        cfg = self.cfg
+        dtype = _dtype_of(cfg)
+        stack: Dict[str, Any] = {}
+        if self.n_periods > 0:
+            for pos, kind in enumerate(self.pattern):
+                one = blocks.init_block_cache(kind, cfg, batch_size, max_seq,
+                                              dtype)
+                stack[f"pos{pos}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (self.n_periods,) + a.shape), one)
+        tail = {str(i): blocks.init_block_cache(k, cfg, batch_size, max_seq,
+                                                dtype)
+                for i, k in enumerate(self.tail_kinds)}
+        return {"stack": stack, "tail": tail, "pos": jnp.int32(0)}
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_step(self, params, token: jax.Array, caches: Dict[str, Any]
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """token: (B, 1) int32 (or (B,1,d) frames). Returns (logits, caches)."""
+        cfg = self.cfg
+        pos = caches["pos"]
+        positions = decode_positions(cfg, pos)
+        if token.ndim == 2:
+            x = self.embed(params, token)
+        else:
+            x = token.astype(_dtype_of(cfg))
+
+        new_stack: Dict[str, Any] = {}
+        if self.n_periods > 0:
+            def body(x, inp):
+                p_params, p_cache = inp
+                new_c = {}
+                for p, kind in enumerate(self.pattern):
+                    bp = self.gather_fn(p_params[f"pos{p}"])
+                    x, c = blocks.apply_block_decode(
+                        kind, bp, x, p_cache[f"pos{p}"],
+                        cfg, pos, positions)
+                    new_c[f"pos{p}"] = c
+                return x, new_c
+            x, new_stack = jax.lax.scan(
+                body, x, (params["stack"], caches["stack"]))
+
+        new_tail: Dict[str, Any] = {}
+        for i, kind in enumerate(self.tail_kinds):
+            x, c = blocks.apply_block_decode(
+                kind, params["tail"][str(i)], x, caches["tail"][str(i)],
+                cfg, pos, positions)
+            new_tail[str(i)] = c
+
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = self.unembed(params, x)
+        return logits, {"stack": new_stack, "tail": new_tail, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes full (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+def _chunked_ce(model: Model, params, x: jax.Array, labels: jax.Array,
+                mask: jax.Array, chunk: int = 0
+                ) -> Tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    if chunk <= 0:
+        chunk = S if S <= 512 else 512
+    n = S // chunk if S % chunk == 0 else None
+    if n is None:                       # ragged: fall back to single shot
+        logits = model.unembed(params, x).astype(jnp.float32)
+        return _ce_from_logits(logits, labels, mask)
+
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt, correct = carry
+        xi, li, mi = inp
+        # chunk stays batch-sharded only; the model axis carries the vocab
+        # shard of the head (seq-sharding here would force GSPMD to gather
+        # the whole residual per chunk — see EXPERIMENTS.md §Perf)
+        from repro.sharding.logical import constrain as _constrain
+        xi = _constrain(xi, ("batch", None, None))
+        logits = model.unembed(params, xi).astype(jnp.float32)
+        logits = _constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, li[..., None].astype(jnp.int32),
+                                     axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - picked) * mi)
+        cnt = cnt + jnp.sum(mi)
+        hit = (jnp.argmax(logits, axis=-1) == li).astype(jnp.float32)
+        correct = correct + jnp.sum(hit * mi)
+        return (tot, cnt, correct), None
+
+    (tot, cnt, correct), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)),
+        (xc, lc, mc))
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, correct / cnt
+
+
+def _ce_from_logits(logits, labels, mask):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    ce = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    acc = jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, acc

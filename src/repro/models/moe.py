@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch strategy (XLA/GSPMD-friendly, memory O(E · C · d)):
+  1. router logits -> top-k experts per token, softmax over the chosen k.
+  2. each (token, k) assignment gets a *rank* within its expert via a
+     cumulative count; assignments whose rank exceeds the expert capacity
+     ``C = ceil(cf · T · k / E)`` are dropped (standard GShard semantics).
+  3. tokens are scattered into an (E, C, d) buffer, expert FFNs run as one
+     batched einsum over E, results gather back weighted by the gate.
+
+FLOPs scale with E·C·d·ff ≈ cf · T · k · d · ff — i.e. with *active* params,
+which is what the roofline's 6·N_active·D model expects.
+
+The Pallas grouped-GEMM kernel (repro/kernels/moe_gmm.py) is the TPU hot
+path for the expert einsum; this module is the XLA-lowerable reference.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.logical import constrain
+
+CAPACITY_FACTOR = 1.25
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int,
+                    cf: float = CAPACITY_FACTOR) -> int:
+    c = int(math.ceil(cf * n_tokens * top_k / n_experts))
+    return max(8, min(c, n_tokens))
+
+
+def route(router_w: jax.Array, x: jax.Array, top_k: int
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (T, d). Returns (gates (T,k) fp32, expert_idx (T,k) int32, logits)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    gate_vals, idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    return gates, idx.astype(jnp.int32), logits
+
+
+def load_balancing_loss(logits: jax.Array, idx: jax.Array, n_experts: int
+                        ) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    onehot = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
+    f = jnp.mean(onehot, axis=0)
+    p = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg, *,
+            capacity_factor: Optional[float] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Dispatch is *local per batch row* (capacity = ceil(cf·S·K/E) per
+    sequence): the rank cumsum runs along S inside each row, never across
+    the data-sharded batch dim. A global-token dispatch forces a
+    cross-device prefix sum + activation all-reduce per layer — measured
+    84 s/step of all-reduce on mixtral train_4k (EXPERIMENTS.md §Perf);
+    per-row dispatch keeps all routing local to the shard, which is how
+    per-device capacity works on a real cluster anyway.
+    """
+    B, S, d = x.shape
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_cf", CAPACITY_FACTOR)
+    # E read from params (not cfg) so expert pruning needs no config edits
+    E = params["router"].shape[-1]
+    K = min(cfg.top_k, E)
+
+    gates, idx, logits = route(params["router"], x.reshape(B * S, d), K)
+    aux = load_balancing_loss(logits, idx, E)
+    gates = gates.reshape(B, S, K)
+    idx = idx.reshape(B, S, K)
+
+    C = expert_capacity(S, E, K, capacity_factor)
+    flat_e = idx.reshape(B, S * K)                              # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (B, S*K, E)
+    ranks = jnp.cumsum(onehot, axis=1) - onehot                 # exclusive
+    rank = jnp.take_along_axis(ranks, flat_e[..., None],
+                               axis=2)[..., 0]                  # (B, S*K)
+    keep = rank < C
+
+    # scatter tokens into (B, E, C, d); dropped assignments hit a dump slot.
+    # vmap over batch (instead of explicit batch indices) lowers to
+    # gather/scatter with *batching dims*, which GSPMD partitions locally —
+    # explicit b_idx coordinates force it to all-gather the whole batch
+    # (3.2 GB/layer on mixtral train_4k, EXPERIMENTS.md §Perf).
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_r = jnp.where(keep, rank, C)
+    x_rep = jnp.repeat(x, K, axis=1)                            # (B, S*K, d)
+    x_rep = jnp.where(keep[..., None], x_rep, 0)
+    buf = jnp.zeros((B, E, C + 1, d), x.dtype)
+    buf = jax.vmap(lambda bb, ee, rr, xx: bb.at[ee, rr].add(xx))(
+        buf, safe_e, safe_r, x_rep)
+    buf = buf[:, :, :C]                                         # (B, E, C, d)
+    buf = constrain(buf, ("batch", "expert", None, None))
+
+    # expert FFN (batched over B, E)
+    act = layers.activation_fn(cfg.activation)
+    if layers.is_gated(cfg.activation):
+        h = act(jnp.einsum("becd,edf->becf", buf, params["w_gate"])) * \
+            jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    else:
+        h = act(jnp.einsum("becd,edf->becf", buf, params["w_up"]))
+    h = constrain(h, ("batch", "expert", None, "mlp"))
+    out_e = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out_e = constrain(out_e, ("batch", "expert", None, None))
+
+    # gather back: each assignment reads its slot, weighted by its gate
+    out_e = jnp.pad(out_e, ((0, 0), (0, 0), (0, 1), (0, 0)))    # dump = 0
+    picked = jax.vmap(lambda oe, ee, rr: oe[ee, rr])(
+        out_e, safe_e, safe_r)                                  # (B, S*K, d)
+    picked = jnp.where(keep[..., None], picked, 0)
+    w = gates.reshape(B, S * K, 1).astype(picked.dtype)
+    out = jnp.sum((picked * w).reshape(B, S, K, d), axis=2)
+    return out, aux
+
+
+def init_moe_params(key, cfg, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": layers.dense_init(ks[0], (d, E), jnp.float32),
+        "w_up": layers.dense_init(ks[1], (E, d, ff), dtype, fan_in=d),
+        "w_down": layers.dense_init(ks[2], (E, ff, d), dtype, fan_in=ff),
+    }
+    if layers.is_gated(cfg.activation):
+        p["w_gate"] = layers.dense_init(ks[3], (E, d, ff), dtype, fan_in=d)
+    return p

@@ -1,0 +1,177 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel, fp32):
+    r_t = sigmoid(W_a h_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_i h_t + b_i)          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    s_t = a_t * s_{t-1} + sqrt(1 - a_t^2) * (i_t * h_t)
+
+Train/prefill uses ``lax.associative_scan`` (parallel over seq); decode is a
+single-step update. The block wraps the recurrence Griffin-style:
+    out = W_out( gelu(W_gate x) * RGLRU(conv1d(W_x x)) )
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    s: jax.Array      # (B, width) recurrent state, fp32
+    conv: jax.Array   # (B, conv_width - 1, width) trailing conv inputs
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int) -> RGLRUState:
+    return RGLRUState(
+        s=jnp.zeros((batch, width), jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, width), jnp.float32),
+    )
+
+
+def _block_linear(w: jax.Array, h: jax.Array) -> jax.Array:
+    """Block-diagonal linear (RecurrentGemma's gate structure).
+
+    w: (nb, wb, wb); h: (..., nb*wb) -> (..., nb*wb).
+    """
+    nb, wb, _ = w.shape
+    hb = h.reshape(h.shape[:-1] + (nb, wb))
+    out = jnp.einsum("...ni,nij->...nj", hb, w)
+    return out.reshape(h.shape)
+
+
+def _gates(params: dict, h: jax.Array):
+    """h: (..., w) -> (a, beta_in) both fp32."""
+    hf = h.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_linear(params["w_a"].astype(jnp.float32), hf)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(params["w_i"].astype(jnp.float32), hf)
+                       + params["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * hf)
+    return a, beta
+
+
+def rglru_scan(params: dict, h: jax.Array, s0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Parallel linear recurrence. h: (B, S, w), s0: (B, w). Returns (y, s_last)."""
+    a, beta = _gates(params, h)   # (B, S, w) fp32
+    # Fold the initial state into the first step: s_1 = a_1 s_0 + beta_1.
+    beta = beta.at[:, 0].add(a[:, 0] * s0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, y = jax.lax.associative_scan(combine, (a, beta), axis=1)
+    return y.astype(h.dtype), y[:, -1]
+
+
+def rglru_step(params: dict, h: jax.Array, s: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token step. h: (B, w), s: (B, w) fp32."""
+    a, beta = _gates(params, h)
+    s_new = a * s + beta
+    return s_new.astype(h.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width cw, per-channel)
+# ---------------------------------------------------------------------------
+
+def conv1d_causal(params: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, w). Depthwise causal conv of width cw."""
+    w = params["conv_w"].astype(jnp.float32)     # (cw, width)
+    cw = w.shape[0]
+    xf = x.astype(jnp.float32)
+    out = xf * w[cw - 1]
+    for i in range(1, cw):
+        shifted = jnp.pad(xf, ((0, 0), (i, 0), (0, 0)))[:, : xf.shape[1]]
+        out = out + shifted * w[cw - 1 - i]
+    out = out + params["conv_b"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv1d_step(params: dict, x: jax.Array, conv_state: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, w) one token; conv_state: (B, cw-1, w) trailing inputs."""
+    w = params["conv_w"].astype(jnp.float32)
+    cw = w.shape[0]
+    xf = x.astype(jnp.float32)
+    window = jnp.concatenate([conv_state, xf[:, None]], axis=1)  # (B, cw, w)
+    out = jnp.einsum("bcw,cw->bw", window, w) + params["conv_b"].astype(jnp.float32)
+    new_state = window[:, 1:]
+    return out.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# The full recurrent block
+# ---------------------------------------------------------------------------
+
+def rglru_block(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """Train/prefill path. x: (B, S, d) -> (B, S, d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"]))
+    h = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    h = conv1d_causal(params, h)
+    B = x.shape[0]
+    s0 = jnp.zeros((B, h.shape[-1]), jnp.float32)
+    y, _ = rglru_scan(params, h, s0)
+    return jnp.einsum("bsw,wd->bsd", gate * y, params["w_out"])
+
+
+def rglru_block_prefill(params: dict, x: jax.Array, cfg
+                        ) -> Tuple[jax.Array, RGLRUState]:
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"]))
+    h_in = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    h = conv1d_causal(params, h_in)
+    B, S, W = h.shape
+    cw = params["conv_w"].shape[0]
+    s0 = jnp.zeros((B, W), jnp.float32)
+    y, s_last = rglru_scan(params, h, s0)
+    out = jnp.einsum("bsw,wd->bsd", gate * y, params["w_out"])
+    # trailing conv inputs (pre-conv h_in), padded if S < cw-1
+    tail = h_in.astype(jnp.float32)
+    if S >= cw - 1:
+        conv_tail = tail[:, S - (cw - 1):]
+    else:
+        conv_tail = jnp.pad(tail, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+    return out, RGLRUState(s=s_last, conv=conv_tail)
+
+
+def rglru_block_step(params: dict, x: jax.Array, state: RGLRUState, cfg
+                     ) -> Tuple[jax.Array, RGLRUState]:
+    """Decode path. x: (B, 1, d)."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate"])
+    h_in = xt @ params["w_x"]
+    h, conv_new = conv1d_step(params, h_in, state.conv)
+    y, s_new = rglru_step(params, h, state.s)
+    out = (gate * y) @ params["w_out"]
+    return out[:, None], RGLRUState(s=s_new, conv=conv_new)
+
+
+def init_rglru_params(key, cfg, dtype) -> dict:
+    d, w, cw = cfg.d_model, cfg.rglru_width, cfg.conv1d_width
+    nb = max(1, cfg.n_heads)     # block-diagonal gate blocks (RecurrentGemma)
+    wb = w // nb
+    ks = jax.random.split(key, 6)
+    lam_init = jax.random.uniform(ks[5], (w,), jnp.float32, 0.0, 1.0)
+    # Lambda such that a^c ~ uniform(0.9, 0.999) at r=1 (Griffin init)
+    lam = jnp.log(jnp.expm1(-jnp.log(0.9 + 0.099 * lam_init) / _C))
+    return {
+        "w_x": layers.dense_init(ks[0], (d, w), dtype),
+        "w_gate": layers.dense_init(ks[1], (d, w), dtype),
+        "w_out": layers.dense_init(ks[2], (w, d), dtype, fan_in=w),
+        "w_a": layers.dense_init(ks[3], (nb, wb, wb), dtype, fan_in=wb),
+        "w_i": layers.dense_init(ks[4], (nb, wb, wb), dtype, fan_in=wb),
+        "b_a": jnp.zeros((w,), dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "conv_w": jnp.zeros((cw, w), dtype).at[cw - 1].set(1.0),
+        "conv_b": jnp.zeros((w,), dtype),
+    }

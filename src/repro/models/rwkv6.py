@@ -1,0 +1,224 @@
+"""RWKV-6 "Finch" block: data-dependent token-shift + decay WKV recurrence.
+
+Time-mix (per layer, H heads of size D):
+    sx_t   = x_{t-1} - x_t                           (token shift delta)
+    xxx    = x + sx * mu_x
+    deltas = tanh(xxx @ tm_w1) reshaped (5, 32) @ tm_w2   -> per-channel lerp
+    x{w,k,v,r,g} = x + sx * (mu_{w,k,v,r,g} + delta_{...})
+    r,k,v,g = projections; w = exp(-exp(w0 + tanh(xw @ td_w1) @ td_w2))
+    WKV:   o_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    out    = W_o( group_norm_heads(o) * silu(g) )
+
+Channel-mix:
+    k  = relu(x_k @ W_ck)^2 ; out = sigmoid(x_r @ W_cr) * (k @ W_cv)
+
+The sequential WKV here is the numerical oracle; the Pallas chunked kernel
+lives in repro/kernels/rwkv6_scan.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_LORA_TM = 32    # token-shift LoRA rank
+_LORA_TD = 64    # decay LoRA rank
+
+
+class RWKVState(NamedTuple):
+    tm_x: jax.Array    # (B, d)   last input of time-mix
+    wkv: jax.Array     # (B, H, D, D) recurrent state, fp32
+    cm_x: jax.Array    # (B, d)   last input of channel-mix
+
+
+def init_rwkv_state(batch: int, d_model: int, n_heads: int, head_dim: int
+                    ) -> RWKVState:
+    return RWKVState(
+        tm_x=jnp.zeros((batch, d_model), jnp.float32),
+        wkv=jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        cm_x=jnp.zeros((batch, d_model), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array, *, chunk: int = 64
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential WKV. r,k,v,w: (B, S, H, D); u: (H, D); s0: (B, H, D, D).
+
+    Returns (o: (B, S, H, D), s_last).
+
+    Chunked-remat: a naive scan+autodiff saves the (B, H, D, D) state for
+    EVERY timestep (S x state — 34 GB/device for the 1.6B at 4k seq). We
+    scan over S/chunk chunks and jax.checkpoint the inner scan, so only
+    chunk-boundary states are saved and in-chunk states are recomputed in
+    the backward pass — activation traffic drops by ~chunk x for ~1 extra
+    in-chunk forward (§Perf iteration log in EXPERIMENTS.md).
+    """
+    B, S, H, D = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                        # (B, H, D) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)    # (B, H, D, D)
+        o = jnp.einsum("bhi,bhij->bhj", rt, s + uf[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, o
+
+    if S % chunk != 0 or S <= chunk:
+        xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rf, kf, vf, wf))
+        s_last, o = jax.lax.scan(step, s0, xs)
+        return jnp.swapaxes(o, 0, 1).astype(r.dtype), s_last
+
+    n_chunks = S // chunk
+    # (n_chunks, chunk, B, H, D)
+    xs = tuple(jnp.swapaxes(a, 0, 1).reshape(n_chunks, chunk, B, H, D)
+               for a in (rf, kf, vf, wf))
+
+    @jax.checkpoint
+    def chunk_step(s, inp):
+        s_new, o = jax.lax.scan(step, s, inp)
+        return s_new, o
+
+    s_last, o = jax.lax.scan(chunk_step, s0, xs)
+    o = o.reshape(S, B, H, D)
+    return jnp.swapaxes(o, 0, 1).astype(r.dtype), s_last
+
+
+def wkv_step(r, k, v, w, u, s):
+    """Single token. r,k,v,w: (B, H, D); s: (B, H, D, D) fp32."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    o = jnp.einsum("bhi,bhij->bhj", rf, s + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = wf[..., None] * s + kv
+    return o.astype(r.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# Token shift + projections
+# ---------------------------------------------------------------------------
+
+def _ddlerp(params: dict, x: jax.Array, sx: jax.Array):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    xxx = x + sx * params["mu_x"]
+    B = x.shape[:-1]
+    lora = jnp.tanh(xxx.astype(jnp.float32) @ params["tm_w1"].astype(jnp.float32))
+    lora = lora.reshape(B + (5, _LORA_TM))
+    deltas = jnp.einsum("...nk,nkd->...nd", lora, params["tm_w2"].astype(jnp.float32))
+    mus = jnp.stack([params["mu_w"], params["mu_k"], params["mu_v"],
+                     params["mu_r"], params["mu_g"]]).astype(jnp.float32)
+    mixed = x[..., None, :] + sx[..., None, :] * (mus + deltas).astype(x.dtype)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _time_mix_core(params: dict, x, sx, cfg):
+    """Shared by scan and step paths. x, sx: (..., d)."""
+    H, D = x.shape[-1] // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xw, xk, xv, xr, xg = _ddlerp(params, x, sx)
+    shp = x.shape[:-1] + (H, D)
+    r = (xr @ params["w_r"]).reshape(shp)
+    k = (xk @ params["w_k"]).reshape(shp)
+    v = (xv @ params["w_v"]).reshape(shp)
+    g = jax.nn.silu(xg @ params["w_g"])
+    wlog = params["w0"].astype(jnp.float32).reshape(H, D) + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["td_w1"].astype(jnp.float32))
+        @ params["td_w2"].astype(jnp.float32)
+    ).reshape(shp)
+    w = jnp.exp(-jnp.exp(jnp.clip(wlog, -50.0, 10.0)))
+    return r, k, v, g, w.astype(jnp.float32)
+
+
+def time_mix(params: dict, x: jax.Array, cfg, s0=None, x_prev0=None):
+    """Train/prefill time-mix. x: (B, S, d). Returns (out, (x_last, s_last))."""
+    B, S, d = x.shape
+    H, D = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    if x_prev0 is None:
+        x_prev0 = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev0[:, None], x[:, :-1]], axis=1)
+    sx = x_prev - x
+    r, k, v, g, w = _time_mix_core(params, x, sx, cfg)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    o, s_last = wkv_scan(r, k, v, w, params["u"], s0)
+    o = layers.group_norm_heads(o, params["gn_scale"].reshape(H, D),
+                                params["gn_bias"].reshape(H, D))
+    out = (o.reshape(B, S, d) * g) @ params["w_o"]
+    return out, (x[:, -1].astype(jnp.float32), s_last)
+
+
+def time_mix_step(params: dict, x: jax.Array, state_x, state_s, cfg):
+    """Decode time-mix. x: (B, d)."""
+    B, d = x.shape
+    H, D = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    sx = state_x.astype(x.dtype) - x
+    r, k, v, g, w = _time_mix_core(params, x, sx, cfg)
+    o, s_new = wkv_step(r, k, v, w, params["u"], state_s)
+    o = layers.group_norm_heads(o, params["gn_scale"].reshape(H, D),
+                                params["gn_bias"].reshape(H, D))
+    out = (o.reshape(B, d) * g) @ params["w_o"]
+    return out, (x.astype(jnp.float32), s_new)
+
+
+def channel_mix(params: dict, x: jax.Array, x_prev0=None):
+    """Train/prefill channel-mix. x: (B, S, d)."""
+    B, S, d = x.shape
+    if x_prev0 is None:
+        x_prev0 = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev0[:, None], x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xk = x + sx * params["cm_mu_k"]
+    xr = x + sx * params["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ params["w_ck"]))
+    out = jax.nn.sigmoid(xr @ params["w_cr"]) * (kk @ params["w_cv"])
+    return out, x[:, -1].astype(jnp.float32)
+
+
+def channel_mix_step(params: dict, x: jax.Array, state_x):
+    sx = state_x.astype(x.dtype) - x
+    xk = x + sx * params["cm_mu_k"]
+    xr = x + sx * params["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ params["w_ck"]))
+    out = jax.nn.sigmoid(xr @ params["w_cr"]) * (kk @ params["w_cv"])
+    return out, x.astype(jnp.float32)
+
+
+def init_rwkv_params(key, cfg, dtype) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    H = d // cfg.rwkv_head_dim
+    D = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    zeros_d = jnp.zeros((d,), dtype)
+    return {
+        # token-shift mixing
+        "mu_x": zeros_d, "mu_w": zeros_d, "mu_k": zeros_d,
+        "mu_v": zeros_d, "mu_r": zeros_d, "mu_g": zeros_d,
+        "tm_w1": layers.dense_init(ks[0], (d, 5 * _LORA_TM), dtype),
+        "tm_w2": (jax.random.normal(ks[1], (5, _LORA_TM, d), jnp.float32)
+                  * 0.01).astype(dtype),
+        # decay
+        "w0": (jnp.linspace(-6.0, -0.5, d)).astype(jnp.float32),
+        "td_w1": layers.dense_init(ks[2], (d, _LORA_TD), dtype),
+        "td_w2": (jax.random.normal(ks[3], (_LORA_TD, d), jnp.float32)
+                  * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[4], (H, D), jnp.float32) * 0.1),
+        # projections
+        "w_r": layers.dense_init(ks[5], (d, d), dtype),
+        "w_k": layers.dense_init(ks[6], (d, d), dtype),
+        "w_v": layers.dense_init(ks[7], (d, d), dtype),
+        "w_g": layers.dense_init(ks[8], (d, d), dtype),
+        "w_o": layers.dense_init(ks[9], (d, d), dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+        # channel-mix
+        "cm_mu_k": zeros_d, "cm_mu_r": zeros_d,
+        "w_ck": layers.dense_init(ks[10], (d, dff), dtype),
+        "w_cv": layers.dense_init(ks[11], (dff, d), dtype, fan_in=dff),
+        "w_cr": layers.dense_init(jax.random.fold_in(key, 99), (d, d), dtype),
+    }

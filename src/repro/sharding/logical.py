@@ -1,0 +1,63 @@
+"""Logical-axis sharding constraints (MaxText-style).
+
+Model code calls ``constrain(x, ("batch", "seq", None))`` with *logical*
+names; the launcher activates a rule set mapping logical names to mesh
+axes. Outside an active rule set the call is a no-op, so models run
+unmodified on a single device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _active():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def set_rules(mesh: Mesh, rules: Dict[str, Union[str, Tuple[str, ...], None]]):
+    """Activate logical->mesh axis rules for the enclosed trace."""
+    prev = _active()
+    _state.rules = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def resolve(names: Sequence[Optional[str]], shape=None) -> Optional[P]:
+    active = _active()
+    if active is None:
+        return None
+    mesh, rules = active
+    axes = []
+    for i, n in enumerate(names):
+        ax = rules.get(n) if n is not None else None
+        if ax is not None and shape is not None:
+            sizes = mesh.shape
+            total = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                total *= sizes[a]
+            if shape[i] % total != 0:
+                ax = None            # non-divisible: drop the constraint
+        axes.append(ax)
+    return P(*axes)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without active rules)."""
+    active = _active()
+    if active is None:
+        return x
+    mesh, _ = active
+    spec = resolve(names, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,247 @@
+"""Parameter / batch / cache PartitionSpecs for the production meshes.
+
+Strategy (per DESIGN.md §5):
+  * weights: tensor-parallel over ``model`` on heads / d_ff / vocab, and
+    FSDP-style fully-sharded over the data axes on the complementary dim —
+    a 110B-param arch must fit 16 GB/chip including optimizer state.
+  * batch dims over the data axes (``('pod','data')`` on the multi-pod mesh).
+  * decode KV caches: batch over data, sequence dim over ``model``
+    (sequence-parallel KV), recurrent states: width/heads over ``model``.
+
+Every rule degrades gracefully: a mesh axis is dropped for a dim it does
+not divide (e.g. 12 heads on a 16-way model axis -> heads replicated, the
+d_ff rule still shards the FFN).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
+
+Axis = Optional[Any]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# Trailing-dim rules: leaf-name -> spec for the LAST len(spec) dims.
+# Leading dims (layer stacks, expert dims handled explicitly) replicate.
+def _rules(DATA) -> Dict[str, Tuple[Axis, ...]]:
+    return {
+        # embeddings
+        "embed": ("model", DATA),
+        "lm_head": (DATA, "model"),
+        # attention
+        "wq": (DATA, "model", None),
+        "wk": (DATA, "model", None),
+        "wv": (DATA, "model", None),
+        "wo": ("model", None, DATA),
+        "bq": ("model", None),
+        "bk": ("model", None),
+        "bv": ("model", None),
+        # FFN / MoE (rank-2 dense or rank-3 expert-stacked; trailing match)
+        "w_up": (DATA, "model"),
+        "w_gate": (DATA, "model"),
+        "w_down": ("model", DATA),
+        "router": (DATA, None),
+        # RWKV
+        "w_r": (DATA, "model"),
+        "w_k": (DATA, "model"),
+        "w_v": (DATA, "model"),
+        "w_g": (DATA, "model"),
+        "w_o": ("model", DATA),
+        "w_ck": (DATA, "model"),
+        "w_cv": ("model", DATA),
+        "w_cr": (DATA, "model"),
+        "tm_w1": (DATA, None),
+        "tm_w2": (None, None, "model"),
+        "td_w1": (DATA, None),
+        "td_w2": (None, "model"),
+        "w0": ("model",),
+        # RG-LRU
+        "w_x": (DATA, "model"),
+        "w_out": ("model", DATA),
+        "w_a": ("model", None, None),
+        "w_i": ("model", None, None),
+        "lam": ("model",),
+        "b_a": ("model",),
+        "b_i": ("model",),
+        "conv_w": (None, "model"),
+        "conv_b": ("model",),
+    }
+
+
+def _fit(spec: Tuple[Axis, ...], shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Trailing-dim spec -> full-rank PartitionSpec, dropping non-divisible
+    axes."""
+    full: list = [None] * (len(shape) - len(spec)) + list(spec)
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if dim % total == 0 and dim >= total else None)
+    return P(*out)
+
+
+def fit_spec(trailing_spec: Tuple[Axis, ...], shape: Tuple[int, ...],
+             mesh: Mesh) -> P:
+    """Public helper: trailing-dim spec with divisibility fallback."""
+    return _fit(trailing_spec, shape, mesh)
+
+
+def param_pspecs(params, mesh: Mesh):
+    """PartitionSpec pytree matching the params pytree."""
+    DATA = data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+    rules = _rules(DATA)
+
+    def spec_for(path, leaf) -> P:
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        shape = np.shape(leaf)
+        rule = rules.get(name)
+        if rule is None or len(rule) > len(shape):
+            return P()
+        return _fit(rule, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings_of(pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(batch: Dict[str, Any], mesh: Mesh):
+    """Batch dims over the data axes; everything else replicated."""
+    DATA = data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+
+    def spec_for(leaf) -> P:
+        shape = np.shape(leaf)
+        if len(shape) == 0:
+            return P()
+        return _fit((DATA,) + (None,) * (len(shape) - 1), shape, mesh)
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_pspecs(model, caches, mesh: Mesh):
+    """Specs mirroring Model.init_caches structure (built semantically)."""
+    from repro.models.attention import KVCache
+    from repro.models.rglru import RGLRUState
+    from repro.models.rwkv6 import RWKVState
+
+    DATA = data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+
+    def kv_spec(cache: KVCache, stacked: bool) -> KVCache:
+        lead = (None,) if stacked else ()
+        return KVCache(
+            k=_fit(lead + (DATA, "model", None, None), _sh(cache.k), mesh),
+            v=_fit(lead + (DATA, "model", None, None), _sh(cache.v), mesh),
+            slot_pos=P(*((None,) * np.ndim(cache.slot_pos))),
+        )
+
+    def rg_spec(st: RGLRUState, stacked: bool) -> RGLRUState:
+        lead = (None,) if stacked else ()
+        return RGLRUState(
+            s=_fit(lead + (DATA, "model"), _sh(st.s), mesh),
+            conv=_fit(lead + (DATA, None, "model"), _sh(st.conv), mesh),
+        )
+
+    def rwkv_spec(st: RWKVState, stacked: bool) -> RWKVState:
+        lead = (None,) if stacked else ()
+        return RWKVState(
+            tm_x=_fit(lead + (DATA, "model"), _sh(st.tm_x), mesh),
+            wkv=_fit(lead + (DATA, "model", None, None), _sh(st.wkv), mesh),
+            cm_x=_fit(lead + (DATA, "model"), _sh(st.cm_x), mesh),
+        )
+
+    def _sh(x):
+        return np.shape(x)
+
+    def spec_one(c, stacked: bool):
+        if isinstance(c, KVCache):
+            return kv_spec(c, stacked)
+        if isinstance(c, RGLRUState):
+            return rg_spec(c, stacked)
+        if isinstance(c, RWKVState):
+            return rwkv_spec(c, stacked)
+        raise TypeError(type(c))
+
+    out = {"stack": {}, "tail": {}, "pos": P()}
+    for k, c in caches["stack"].items():
+        out["stack"][k] = spec_one(c, stacked=True)
+    for k, c in caches["tail"].items():
+        out["tail"][k] = spec_one(c, stacked=False)
+    return out
+
+
+def zero3_gather_fn(mesh: Mesh):
+    """ZeRO-3 weight gathering: inside the layer, constrain each weight to
+    its spec *minus the data axes* (keep tensor-parallel 'model' shards).
+
+    GSPMD then all-gathers a layer's FSDP weight shards right before use
+    (cheap: one layer's weights) instead of partial-summing activations
+    over the data-sharded contraction dim and all-reducing token-scaled
+    tensors (ruinously expensive at 1M tokens/step — see EXPERIMENTS.md
+    §Perf, mixtral train_4k).
+    """
+    DATA = data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+    rules = _rules(DATA)
+    data_set = {"pod", "data"}
+
+    def strip_data(ax):
+        if ax is None:
+            return None
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        kept = tuple(a for a in axes if a not in data_set)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    def gather(block_params):
+        def spec_for(path, leaf):
+            name = None
+            for entry in reversed(path):
+                if isinstance(entry, jax.tree_util.DictKey):
+                    name = str(entry.key)
+                    break
+            shape = np.shape(leaf)
+            rule = rules.get(name)
+            if rule is None or len(rule) > len(shape):
+                return leaf
+            spec = _fit(tuple(strip_data(a) for a in rule), shape, mesh)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+        return jax.tree_util.tree_map_with_path(spec_for, block_params)
+
+    return gather
+
+
+def logical_rules(mesh: Mesh, *, seq_shard: bool = True) -> Dict[str, Any]:
+    """Rules for sharding/logical.constrain calls inside model code."""
+    DATA = data_axes(mesh)
+    DATA = DATA if len(DATA) > 1 else (DATA[0] if DATA else None)
+    return {
+        "batch": DATA,
+        "seq": "model" if seq_shard else None,   # Megatron-SP residual
+        "embed": None,
+        "mlp": "model",
+        "expert": None,
+        "vocab": "model",
+        "heads": "model",
+    }

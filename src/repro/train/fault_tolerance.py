@@ -1,0 +1,148 @@
+"""Fault-tolerance runtime: crash recovery, straggler watch, grad compression.
+
+* ``resilient_loop`` — drives train steps with automatic restore-from-latest
+  checkpoint on failure (bounded retries). Failures are injectable for
+  tests (``FaultInjector``).
+* ``StragglerMonitor`` — per-step deadline watch: steps slower than
+  ``factor`` x rolling median are logged and counted; at scale the driver
+  uses this to trigger re-scheduling (here: surfaced as metrics + tested
+  with injected delays).
+* ``compress_grads`` / ``decompress_grads`` — int8 error-feedback gradient
+  compression for DCN-bound (cross-pod) reductions: quantize to int8 with
+  per-tensor scale, carry the residual to the next step. 4x wire-format
+  reduction on the pod axis all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Straggler monitoring
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    window: int = 32
+    _times: List[float] = dataclasses.field(default_factory=list)
+    stragglers: int = 0
+
+    def observe(self, seconds: float) -> bool:
+        """Returns True if this step was a straggler."""
+        is_straggler = False
+        if len(self._times) >= 5:
+            med = float(np.median(self._times[-self.window:]))
+            is_straggler = seconds > self.factor * med
+        self._times.append(seconds)
+        if is_straggler:
+            self.stragglers += 1
+        return is_straggler
+
+    @property
+    def median_s(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Deterministic failure injection for tests."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def resilient_loop(*, n_steps: int, state: Dict[str, Any],
+                   step_fn: Callable[[int, Dict[str, Any]], Dict[str, Any]],
+                   ckpt, ckpt_every: int = 10,
+                   max_restarts: int = 3,
+                   injector: Optional[FaultInjector] = None,
+                   monitor: Optional[StragglerMonitor] = None,
+                   start_step: int = 0) -> Tuple[Dict[str, Any], Dict]:
+    """Run ``step_fn`` n_steps times with checkpoint/restart semantics.
+
+    ``state`` must be a pytree dict; ``step_fn(step, state) -> state``.
+    Returns (final state, stats).
+    """
+    stats = {"restarts": 0, "stragglers": 0, "steps_run": 0}
+    step = start_step
+    restarts = 0
+    while step < n_steps:
+        try:
+            t0 = time.time()
+            if injector is not None:
+                injector.maybe_fail(step)
+            state = step_fn(step, state)
+            dt = time.time() - t0
+            if monitor is not None and monitor.observe(dt):
+                stats["stragglers"] += 1
+            stats["steps_run"] += 1
+            step += 1
+            if ckpt is not None and step % ckpt_every == 0:
+                ckpt.save(step, state, {"step": step})
+        except Exception:
+            restarts += 1
+            stats["restarts"] += 1
+            if restarts > max_restarts or ckpt is None:
+                raise
+            latest = ckpt.latest_step()
+            if latest is None:
+                step = start_step      # restart from scratch
+                continue
+            step, state, _ = ckpt.restore(state, latest)
+    if ckpt is not None:
+        ckpt.save(step, state, {"step": step}, block=True)
+        ckpt.wait()
+    return state, stats
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (error feedback int8)
+# ---------------------------------------------------------------------------
+
+def compress_grads(grads, residual=None):
+    """Quantize each leaf to int8 with per-tensor scale + error feedback.
+
+    Returns (q_grads {q, scale}, new_residual). Applying
+    ``decompress_grads`` and adding the returned residual next step makes
+    the scheme unbiased over time (Seide et al. / EF-SGD).
+    """
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+
+    def q_one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return {"q": q, "scale": scale}, new_r
+
+    flat = jax.tree.map(q_one, grads, residual)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 \
+        and isinstance(x[0], dict)
+    qg = jax.tree.map(lambda t: t[0], flat, is_leaf=is_pair)
+    new_res = jax.tree.map(lambda t: t[1], flat, is_leaf=is_pair)
+    return qg, new_res
+
+
+def decompress_grads(qgrads, like=None):
+    def d_one(d):
+        return d["q"].astype(jnp.float32) * d["scale"]
+    return jax.tree.map(d_one, qgrads,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)

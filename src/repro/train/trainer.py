@@ -1,0 +1,141 @@
+"""Trainer: the production train loop.
+
+Wires together model, optimizer, data pipeline, checkpointing, straggler
+monitoring and (optionally) a mesh. Used by examples/train_lm.py (CPU,
+single device) and by launch/train.py (sharded). Supports gradient
+accumulation (microbatching) and CPrune-produced pruned params (shapes are
+read from the params, never from the config).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataPipeline
+from repro.models.model import Model, init_params
+from repro.optim.optimizers import (adamw_init, adamw_update,
+                                    clip_by_global_norm, sgd_init,
+                                    sgd_update)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import StragglerMonitor, resilient_loop
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    lr: float = 3e-4
+    optimizer: str = "adamw"        # adamw | sgd (paper uses SGD)
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    grad_accum: int = 1             # microbatches per step
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 2
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 pipeline: DataPipeline, *, params=None, model: Model = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.pipeline = pipeline
+        self.model = model or Model(cfg)
+        self.params = params if params is not None else init_params(
+            jax.random.PRNGKey(tcfg.seed), cfg)
+        init = adamw_init if tcfg.optimizer == "adamw" else sgd_init
+        self.opt_state = init(self.params)
+        self.monitor = StragglerMonitor()
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+                     if tcfg.ckpt_dir else None)
+        self.metrics_log: list = []
+        self._step_fn = jax.jit(self._make_step())
+
+    def _make_step(self):
+        tcfg = self.tcfg
+        model = self.model
+
+        def one_micro(p, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda pp: model.loss_fn(pp, batch), has_aux=True)(p)
+            return loss, metrics, grads
+
+        def step(params, opt_state, batches):
+            # gradient accumulation over the leading microbatch axis
+            def accum(carry, batch):
+                loss_sum, grads_sum = carry
+                loss, metrics, grads = one_micro(params, batch)
+                grads_sum = jax.tree.map(jnp.add, grads_sum, grads)
+                return (loss_sum + loss, grads_sum), metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 params)
+            (loss_sum, grads), metrics = jax.lax.scan(
+                accum, (jnp.float32(0.0), zeros), batches)
+            n = tcfg.grad_accum
+            grads = jax.tree.map(lambda g: g / n, grads)
+            grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
+            if tcfg.optimizer == "adamw":
+                params, opt_state = adamw_update(
+                    params, grads, opt_state, lr=tcfg.lr,
+                    weight_decay=tcfg.weight_decay)
+            else:
+                params, opt_state = sgd_update(
+                    params, grads, opt_state, lr=tcfg.lr,
+                    momentum=tcfg.momentum,
+                    weight_decay=tcfg.weight_decay)
+            out_metrics = {k: v[-1] for k, v in metrics.items()}
+            out_metrics["loss"] = loss_sum / n
+            out_metrics["grad_norm"] = gn
+            return params, opt_state, out_metrics
+
+        return step
+
+    def _microbatches(self, step: int):
+        b = self.pipeline.batch(step)
+        n = self.tcfg.grad_accum
+        if n == 1:
+            return jax.tree.map(lambda x: x[None], b)
+        return jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), b)
+
+    def train_step(self, step: int):
+        batches = self._microbatches(step)
+        self.params, self.opt_state, metrics = self._step_fn(
+            self.params, self.opt_state, batches)
+        return metrics
+
+    def run(self, n_steps: int, *, start_step: int = 0,
+            injector=None) -> Dict[str, Any]:
+        state = {"params": self.params, "opt": self.opt_state}
+
+        def step_fn(step, state):
+            self.params = state["params"]
+            self.opt_state = state["opt"]
+            metrics = self.train_step(step)
+            if step % self.tcfg.log_every == 0:
+                host = {k: float(v) for k, v in metrics.items()}
+                host["step"] = step
+                self.metrics_log.append(host)
+            return {"params": self.params, "opt": self.opt_state}
+
+        state, stats = resilient_loop(
+            n_steps=n_steps, state=state, step_fn=step_fn, ckpt=self.ckpt,
+            ckpt_every=self.tcfg.ckpt_every, monitor=self.monitor,
+            injector=injector, start_step=start_step)
+        self.params = state["params"]
+        self.opt_state = state["opt"]
+        stats["median_step_s"] = self.monitor.median_s
+        return stats
+
+    def eval_batch(self, step: int = 10 ** 6):
+        batch = self.pipeline.batch(step)
+        loss, metrics = jax.jit(self.model.loss_fn)(self.params, batch)
+        return {k: float(v) for k, v in metrics.items()} | {
+            "loss": float(loss)}

@@ -1,0 +1,93 @@
+"""Config integrity: exact published shapes, applicability table, counts."""
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, all_configs, get_config,
+                           get_reduced_config, shape_applicable)
+
+
+def test_all_ten_archs_load():
+    cfgs = all_configs()
+    assert set(cfgs) == set(ARCH_IDS)
+    assert len(ARCH_IDS) == 10
+
+
+@pytest.mark.parametrize("arch,expect", [
+    ("recurrentgemma_9b", dict(n_layers=38, d_model=4096, n_heads=16,
+                               n_kv_heads=1, d_ff=12288, vocab_size=256000)),
+    ("mixtral_8x22b", dict(n_layers=56, d_model=6144, n_heads=48,
+                           n_kv_heads=8, d_ff=16384, vocab_size=32768,
+                           n_experts=8, top_k=2)),
+    ("granite_moe_1b_a400m", dict(n_layers=24, d_model=1024, n_heads=16,
+                                  n_kv_heads=8, d_ff=512, vocab_size=49155,
+                                  n_experts=32, top_k=8)),
+    ("nemotron_4_15b", dict(n_layers=32, d_model=6144, n_heads=48,
+                            n_kv_heads=8, d_ff=24576, vocab_size=256000,
+                            activation="relu2")),
+    ("qwen1_5_110b", dict(n_layers=80, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=49152, vocab_size=152064,
+                          qkv_bias=True)),
+    ("qwen3_1_7b", dict(n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8,
+                        d_ff=6144, vocab_size=151936, qk_norm=True)),
+    ("internlm2_20b", dict(n_layers=48, d_model=6144, n_heads=48,
+                           n_kv_heads=8, d_ff=16384, vocab_size=92544)),
+    ("rwkv6_1_6b", dict(n_layers=24, d_model=2048, d_ff=7168,
+                        vocab_size=65536)),
+    ("hubert_xlarge", dict(n_layers=48, d_model=1280, n_heads=16,
+                           n_kv_heads=16, d_ff=5120, vocab_size=504,
+                           causal=False)),
+    ("qwen2_vl_2b", dict(n_layers=28, d_model=1536, n_heads=12,
+                         n_kv_heads=2, d_ff=8960, vocab_size=151936,
+                         rope="mrope")),
+])
+def test_published_shapes(arch, expect):
+    cfg = get_config(arch)
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("recurrentgemma_9b", 7e9, 11e9),
+    ("mixtral_8x22b", 120e9, 160e9),
+    ("granite_moe_1b_a400m", 0.9e9, 1.8e9),
+    ("nemotron_4_15b", 12e9, 19e9),
+    ("qwen1_5_110b", 95e9, 125e9),
+    ("qwen3_1_7b", 1.3e9, 2.4e9),
+    ("internlm2_20b", 17e9, 24e9),
+    ("rwkv6_1_6b", 1.2e9, 2.2e9),
+    ("hubert_xlarge", 0.7e9, 1.3e9),
+    ("qwen2_vl_2b", 1.2e9, 2.2e9),
+])
+def test_param_counts_in_published_range(arch, lo, hi):
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, (arch, n / 1e9)
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("mixtral_8x22b")
+    assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_applicability_matrix():
+    skips = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            if not ok:
+                skips.append((a, s.name))
+    # hubert: decode+long; 6 full-attention archs: long
+    assert ("hubert_xlarge", "decode_32k") in skips
+    assert ("hubert_xlarge", "long_500k") in skips
+    assert ("qwen1_5_110b", "long_500k") in skips
+    assert ("rwkv6_1_6b", "long_500k") not in [tuple(x) for x in skips]
+    assert ("mixtral_8x22b", "long_500k") not in [tuple(x) for x in skips]
+    assert len(skips) == 8
+
+
+def test_reduced_configs_are_small_and_same_family():
+    for a in ARCH_IDS:
+        full, red = get_config(a), get_reduced_config(a)
+        assert red.param_count() < full.param_count() / 100
+        assert red.family == full.family
+        assert red.block_pattern == full.block_pattern
+        assert (red.n_experts > 0) == (full.n_experts > 0)

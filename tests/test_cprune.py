@@ -1,0 +1,222 @@
+"""CPrune core: task table, ordering, prune step, Algorithm 1 mechanics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import get_reduced_config
+from repro.core import (CPrune, CPruneConfig, TrainHooks, Workload,
+                        build_tuned_table)
+from repro.core.applier import apply_keep, prune_site_by_rank
+from repro.core.latency import model_latency
+from repro.core.program import Iterator
+from repro.core.prune_step import lcm_prune_step
+from repro.core.ranking import keep_indices, rank_units
+from repro.core.tuner import TunerStats, tune_gemm, untuned_gemm
+from repro.models.model import Model, init_params, prune_sites
+
+
+def _setup(arch="qwen3_1_7b", **over):
+    cfg = get_reduced_config(arch).with_overrides(**over)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sites = prune_sites(cfg)
+    return cfg, model, params, sites
+
+
+# ---------------------------------------------------------------------------
+# Paper §3.5 worked example
+# ---------------------------------------------------------------------------
+
+def test_lcm_formula_matches_paper_example():
+    fast = [Iterator("ff", (4, 8, 16), (True,) * 3),
+            Iterator("ax3", (4, 8, 16), (True,) * 3)]
+    slow = [Iterator("ff", (4, 128), (True, True)),
+            Iterator("ax3", (512, 1), (True, True))]
+    assert lcm_prune_step(fast) == 32   # paper: LCM(32, 32) = 32
+    assert lcm_prune_step(slow) == 4    # paper: LCM(4, 1) = 4
+
+
+def test_prune_step_respects_shard_multiple():
+    its = [Iterator("n", (4, 2, 128), (True, True, False))]
+    assert lcm_prune_step(its, shard_multiple=16) % 16 == 0
+
+
+# ---------------------------------------------------------------------------
+# Task table (§3.3, §3.4)
+# ---------------------------------------------------------------------------
+
+def test_task_groups_identical_subgraphs():
+    """RecurrentGemma: FFN shapes identical across rglru and attn blocks ->
+    one FFN task whose subgraph count spans the stacks (paper Fig. 4)."""
+    cfg, model, params, sites = _setup("recurrentgemma_9b")
+    wl = Workload(tokens_global=1024)
+    table = build_tuned_table(sites, wl)
+    ffn_tasks = [t for t in table.tasks if t.sites[0].kind == "ffn"]
+    assert len(ffn_tasks) == 1
+    assert ffn_tasks[0].n_subgraphs == sum(
+        s.multiplicity for s in sites if s.kind == "ffn")
+    assert len(ffn_tasks[0].sites) >= 2   # spans >1 stack position
+
+
+def test_task_ordering_by_pruning_impact():
+    cfg, model, params, sites = _setup()
+    table = build_tuned_table(sites, Workload(tokens_global=2048))
+    ordered = table.ordered()
+    impacts = [t.pruning_impact for t in ordered]
+    assert impacts == sorted(impacts, reverse=True)
+    assert ordered[0].pruning_impact == max(impacts)
+
+
+def test_tuned_never_slower_than_untuned():
+    stats = TunerStats()
+    for (m, k, n) in [(512, 256, 1024), (128, 4096, 512), (64, 64, 64)]:
+        tuned = tune_gemm(m, k, n, stats=stats)
+        naive = untuned_gemm(m, k, n)
+        assert tuned.latency <= naive.latency + 1e-12
+    assert stats.candidates_evaluated > 0
+
+
+# ---------------------------------------------------------------------------
+# Applier: functional pruning
+# ---------------------------------------------------------------------------
+
+def test_pruning_zero_channels_preserves_function():
+    """Zero out d_ff channels, then prune exactly those channels: the model
+    function must be unchanged (proves the applier slices the right,
+    *coupled* axes)."""
+    cfg, model, params, sites = _setup()
+    site = next(s for s in sites if s.kind == "ffn")
+    batch = make_batch(cfg)
+    # zero the channels we will prune (lowest L1 = the zeroed ones)
+    drop = np.arange(0, site.dim, 2)    # half the channels
+    for rel_path, axis in site.param_axes:
+        node = params
+        for part in (site.block_path + "/" + rel_path).split("/")[:-1]:
+            node = node[part]
+        leaf = (site.block_path + "/" + rel_path).split("/")[-1]
+        arr = np.array(node[leaf])   # writable copy
+        ax = axis + 1  # stacked
+        sl = [slice(None)] * arr.ndim
+        sl[ax] = drop
+        arr[tuple(sl)] = 0.0
+        node[leaf] = jnp.asarray(arr)
+
+    loss_before, _ = jax.jit(model.loss_fn)(params, batch)
+    scores = rank_units(params, site, "l1")
+    new_params, new_site = prune_site_by_rank(params, site, len(drop), scores)
+    assert new_site.dim == site.dim - len(drop)
+    loss_after, _ = jax.jit(model.loss_fn)(new_params, batch)
+    np.testing.assert_allclose(float(loss_before), float(loss_after),
+                               rtol=1e-5)
+
+
+def test_heads_pruning_keeps_gqa_grouping():
+    cfg, model, params, sites = _setup(n_heads=8, n_kv_heads=2, head_dim=16)
+    site = next(s for s in sites if s.kind == "heads")
+    assert site.granularity == 2
+    scores = rank_units(params, site, "l1")
+    new_params, new_site = prune_site_by_rank(params, site, 2, scores)
+    wq = new_params["stack"]["pos0"]["mixer"]["wq"]
+    assert wq.shape[2] == 6           # (L, d, H=6, hd)
+    # model still runs with 3 q-heads per kv group
+    loss, _ = jax.jit(model.loss_fn)(new_params, make_batch(cfg))
+    assert np.isfinite(float(loss))
+
+
+def test_expert_pruning_runs():
+    cfg, model, params, sites = _setup("mixtral_8x22b")
+    site = next(s for s in sites if s.kind == "experts")
+    scores = rank_units(params, site, "l1")
+    new_params, new_site = prune_site_by_rank(params, site, 1, scores)
+    assert new_params["stack"]["pos0"]["ffn"]["router"].shape[-1] == \
+        cfg.n_experts - 1
+    loss, _ = jax.jit(model.loss_fn)(new_params, make_batch(cfg))
+    assert np.isfinite(float(loss))
+
+
+def test_keep_indices_grouped():
+    scores = np.array([5.0, 1.0, 4.0, 9.0, 0.5, 7.0, 2.0, 3.0])
+    keep = keep_indices(scores, 2, group=2)   # drop 1 per contiguous half
+    assert len(keep) == 6
+    assert 1 not in keep and 4 not in keep    # lowest in each half
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 mechanics
+# ---------------------------------------------------------------------------
+
+def _fake_hooks(acc_sequence):
+    """eval returns successive values from acc_sequence (then repeats last)."""
+    state = {"i": -1}
+
+    def eval_acc(params, sites):
+        state["i"] = min(state["i"] + 1, len(acc_sequence) - 1)
+        return acc_sequence[state["i"]]
+
+    return TrainHooks(short_term_train=lambda p, s: p, eval_acc=eval_acc)
+
+
+def test_cprune_accepts_until_accuracy_gate():
+    # compute-dominated dims so pruning actually moves the cost model
+    cfg, model, params, sites = _setup(d_model=128, d_ff=2048, n_layers=4)
+    wl = Workload(tokens_global=16384)
+    # acc: init 0.9, first candidate ok (0.89), second fails hard (0.2)
+    hooks = _fake_hooks([0.9, 0.89, 0.2, 0.2, 0.2, 0.2])
+    pcfg = CPruneConfig(a_g=0.5, alpha=0.95, beta=0.99, max_iterations=10,
+                        seq_len=64)
+    res = CPrune(cfg, sites, wl, hooks, pcfg).run(params)
+    accepted = [h for h in res.history if h.accepted]
+    rejected = [h for h in res.history if not h.accepted]
+    assert len(accepted) >= 1
+    assert res.fps_increase > 1.0
+    # the accuracy-failed task must have been retired (appears once)
+    if rejected:
+        kinds = [h.task_id for h in rejected]
+        assert len(kinds) == len(set(kinds))
+
+
+def test_cprune_latency_monotone_over_accepted_iterations():
+    cfg, model, params, sites = _setup(d_model=128, d_ff=2048, n_layers=4)
+    wl = Workload(tokens_global=16384)
+    hooks = _fake_hooks([0.9] * 50)   # accuracy never blocks
+    pcfg = CPruneConfig(a_g=0.1, alpha=0.5, beta=0.99, max_iterations=8,
+                        seq_len=64)
+    res = CPrune(cfg, sites, wl, hooks, pcfg).run(params)
+    lms = [h.l_m for h in res.history if h.accepted]
+    assert len(lms) >= 2
+    assert all(b < a for a, b in zip(lms, lms[1:]))
+    # pruned dims shrank
+    assert any(s.dim < 2048 for s in res.sites if s.kind == "ffn")
+
+
+def test_cprune_real_model_prunes_and_still_trains():
+    """Full loop against the real JAX model with real (tiny) training."""
+    cfg, model, params, sites = _setup(d_ff=256, n_layers=2, vocab_size=64)
+    from repro.data.pipeline import DataPipeline
+    pipe = DataPipeline(cfg, global_batch=8, seq_len=32)
+    val = pipe.batch(10 ** 6)
+    jloss = jax.jit(model.loss_fn)
+    jgrad = jax.jit(jax.value_and_grad(lambda p, b: model.loss_fn(p, b)[0]))
+
+    def short_train(p, sites):
+        for i in range(2):
+            _, g = jgrad(p, pipe.batch(i))
+            p = jax.tree.map(lambda a, b: a - 0.01 * b.astype(a.dtype), p, g)
+        return p
+
+    def eval_acc(p, sites):
+        _, m = jloss(p, val)
+        return float(jnp.exp(-m["ce"]))
+
+    hooks = TrainHooks(short_term_train=short_train, eval_acc=eval_acc)
+    pcfg = CPruneConfig(a_g=1e-4, alpha=0.5, beta=0.999, max_iterations=3,
+                        seq_len=32)
+    res = CPrune(cfg, sites, Workload(tokens_global=256), hooks, pcfg).run(
+        params)
+    assert res.fps_increase >= 1.0
+    loss, _ = jloss(res.params, val)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,67 @@
+"""Beyond-paper extensions (DESIGN.md §7): roofline-guided prune steps,
+shard-aware step divisibility."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CPrune, CPruneConfig, TrainHooks, Workload
+from repro.core.cost_model import Block
+from repro.core.program import Program
+from repro.core.prune_step import program_prune_step
+from repro.core.tuner import tune_gemm
+
+
+def test_memory_bound_detection():
+    # K tiny -> low arithmetic intensity -> memory bound
+    mem = Program(m=65536, k=128, n=2048, block=Block(512, 128, 2048),
+                  latency=1.0)
+    assert mem.memory_bound
+    # big K, compute-rich
+    comp = Program(m=65536, k=8192, n=8192, block=Block(512, 512, 1024),
+                   latency=1.0)
+    assert not comp.memory_bound
+
+
+def test_roofline_guided_step_is_finer_for_memory_bound():
+    prog = Program(m=65536, k=128, n=4096, block=Block(512, 128, 2048),
+                   latency=1.0)
+    assert prog.memory_bound
+    base = program_prune_step([(prog, "n")])
+    fine = program_prune_step([(prog, "n")], roofline_guided=True)
+    assert fine <= base
+    assert fine == 128        # lane granularity
+
+
+def test_roofline_guided_noop_for_compute_bound():
+    prog = Program(m=65536, k=8192, n=8192, block=Block(512, 512, 1024),
+                   latency=1.0)
+    assert not prog.memory_bound
+    assert program_prune_step([(prog, "n")], roofline_guided=True) == \
+        program_prune_step([(prog, "n")])
+
+
+def test_cprune_with_roofline_steps_runs():
+    from repro.configs import get_reduced_config
+    from repro.models.model import init_params, prune_sites
+
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        d_model=128, d_ff=2048, n_layers=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sites = prune_sites(cfg)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: 0.9)
+    pcfg = CPruneConfig(a_g=0.1, alpha=0.5, beta=0.99, max_iterations=4,
+                        seq_len=64, roofline_steps=True)
+    res = CPrune(cfg, sites, Workload(tokens_global=16384), hooks,
+                 pcfg).run(params)
+    assert res.fps_increase >= 1.0
+    assert any(h.accepted for h in res.history)
+
+
+def test_shard_multiple_keeps_tp_divisibility():
+    prog = tune_gemm(65536, 512, 4096)
+    for tp in (4, 8, 16):
+        step = program_prune_step([(prog, "n")], shard_multiple=tp)
+        assert step % tp == 0
+        # pruning by multiples of step keeps N divisible by tp
+        assert (4096 - step) % tp == 0

@@ -1,0 +1,159 @@
+"""Checkpointing, crash recovery, stragglers, gradient compression."""
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import (FaultInjector, StragglerMonitor,
+                                         compress_grads, decompress_grads,
+                                         resilient_loop)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.zeros((16,))},
+            "step": jnp.int32(0)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    ckpt.save(5, s)
+    step, restored, _ = ckpt.restore(s)
+    assert step == 5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, restored)
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2, async_save=True)
+    s = _state()
+    for step in (1, 2, 3, 4):
+        ckpt.save(step, s)
+    ckpt.wait()
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_crash_mid_save_never_corrupts_latest(tmp_path):
+    """A .tmp dir left behind by a crash must be invisible to restore."""
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    ckpt.save(1, s)
+    # simulate a crashed save of step 2: partial tmp dir
+    tmp = tmp_path / "step_2.tmp"
+    tmp.mkdir()
+    (tmp / "arr_0.npy").write_bytes(b"garbage")
+    assert ckpt.latest_step() == 1
+    step, restored, _ = ckpt.restore(s)
+    assert step == 1
+
+
+def test_restore_onto_different_mesh_shardings(tmp_path):
+    """Elastic re-mesh: restore with device_put onto new shardings."""
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    s = _state()
+    ckpt.save(1, s)
+    shardings = jax.tree.map(
+        lambda a: jax.sharding.SingleDeviceSharding(jax.devices()[0]), s)
+    step, restored, _ = ckpt.restore(s, shardings=shardings)
+    assert restored["params"]["w"].sharding == shardings["params"]["w"]
+
+
+def test_resilient_loop_recovers_from_injected_faults(tmp_path):
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    log = []
+
+    def step_fn(step, state):
+        log.append(step)
+        return {**state, "step": state["step"] + 1}
+
+    injector = FaultInjector(fail_at_steps=[7, 13])
+    state, stats = resilient_loop(
+        n_steps=20, state=_state(), step_fn=step_fn, ckpt=ckpt,
+        ckpt_every=5, injector=injector)
+    assert stats["restarts"] == 2
+    assert int(state["step"]) == 20 - 0  # every step eventually ran
+    # steps 5..7 were replayed after the first fault (restore to step 5)
+    assert log.count(5) >= 1 and log.count(6) >= 2
+
+
+def test_resilient_loop_raises_after_max_restarts(tmp_path):
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+
+    def bad_step(step, state):
+        raise RuntimeError("always fails")
+
+    with pytest.raises(RuntimeError):
+        resilient_loop(n_steps=3, state=_state(), step_fn=bad_step,
+                       ckpt=ckpt, max_restarts=2)
+
+
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(10):
+        mon.observe(0.01)
+    assert mon.observe(0.2) is True
+    assert mon.observe(0.01) is False
+    assert mon.stragglers == 1
+
+
+def test_grad_compression_error_feedback_is_unbiased():
+    """Sum of decompressed grads + final residual == sum of true grads."""
+    key = jax.random.PRNGKey(0)
+    grads_seq = [
+        {"w": jax.random.normal(jax.random.fold_in(key, i), (32, 32))}
+        for i in range(8)
+    ]
+    residual = None
+    total_sent = jnp.zeros((32, 32))
+    for g in grads_seq:
+        qg, residual = compress_grads(g, residual)
+        assert qg["w"]["q"].dtype == jnp.int8
+        total_sent = total_sent + decompress_grads(qg)["w"]
+    total_true = sum(g["w"] for g in grads_seq)
+    # unbiased up to the residual still in flight
+    np.testing.assert_allclose(
+        np.asarray(total_sent + residual["w"]), np.asarray(total_true),
+        rtol=1e-5, atol=1e-5)
+    # and the wire format is 4x smaller than fp32
+    assert qg["w"]["q"].nbytes * 4 == grads_seq[0]["w"].nbytes
+
+
+def test_trainer_resumes_deterministically(tmp_path):
+    """Train 10 steps straight vs 5 + restart + 5: identical params."""
+    from repro.configs import get_reduced_config
+    from repro.data.pipeline import DataPipeline
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=32, d_ff=64, vocab_size=64)
+
+    def make(ckpt_dir):
+        pipe = DataPipeline(cfg, global_batch=4, seq_len=32)
+        return Trainer(cfg, TrainerConfig(
+            lr=1e-3, ckpt_dir=ckpt_dir, ckpt_every=5, log_every=100), pipe)
+
+    t1 = make(str(tmp_path / "a"))
+    t1.run(10)
+
+    t2 = make(str(tmp_path / "b"))
+    t2.run(5)
+    t2.ckpt.wait()
+    # "crash": rebuild trainer from checkpoint and continue
+    t3 = make(str(tmp_path / "b"))
+    step, state, _ = t3.ckpt.restore(
+        {"params": t3.params, "opt": t3.opt_state})
+    t3.params, t3.opt_state = state["params"], state["opt"]
+    t3.run(10, start_step=step)
+
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-5, atol=1e-6),
+        t1.params, t3.params)

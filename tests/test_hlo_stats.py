@@ -1,0 +1,67 @@
+"""hlo_stats parser: loop trip counts, dot flops, collective wire bytes."""
+import textwrap
+
+from repro.launch.hlo_stats import (_split_op, _type_bytes, parse_hlo,
+                                    stats_from_text)
+
+SAMPLE = textwrap.dedent("""\
+    HloModule jit_step
+
+    %body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+      %p = (s32[], f32[128,256]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[128,256]{1,0} get-tuple-element(%p), index=1
+      %w = f32[256,256]{1,0} constant({...})
+      %dot.1 = f32[128,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[128,256]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%sum
+      ROOT %t = (s32[], f32[128,256]) tuple(%i, %ar)
+    }
+
+    %cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+      %p = (s32[], f32[128,256]) parameter(0)
+      ROOT %lt = pred[] constant(true)
+    }
+
+    ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+      %a = f32[128,256]{1,0} parameter(0)
+      %init = (s32[], f32[128,256]) tuple(%a, %a)
+      %wh = (s32[], f32[128,256]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out = f32[128,256]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_split_op_handles_tuple_types_with_comments():
+    line = ('  %wh.2 = (s32[], f32[2,3]{1,0}, /*index=2*/f32[4]) '
+            'while(%t), condition=%c, body=%b')
+    name, typestr, opcode, rest = _split_op(line)
+    assert name == "wh.2"
+    assert opcode == "while"
+    assert "condition=%c" in rest
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _type_bytes("(bf16[2,2], s32[3])") == 2 * 2 * 2 + 3 * 4
+
+
+def test_while_trip_count_multiplies_body_stats():
+    stats = stats_from_text(SAMPLE, n_devices=256)
+    # dot: 2*128*256*256 flops, x10 trips
+    assert stats["flops"] == 2 * 128 * 256 * 256 * 10
+    # all-reduce wire bytes: 2 * result * (g-1)/g, group=16, x10 trips
+    result = 128 * 256 * 4
+    assert abs(stats["coll_all-reduce"]
+               - 10 * 2 * result * 15 / 16) < 1e-6
+
+
+def test_slice_ops_count_slice_bytes_only():
+    hlo = textwrap.dedent("""\
+        ENTRY %main (a: f32[4096,1024]) -> f32[1,1024] {
+          %a = f32[4096,1024]{1,0} parameter(0)
+          %i = s32[] constant(5)
+          ROOT %ds = f32[1,1024]{1,0} dynamic-slice(%a, %i, %i), dynamic_slice_sizes={1,1024}
+        }
+    """)
+    stats = stats_from_text(hlo, n_devices=1)
+    assert stats["bytes"] == 2 * 1 * 1024 * 4   # slice, not the 16MB operand

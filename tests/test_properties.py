@@ -1,0 +1,107 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import Block, matmul_cost
+from repro.core.program import Iterator, Program
+from repro.core.prune_step import (iterator_step, lcm, lcm_prune_step,
+                                   program_prune_step)
+from repro.core.ranking import keep_indices
+
+factors_st = st.lists(st.integers(1, 32), min_size=1, max_size=4)
+
+
+@given(factors_st)
+@settings(max_examples=200, deadline=None)
+def test_iterator_step_is_min_decrement_bruteforce(factors):
+    """iterator_step == min over mutable factors of prod/factor (brute)."""
+    it = Iterator("x", tuple(factors), (True,) * len(factors))
+    total = math.prod(factors)
+    candidates = [total // f for f in factors if f > 1]
+    expect = min(candidates) if candidates else total
+    assert iterator_step(it) == expect
+
+
+@given(factors_st, factors_st,
+       st.integers(1, 8), st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_lcm_step_divisibility(f1, f2, gran, shard):
+    its = [Iterator("a", tuple(f1), (True,) * len(f1)),
+           Iterator("b", tuple(f2), (True,) * len(f2))]
+    step = lcm_prune_step(its, granularity=gran, shard_multiple=shard)
+    assert step % gran == 0
+    assert step % shard == 0
+    assert step % iterator_step(its[0]) == 0
+    assert step % iterator_step(its[1]) == 0
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_lcm_properties(a, b, c):
+    l = lcm(a, b, c)
+    assert l % a == 0 and l % b == 0 and l % c == 0
+    assert l <= a * b * c
+
+
+@given(st.integers(1, 32).map(lambda x: x * 128),
+       st.integers(1, 16).map(lambda x: x * 128),
+       st.integers(1, 16).map(lambda x: x * 128))
+@settings(max_examples=50, deadline=None)
+def test_prune_step_keeps_lane_alignment(n, bn, bk):
+    """TPU adaptation: prune steps over tuned programs are lane multiples."""
+    prog_n = Program(m=512, k=512, n=n, block=Block(128, 128, min(bn, n)),
+                     latency=1.0)
+    prog_k = Program(m=512, k=n, n=512, block=Block(128, min(bk, n), 128),
+                     latency=1.0)
+    step = program_prune_step([(prog_n, "n"), (prog_k, "k")])
+    assert step % 128 == 0 or step >= n
+
+
+@given(st.integers(1, 6), st.integers(2, 6), st.integers(0, 4))
+@settings(max_examples=100, deadline=None)
+def test_keep_indices_grouped_uniform(per_group, groups, drop_per_group):
+    dim = per_group * groups
+    drop_per_group = min(drop_per_group, per_group - 1)
+    rng = np.random.default_rng(0)
+    scores = rng.random(dim)
+    keep = keep_indices(scores, drop_per_group * groups, group=groups)
+    assert len(keep) == dim - drop_per_group * groups
+    # uniform count kept per contiguous group
+    for g in range(groups):
+        lo, hi = g * per_group, (g + 1) * per_group
+        assert ((keep >= lo) & (keep < hi)).sum() == per_group - drop_per_group
+    assert np.all(np.diff(keep) > 0)        # sorted, unique
+
+
+@given(st.integers(1, 512), st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=100, deadline=None)
+def test_cost_model_monotone_in_dims(m, k, n):
+    """Bigger GEMMs never cost less under a fixed program."""
+    blk = Block(64, 128, 128)
+    base = matmul_cost(m, k, n, blk)
+    assert matmul_cost(m + 64, k, n, blk) >= base - 1e-12
+    assert matmul_cost(m, k + 128, n, blk) >= base - 1e-12
+    assert matmul_cost(m, k, n + 128, blk) >= base - 1e-12
+
+
+@given(st.integers(1, 8), st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_cost_model_step_function(i, j):
+    """Latency is flat within a block tile and jumps only at boundaries —
+    the paper's premise that makes structure-aware prune quanta matter."""
+    blk = Block(64, 128, 128)
+    n_lo = (i - 1) * 128 + 1
+    n_hi = i * 128
+    assert matmul_cost(256, 256, n_lo, blk) == matmul_cost(256, 256, n_hi, blk)
+    assert matmul_cost(256, 256, n_hi, blk) < matmul_cost(
+        256, 256, n_hi + 1, blk)
+
+
+def test_vmem_budget_respected_by_candidates():
+    from repro.core.cost_model import VMEM_BYTES
+    from repro.core.tuner import candidate_blocks
+    for blk in candidate_blocks(4096, 4096, 4096):
+        assert blk.vmem_bytes(2) <= VMEM_BYTES

@@ -1,0 +1,83 @@
+"""Sharding rules: divisibility fallbacks, ZeRO-3 gather specs, cache specs.
+
+These run on a 1-device fake mesh view (spec construction is pure); the
+behavioural checks on real multi-device meshes live in test_distributed.py.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, get_reduced_config
+from repro.launch import specs
+from repro.models.model import Model
+from repro.sharding import rules
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh for spec construction (no computation launched)
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    m = Mesh(devs, ("data", "model"))
+    # patch axis sizes to production values for divisibility logic
+    return m
+
+
+class FakeMesh:
+    """Mesh stand-in with production axis sizes for spec math."""
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_specs_shard_big_dims_and_replicate_norms():
+    cfg = get_config("qwen3_1_7b")
+    params = specs.param_specs(cfg)
+    ps = rules.param_pspecs(params, FakeMesh())
+    stack = ps["stack"]["pos0"]
+    # FFN: (L, d, ff) -> (None, data, model)
+    assert stack["ffn"]["w_up"] == P(None, "data", "model")
+    assert stack["ffn"]["w_down"] == P(None, "model", "data")
+    # attention q: heads 16 divisible by 16 -> sharded
+    assert stack["mixer"]["wq"] == P(None, "data", "model", None)
+    # kv heads 8 not divisible by 16 -> replicated on that dim
+    assert stack["mixer"]["wk"] == P(None, "data", None, None)
+    # norms replicated
+    assert stack["norm1"]["scale"] == P()
+    # embedding: vocab over model, d over data
+    assert ps["embed"] == P("model", "data")
+
+
+def test_param_specs_qwen2vl_heads_fallback():
+    cfg = get_config("qwen2_vl_2b")          # 12 heads, not divisible by 16
+    params = specs.param_specs(cfg)
+    ps = rules.param_pspecs(params, FakeMesh())
+    assert ps["stack"]["pos0"]["mixer"]["wq"] == P(None, "data", None, None)
+    # but FFN still shards (8960 % 16 == 0)
+    assert ps["stack"]["pos0"]["ffn"]["w_up"] == P(None, "data", "model")
+
+
+def test_batch_specs_drop_unshardable_batch():
+    b1 = {"tokens": jax.ShapeDtypeStruct((256, 128), np.int32)}
+    b2 = {"tokens": jax.ShapeDtypeStruct((1, 128), np.int32)}  # long_500k
+    assert rules.batch_pspecs(b1, FakeMesh())["tokens"] == P("data", None)
+    assert rules.batch_pspecs(b2, FakeMesh())["tokens"] == P(None, None)
+
+
+def test_cache_specs_shard_seq_over_model():
+    cfg = get_reduced_config("qwen3_1_7b")
+    model = Model(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(32, 512))
+    cs = rules.cache_pspecs(model, caches, FakeMesh())
+    kv = cs["stack"]["pos0"]
+    assert kv.k == P(None, "data", "model", None, None)
+    assert kv.slot_pos == P(None, None)
+
+
+def test_fit_spec_divisibility():
+    assert rules.fit_spec(("data", "model"), (32, 32), FakeMesh()) == \
+        P("data", "model")
+    assert rules.fit_spec(("data", "model"), (7, 32), FakeMesh()) == \
+        P(None, "model")
+    assert rules.fit_spec((("pod", "data"),), (32,),
+                          type("M", (), {"shape": {"pod": 2, "data": 16,
+                                                   "model": 16}})()) == \
+        P(("pod", "data"))
