@@ -25,6 +25,17 @@ BENCH_TOKENS = 65536          # target-workload tokens for the cost model
 BENCH_SEQ = 256
 
 
+def reset_tuning_caches() -> None:
+    """Cold-start the process-wide tuning caches.
+
+    Benchmarks that compare search cost (candidates_evaluated) across
+    arms must call this per arm — otherwise the second arm warms up on
+    the first arm's ProgramCache and the counters become order-dependent.
+    """
+    from repro.core import clear_tuning_caches
+    clear_tuning_caches()
+
+
 def bench_config(arch: str = "qwen3_1_7b", **over):
     base = dict(n_layers=4, d_model=128, d_ff=1024, n_heads=8, n_kv_heads=2,
                 head_dim=16, vocab_size=256)

@@ -18,6 +18,7 @@ def run():
     t = common.Timer()
     # CPrune (selective) — hybrid arch: 4 prunable sites, so exhaustive
     # search trains 4 candidates/iteration where CPrune trains ~1
+    common.reset_tuning_caches()   # per-arm cold start: evals comparable
     setup = common.make_setup("recurrentgemma_9b", max_iterations=6,
                               alpha=0.8, beta=0.99, **_ARCH_KW)
     common.pretrain(setup, steps=48)
@@ -35,6 +36,7 @@ def run():
     cprune_trainings = trainings["n"]
 
     # NetAdapt-style exhaustive
+    common.reset_tuning_caches()
     setup2 = common.make_setup("recurrentgemma_9b", max_iterations=6,
                                alpha=0.8, beta=0.99, **_ARCH_KW)
     common.pretrain(setup2, steps=48)

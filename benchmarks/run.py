@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   table2_ablations   paper Table 2 + Fig. 9 + Fig. 10 (tuning,
                      associated-subgraph ablations)
   fig11_search_cost  paper Fig. 11 (selective vs exhaustive search)
+  tuner_bench        vectorized+memoized tuning engine vs the scalar
+                     reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
   roofline[*]        deliverable (g): per-cell roofline terms from the
                      dry-run artifacts (run launch/dryrun.py first)
@@ -19,7 +21,7 @@ def main() -> None:
     from benchmarks import (fig1_correlation, fig6_iterations,
                             fig8_cross_target, fig11_search_cost,
                             kernels_bench, roofline, table1_methods,
-                            table2_ablations)
+                            table2_ablations, tuner_bench)
     from benchmarks import common
 
     print("name,us_per_call,derived")
@@ -30,6 +32,7 @@ def main() -> None:
         ("table2_ablations", table2_ablations.run),
         ("fig8_cross_target", fig8_cross_target.run),
         ("fig11_search_cost", fig11_search_cost.run),
+        ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline.run),
     ]

@@ -45,6 +45,7 @@ def run():
                           flops=0)
 
     # NetAdapt-style exhaustive hardware-aware
+    common.reset_tuning_caches()   # per-arm cold start: evals comparable
     res = baselines.netadapt_prune(
         setup.cfg, p0, setup.sites, setup.wl, setup.hooks, setup.pcfg,
         latency_decay=0.96, max_iterations=4)
@@ -54,6 +55,7 @@ def run():
                             flops=0, evals=res.candidates_evaluated)
 
     # CPrune
+    common.reset_tuning_caches()
     cp = CPrune(setup.cfg, setup.sites, setup.wl, setup.hooks, setup.pcfg)
     cres = cp.run(p0)
     rows["cprune"] = dict(fps=cres.final_latency.fps,

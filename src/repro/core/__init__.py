@@ -10,18 +10,33 @@ applier     — functional param-pytree surgery
 latency     — whole-model latency/FPS estimates
 cprune      — Algorithm 1 (the iterative loop)
 baselines   — uniform-L1 / FPGM / NetAdapt-style comparisons
+tuning_cache— process-wide ProgramCache + JSON tuning logs
 """
-from repro.core.cost_model import Block, matmul_cost
+from repro.core.cost_model import Block, matmul_cost, matmul_cost_grid
 from repro.core.cprune import (CPrune, CPruneConfig, CPruneResult,
                                TrainHooks)
 from repro.core.program import Iterator, Program
 from repro.core.prune_step import lcm_prune_step, program_prune_step
 from repro.core.tasks import Task, TaskTable, Workload
 from repro.core.tuner import TunerStats, build_tuned_table, tune_gemm
+from repro.core.tuning_cache import (ProgramCache, global_cache,
+                                     reset_global_cache)
+
+
+def clear_tuning_caches() -> None:
+    """Cold-start every process-wide tuning cache: the ProgramCache, the
+    fixed-latency memo, and the candidate-grid cache. Use this (not just
+    ``reset_global_cache``) when measuring cold-start search cost."""
+    from repro.core import latency, tuner
+    reset_global_cache()
+    latency.clear_fixed_latency_cache()
+    tuner._GRID_CACHE.clear()
+
 
 __all__ = [
-    "Block", "matmul_cost", "CPrune", "CPruneConfig", "CPruneResult",
-    "TrainHooks", "Iterator", "Program", "lcm_prune_step",
+    "Block", "matmul_cost", "matmul_cost_grid", "CPrune", "CPruneConfig",
+    "CPruneResult", "TrainHooks", "Iterator", "Program", "lcm_prune_step",
     "program_prune_step", "Task", "TaskTable", "Workload", "TunerStats",
-    "build_tuned_table", "tune_gemm",
+    "build_tuned_table", "tune_gemm", "ProgramCache", "global_cache",
+    "reset_global_cache", "clear_tuning_caches",
 ]

@@ -37,20 +37,30 @@ def _shallow_copy_along(tree, path: str):
     return new_tree, node, parts[-1]
 
 
-def _take(arr: jax.Array, idx: np.ndarray, axis: int) -> jax.Array:
+def _take(arr, idx: np.ndarray, axis: int):
+    # type-preserving: numpy params stay numpy (no jax dispatch/compile in
+    # the candidate-surgery hot loop); jax arrays go through jnp as before
+    if isinstance(arr, np.ndarray):
+        return np.take(arr, np.asarray(idx), axis=axis)
     return jnp.take(arr, jnp.asarray(idx), axis=axis)
 
 
-def _take_per_layer(arr: jax.Array, idx: np.ndarray, axis: int) -> jax.Array:
+def _take_per_layer(arr, idx: np.ndarray, axis: int):
     """arr: (L, ...); idx: (L, n_keep); gather along `axis` per layer."""
-    idx = jnp.asarray(idx)
+    if isinstance(arr, np.ndarray):
+        # contiguous per-layer gathers beat one broadcast take_along_axis
+        idx = np.asarray(idx)
+        return np.stack([np.take(arr[l], idx[l], axis=axis - 1)
+                         for l in range(arr.shape[0])])
+    xp = jnp
+    idx = xp.asarray(idx)
     shape = [arr.shape[0]] + [1] * (arr.ndim - 1)
     shape[axis] = idx.shape[1]
     idx_b = idx.reshape(shape)
-    idx_b = jnp.broadcast_to(
+    idx_b = xp.broadcast_to(
         idx_b, tuple(arr.shape[i] if i != axis else idx.shape[1]
                      for i in range(arr.ndim)))
-    return jnp.take_along_axis(arr, idx_b, axis=axis)
+    return xp.take_along_axis(arr, idx_b, axis=axis)
 
 
 def apply_keep(params: Dict, site: PruneSite, keep_idx: np.ndarray) -> Dict:

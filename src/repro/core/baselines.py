@@ -40,11 +40,13 @@ class BaselineResult:
     name: str
 
 
-def _tuned_latency(cfg, sites, wl, pcfg, stats=None):
+def _tuned_latency(cfg, sites, wl, pcfg, stats=None, prev=None):
+    """(table, report) for the sites; ``prev`` enables incremental retune."""
     table = tuner.build_tuned_table(sites, wl, use_tuning=pcfg.use_tuning,
-                                    stats=stats)
-    return latency.model_latency(cfg, sites, table, seq_len=pcfg.seq_len,
-                                 use_tuning=pcfg.use_tuning)
+                                    stats=stats, prev=prev)
+    rep = latency.model_latency(cfg, sites, table, seq_len=pcfg.seq_len,
+                                use_tuning=pcfg.use_tuning, stats=stats)
+    return table, rep
 
 
 def uniform_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
@@ -72,7 +74,7 @@ def uniform_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
     else:
         new_params = hooks.short_term_train(new_params, new_sites)
     acc = hooks.eval_acc(new_params, new_sites)
-    rep = _tuned_latency(cfg, new_sites, wl, pcfg)
+    _, rep = _tuned_latency(cfg, new_sites, wl, pcfg)
     return BaselineResult(new_params, new_sites, rep, acc, len(sites), name)
 
 
@@ -90,7 +92,7 @@ def netadapt_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
     sites = [s for s in sites if s.kind in pcfg.prunable_kinds
              and s.kind != "experts"]
     stats = tuner.TunerStats()
-    rep = _tuned_latency(cfg, sites, wl, pcfg, stats)
+    table, rep = _tuned_latency(cfg, sites, wl, pcfg, stats)
     rep0 = rep
     budget = rep.total_s * latency_decay
     evaluated = 0
@@ -115,22 +117,24 @@ def netadapt_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
                     params, site, n_units, scores)
                 cand_sites = applier.refresh_sites(
                     sites, {site.site_id: cand_site})
-                cand_rep = _tuned_latency(cfg, cand_sites, wl, pcfg, stats)
+                cand_table, cand_rep = _tuned_latency(
+                    cfg, cand_sites, wl, pcfg, stats, prev=table)
                 evaluated += 1
                 if cand_rep.total_s <= budget:
-                    found = (cand_params, cand_sites, cand_rep)
+                    found = (cand_params, cand_sites, cand_table, cand_rep)
                     break
                 n_units += step
             if found is None:
                 continue
-            cand_params, cand_sites, cand_rep = found
+            cand_params, cand_sites, cand_table, cand_rep = found
             cand_params = hooks.short_term_train(cand_params, cand_sites)
             a = hooks.eval_acc(cand_params, cand_sites)
             evaluated += 1
-            candidates.append((a, cand_params, cand_sites, cand_rep))
+            candidates.append((a, cand_params, cand_sites, cand_table,
+                               cand_rep))
         if not candidates:
             break
-        a, params, sites, rep = max(candidates, key=lambda c: c[0])
+        a, params, sites, table, rep = max(candidates, key=lambda c: c[0])
         budget = rep.total_s * latency_decay
         if a < pcfg.a_g:
             break

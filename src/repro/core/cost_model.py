@@ -19,6 +19,8 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
+import numpy as np
+
 PEAK_FLOPS_BF16 = 197e12
 PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 4      # MXU f32 is ~4x slower
 HBM_BW = 819e9
@@ -41,6 +43,14 @@ def _round_up(a: int, b: int) -> int:
     return _ceil(a, b) * b
 
 
+def block_vmem_bytes(bm, bk, bn, dtype_bytes):
+    """Working-set bytes of a (bm, bk, bn) block: double-buffered A/B input
+    tiles + fp32 accumulator. Elementwise over arrays — the single source
+    of truth for both Block.vmem_bytes and the tuner's vectorized filter."""
+    return bm * bk * dtype_bytes * 2 + bk * bn * dtype_bytes * 2 \
+        + bm * bn * 4
+
+
 @dataclasses.dataclass(frozen=True)
 class Block:
     """A Pallas matmul block config — the tuner's search unit."""
@@ -50,11 +60,7 @@ class Block:
     bn: int
 
     def vmem_bytes(self, dtype_bytes: int) -> int:
-        # A-tile + B-tile + fp32 accumulator, double-buffered inputs
-        a = self.bm * self.bk * dtype_bytes * 2
-        b = self.bk * self.bn * dtype_bytes * 2
-        c = self.bm * self.bn * 4
-        return a + b + c
+        return block_vmem_bytes(self.bm, self.bk, self.bn, dtype_bytes)
 
 
 def matmul_cost(m: int, k: int, n: int, block: Block, *,
@@ -86,6 +92,53 @@ def matmul_cost(m: int, k: int, n: int, block: Block, *,
     t_epi = batch * epilogue_ops * (gm * bm_h) * (gn * bn_h) / VPU_THROUGHPUT
     return max(t_compute, t_mem) + t_epi + n_blocks * BLOCK_OVERHEAD_S \
         + CALL_OVERHEAD_S
+
+
+def matmul_cost_grid(m: int, k: int, n: int,
+                     bm: np.ndarray, bk: np.ndarray, bn: np.ndarray, *,
+                     dtype_bytes: int = 2, batch: int = 1,
+                     epilogue_ops: int = 0,
+                     hw: Optional[Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray]] = None) -> np.ndarray:
+    """Vectorized ``matmul_cost`` over a whole candidate grid.
+
+    ``bm/bk/bn`` are parallel int arrays of block dims; returns the latency
+    of every candidate in one NumPy pass. Bit-identical to the scalar path:
+    every term is an exact int64 product converted to float64 in the same
+    order the scalar code evaluates, so tuner selections cannot drift
+    between the two implementations.
+
+    ``hw`` optionally supplies the precomputed hardware-padded block dims
+    ``(bm_h, bk_h, bn_h)`` — they depend only on the candidate grid, so the
+    tuner caches them alongside the grid itself.
+    """
+    if m <= 0 or k <= 0 or n <= 0:
+        return np.zeros(len(bm), dtype=np.float64)
+    bm = np.asarray(bm, dtype=np.int64)
+    bk = np.asarray(bk, dtype=np.int64)
+    bn = np.asarray(bn, dtype=np.int64)
+    gm, gk, gn = -(-m // bm), -(-k // bk), -(-n // bn)
+    if hw is None:
+        bm_h = -(-bm // SUBLANE) * SUBLANE
+        bk_h = -(-bk // LANE) * LANE
+        bn_h = -(-bn // LANE) * LANE
+    else:
+        bm_h, bk_h, bn_h = hw
+    n_blocks = gm * gk * gn * batch
+    flops_per_block = 2 * bm_h * bk_h * bn_h
+    peak = PEAK_FLOPS_BF16 if dtype_bytes <= 2 else PEAK_FLOPS_F32
+    t_compute = n_blocks * flops_per_block / peak
+    bytes_a = gn * (gm * bm_h) * (gk * bk_h) * dtype_bytes
+    bytes_b = gm * (gk * bk_h) * (gn * bn_h) * dtype_bytes
+    bytes_c = (gm * bm_h) * (gn * bn_h) * dtype_bytes
+    t_mem = batch * (bytes_a + bytes_b + bytes_c) / HBM_BW
+    if epilogue_ops:
+        t_epi = batch * epilogue_ops * (gm * bm_h) * (gn * bn_h) \
+            / VPU_THROUGHPUT
+    else:
+        t_epi = 0.0     # identical to the scalar path's exact-zero term
+    return np.maximum(t_compute, t_mem) + t_epi \
+        + n_blocks * BLOCK_OVERHEAD_S + CALL_OVERHEAD_S
 
 
 def matmul_terms(m: int, k: int, n: int, block: Block, *,

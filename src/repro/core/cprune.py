@@ -104,14 +104,18 @@ class CPrune:
 
     # -- helpers ------------------------------------------------------------
 
-    def _tuned_table(self, sites: Sequence[PruneSite]) -> TaskTable:
+    def _tuned_table(self, sites: Sequence[PruneSite],
+                     prev: Optional[TaskTable] = None) -> TaskTable:
+        """Tune a candidate's task table, carrying over every task whose
+        signature the prune step did not touch (incremental retuning)."""
         return tuner.build_tuned_table(
-            sites, self.wl, use_tuning=self.pcfg.use_tuning, stats=self.stats)
+            sites, self.wl, use_tuning=self.pcfg.use_tuning, stats=self.stats,
+            prev=prev)
 
     def _latency(self, sites, table) -> latency.LatencyReport:
         return latency.model_latency(
             self.cfg, sites, table, seq_len=self.pcfg.seq_len,
-            use_tuning=self.pcfg.use_tuning, stats=None)
+            use_tuning=self.pcfg.use_tuning, stats=self.stats)
 
     def _prune_step_for(self, task: Task) -> int:
         site = task.sites[0]
@@ -181,8 +185,10 @@ class CPrune:
                 if cand_sites is sites:
                     retired.add(r.signature)
                     continue
-                # Lines 7-9: extract tasks, tune, measure l_m
-                cand_table = self._tuned_table(cand_sites)
+                # Lines 7-9: extract tasks, tune, measure l_m — only the
+                # pruned task's signatures are re-searched; the rest of the
+                # table carries over from the current best model
+                cand_table = self._tuned_table(cand_sites, prev=table)
                 cand_rep = self._latency(cand_sites, cand_table)
                 l_m = cand_rep.total_s
                 # Line 10: must beat the latency target
@@ -230,14 +236,9 @@ class CPrune:
                 break   # Line 14
             it += 1
             if not accepted:
-                # every task failed the latency or accuracy gate
-                remaining = [t for t in table.ordered()
-                             if t.signature not in retired]
-                if not remaining:
-                    break
-                # relax the latency target (the paper implicitly re-enters
-                # with the same l_t; without a candidate below l_t the loop
-                # would spin, so we terminate)
+                # every task failed the latency or accuracy gate; the paper
+                # implicitly re-enters with the same l_t — without a
+                # candidate below l_t the loop would spin, so we terminate
                 break
 
         # Line 17: final long-term training

@@ -14,7 +14,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
-from repro.core import cost_model, tuner
+from repro.core import cost_model, tuner, tuning_cache
 from repro.core.tasks import TaskTable, Workload
 from repro.models.model import PruneSite
 
@@ -39,11 +39,39 @@ def _head_dim_of(cfg, sites: Sequence[PruneSite], block_path: str) -> int:
     return cfg.n_heads
 
 
+# Memo for the whole fixed-op computation. The only site-dependent inputs
+# are the (rarely changing) per-block q-head counts, so candidate models
+# that prune FFN/MoE dims re-read the fixed half for free.
+_FIXED_CACHE: Dict[Tuple, Tuple[float, Dict[str, float]]] = {}
+
+
+def clear_fixed_latency_cache() -> None:
+    _FIXED_CACHE.clear()
+
+
+def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning) -> Optional[Tuple]:
+    heads = tuple(sorted((s.block_path, s.dim)
+                         for s in sites if s.kind == "heads"))
+    key = (cfg, heads, wl, seq_len, use_tuning) \
+        + tuning_cache.target_fingerprint()
+    try:
+        hash(key)
+    except TypeError:        # non-hashable config variant: skip memoization
+        return None
+    return key
+
+
 def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                   *, seq_len: int, use_tuning: bool = True,
                   stats: Optional[tuner.TunerStats] = None
                   ) -> Tuple[float, Dict[str, float]]:
     """Latency of the non-prunable ops, per step, per shard."""
+    memo_key = None
+    if tuner.engine() != "reference":
+        memo_key = _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning)
+        if memo_key is not None and memo_key in _FIXED_CACHE:
+            total, bd = _FIXED_CACHE[memo_key]
+            return total, dict(bd)
     d = cfg.d_model
     m = wl.tokens_local
     batch_local = max(1, m // max(seq_len, 1))
@@ -111,7 +139,10 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
     add("embed", m * d * wl.dtype_bytes / cost_model.HBM_BW)
     un = tune(m, d, max(1, cfg.vocab_size // tp), dtype_bytes=wl.dtype_bytes)
     add("unembed", un.latency)
-    return sum(bd.values()), bd
+    total = sum(bd.values())
+    if memo_key is not None:
+        _FIXED_CACHE[memo_key] = (total, dict(bd))
+    return total, bd
 
 
 def model_latency(cfg: ModelConfig, sites: Sequence[PruneSite],

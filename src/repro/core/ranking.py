@@ -96,15 +96,20 @@ def keep_indices(scores: np.ndarray, n_prune: int, *,
     """
     dim = scores.shape[-1]
     n_keep = dim - n_prune
+
+    def _lowest_out(row, n_drop):
+        # O(n) selection: indices with the n_drop lowest scores out, sorted.
+        # Which member of a tie straddling the cut survives is unspecified
+        # (it already was under the previous unstable argsort).
+        if n_drop <= 0:
+            return np.arange(len(row))
+        idx = np.argpartition(row, n_drop - 1)[n_drop:]
+        return np.sort(idx)
+
     if group <= 1:
         if scores.ndim == 1:
-            idx = np.argsort(scores)[n_prune:]
-            return np.sort(idx)
-        keep = []
-        for row in scores:
-            idx = np.argsort(row)[n_prune:]
-            keep.append(np.sort(idx))
-        return np.stack(keep)
+            return _lowest_out(scores, n_prune)
+        return np.stack([_lowest_out(row, n_prune) for row in scores])
     # grouped: prune n_prune/group lowest inside each contiguous group
     per_group = dim // group
     prune_per_group = n_prune // group
@@ -113,8 +118,7 @@ def keep_indices(scores: np.ndarray, n_prune: int, *,
         kept = []
         for g in range(group):
             seg = row[g * per_group:(g + 1) * per_group]
-            idx = np.argsort(seg)[prune_per_group:] + g * per_group
-            kept.append(np.sort(idx))
+            kept.append(_lowest_out(seg, prune_per_group) + g * per_group)
         return np.concatenate(kept)
 
     if scores.ndim == 1:

@@ -67,7 +67,11 @@ class Task:
     signature: Tuple
     sites: List[PruneSite]
     programs: Dict[str, Program] = dataclasses.field(default_factory=dict)
-    tuned: bool = False
+    tuned_mode: str = ""     # "tuned" | "untuned" once programs are recorded
+
+    @property
+    def tuned(self) -> bool:
+        return bool(self.tuned_mode)
 
     @property
     def n_subgraphs(self) -> int:
@@ -102,6 +106,7 @@ class TaskTable:
         self.wl = wl
         self.tasks: List[Task] = []
         by_sig: Dict[Tuple, Task] = {}
+        self._by_site: Dict[str, Task] = {}
         for s in sites:
             sig = site_signature(s, wl)
             if sig not in by_sig:
@@ -109,12 +114,15 @@ class TaskTable:
                 by_sig[sig] = t
                 self.tasks.append(t)
             by_sig[sig].sites.append(s)
+            self._by_site[s.site_id] = by_sig[sig]
+        self._by_sig = by_sig
 
     def task_for_site(self, site_id: str) -> Optional[Task]:
-        for t in self.tasks:
-            if any(s.site_id == site_id for s in t.sites):
-                return t
-        return None
+        return self._by_site.get(site_id)
+
+    def task_by_signature(self, signature: Tuple) -> Optional[Task]:
+        """O(1) signature lookup — the hinge of incremental retuning."""
+        return self._by_sig.get(signature)
 
     def ordered(self) -> List[Task]:
         """Prioritized task list R (descending pruning impact, §3.3)."""

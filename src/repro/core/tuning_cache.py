@@ -1,0 +1,148 @@
+"""Process-wide memoization of tuned programs (the paper's reuse of tuning
+logs across CPrune iterations, cf. §4.2 "the tuning information of the
+previous model is reused").
+
+CPrune evaluates hundreds of candidate models, and almost every GEMM in a
+candidate is *identical* to one already tuned — only the pruned task's
+shapes change. The ``ProgramCache`` keys a tuned :class:`Program` by the
+full tuning problem:
+
+    (m, k, n, batch, dtype_bytes, epilogue_ops, vmem_budget,
+     <target constants>)
+
+The target constants (peak FLOP/s, HBM bandwidth, VMEM budget, overheads)
+are read from :mod:`repro.core.cost_model` at lookup time, so swapping the
+emulated target (benchmarks/fig8_cross_target.py mutates those module
+globals) transparently invalidates every entry — a different target is a
+different key, never a stale hit.
+
+An optional JSON persistence layer serializes the cache so separate runs
+(or separate configs in a sweep) reuse each other's tuning logs, the way
+the paper reuses TVM tuning records on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.core import cost_model
+from repro.core.cost_model import Block
+from repro.core.program import Program
+
+Key = Tuple
+
+_FORMAT_VERSION = 1
+
+
+def target_fingerprint() -> Tuple:
+    """The cost-model constants a tuned program depends on.
+
+    Read at call time: fig8-style target swaps mutate these module globals,
+    and any change must miss the cache.
+    """
+    return (cost_model.PEAK_FLOPS_BF16, cost_model.PEAK_FLOPS_F32,
+            cost_model.HBM_BW, cost_model.VMEM_BYTES,
+            cost_model.BLOCK_OVERHEAD_S, cost_model.CALL_OVERHEAD_S,
+            cost_model.VPU_THROUGHPUT, cost_model.LANE, cost_model.SUBLANE,
+            cost_model.MXU)
+
+
+def program_key(m: int, k: int, n: int, *, batch: int = 1,
+                dtype_bytes: int = 2, epilogue_ops: int = 0,
+                vmem: Optional[int] = None) -> Key:
+    """Cache key for one GEMM tuning problem under the current target."""
+    eff_vmem = cost_model.VMEM_BYTES if vmem is None else vmem
+    return (m, k, n, batch, dtype_bytes, epilogue_ops,
+            eff_vmem) + target_fingerprint()
+
+
+class ProgramCache:
+    """Thread-safe map from tuning problem to the fastest tuned Program."""
+
+    def __init__(self):
+        self._store: Dict[Key, Program] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: Key) -> Optional[Program]:
+        with self._lock:
+            prog = self._store.get(key)
+            if prog is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return prog
+
+    def put(self, key: Key, prog: Program) -> None:
+        with self._lock:
+            self._store[key] = prog
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
+
+    # -- JSON persistence (the on-disk tuning log) --------------------------
+
+    def save(self, path: str) -> int:
+        """Write all entries as JSON; returns the number saved."""
+        entries = []
+        with self._lock:
+            for key, p in self._store.items():
+                entries.append({
+                    "key": list(key),
+                    "program": {
+                        "m": p.m, "k": p.k, "n": p.n,
+                        "bm": p.block.bm, "bk": p.block.bk, "bn": p.block.bn,
+                        "latency": p.latency, "dtype_bytes": p.dtype_bytes,
+                        "batch": p.batch,
+                    },
+                })
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": _FORMAT_VERSION, "entries": entries}, f)
+        os.replace(tmp, path)
+        return len(entries)
+
+    def load(self, path: str) -> int:
+        """Merge entries from a JSON tuning log; returns the number loaded.
+
+        Keys carry the target fingerprint, so logs recorded under a
+        different target load harmlessly — they can never be hit until that
+        target is active again.
+        """
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("version") != _FORMAT_VERSION:
+            return 0
+        n = 0
+        with self._lock:
+            for e in blob["entries"]:
+                d = e["program"]
+                prog = Program(
+                    m=d["m"], k=d["k"], n=d["n"],
+                    block=Block(d["bm"], d["bk"], d["bn"]),
+                    latency=d["latency"], dtype_bytes=d["dtype_bytes"],
+                    batch=d["batch"])
+                self._store[tuple(e["key"])] = prog
+                n += 1
+        return n
+
+
+_global_cache = ProgramCache()
+
+
+def global_cache() -> ProgramCache:
+    return _global_cache
+
+
+def reset_global_cache() -> None:
+    """Drop every memoized program (tests / cold-start benchmarking)."""
+    _global_cache.clear()

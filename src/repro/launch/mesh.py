@@ -11,8 +11,15 @@ from typing import Optional, Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_compat(shape, axes, devices=None):
+    """``jax.make_mesh`` across jax versions: newer jax takes ``axis_types``
+    (we want Auto, its default); jax <= 0.4 has neither the kwarg nor
+    ``jax.sharding.AxisType`` — omitting them is the same behavior."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(axis_type.Auto,) * len(shape))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,8 +28,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     import math
     n = math.prod(shape)
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=_auto(len(shape)))
+    return make_mesh_compat(shape, axes, jax.devices()[:n])
 
 
 def make_test_mesh(n_devices: Optional[int] = None, *,
@@ -31,9 +37,8 @@ def make_test_mesh(n_devices: Optional[int] = None, *,
     n = n_devices or len(jax.devices())
     model = model or (2 if n % 2 == 0 and n > 1 else 1)
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[: data * model],
-                         axis_types=_auto(2))
+    return make_mesh_compat((data, model), ("data", "model"),
+                            jax.devices()[: data * model])
 
 
 def required_devices(multi_pod: bool) -> int:

@@ -42,9 +42,8 @@ opt = adamw_init(params)
 m0 = Model(cfg)
 loss0, _ = jax.jit(m0.loss_fn)(params, batch)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     devices=jax.devices()[:8],
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 2), ("data", "model"), jax.devices()[:8])
 model = S.build_model(cfg, mesh)
 step = S.make_train_step(cfg, model)
 with mesh, logical.set_rules(mesh, rules.logical_rules(mesh)):
@@ -79,9 +78,8 @@ logits0, caches0 = jax.jit(lambda p, b: model0.prefill(p, b, 32))(
 tok = jnp.argmax(logits0[:, 0], -1).astype(jnp.int32)[:, None]
 ref_logits, _ = jax.jit(model0.decode_step)(params, tok, caches0)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     devices=jax.devices()[:8],
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 2), ("data", "model"), jax.devices()[:8])
 model = S.build_model(cfg, mesh)
 serve = S.make_serve_step(cfg, model)
 with mesh, logical.set_rules(mesh, rules.logical_rules(mesh, seq_shard=False)):

@@ -1,0 +1,266 @@
+"""Tuning engine: vectorized grid search, ProgramCache, incremental retune.
+
+Covers the cache-correctness contract: cached/warm tuning is bit-identical
+to cold tuning, the vectorized engine is bit-identical to the scalar
+reference engine, incremental table retuning matches a from-scratch
+rebuild, and CPrune's per-iteration tuning work collapses once the cache
+is active.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_reduced_config
+from repro.core import cost_model, latency, tuner, tuning_cache
+from repro.core.cprune import CPrune, CPruneConfig, TrainHooks
+from repro.core.tasks import TaskTable, Workload
+from repro.core.tuner import TunerStats, build_tuned_table, tune_gemm
+from repro.models.model import init_params, prune_sites
+
+
+from repro.core import clear_tuning_caches
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence + cache correctness
+# ---------------------------------------------------------------------------
+
+_CASES = [
+    (65536, 256, 8192, 1, 2, 4),
+    (65536, 8192, 256, 1, 2, 0),
+    (512, 256, 1024, 1, 4, 0),
+    (64, 64, 64, 1, 2, 0),
+    (128, 4096, 512, 8, 2, 6),
+    (1, 128, 128, 1, 2, 0),
+]
+
+
+def test_vectorized_matches_reference_bit_identical():
+    for (m, k, n, b, db, epi) in _CASES:
+        with tuner.engine_mode("reference"):
+            ref = tune_gemm(m, k, n, batch=b, dtype_bytes=db,
+                            epilogue_ops=epi)
+        new = tune_gemm(m, k, n, batch=b, dtype_bytes=db, epilogue_ops=epi)
+        assert ref == new          # same Block AND exact same latency float
+
+
+def test_cost_grid_matches_scalar_cost():
+    m, k, n = 1024, 512, 768
+    bm, bk, bn = tuner.candidate_grid(m, k, n)
+    lats = cost_model.matmul_cost_grid(m, k, n, bm, bk, bn,
+                                       dtype_bytes=2, batch=3,
+                                       epilogue_ops=5)
+    for i in range(len(bm)):
+        blk = cost_model.Block(int(bm[i]), int(bk[i]), int(bn[i]))
+        assert lats[i] == cost_model.matmul_cost(
+            m, k, n, blk, dtype_bytes=2, batch=3, epilogue_ops=5)
+
+
+def test_cold_tune_is_grid_exact_and_warm_is_free():
+    stats = TunerStats()
+    p1 = tune_gemm(2048, 512, 1024, stats=stats)
+    grid = len(tuner.candidate_blocks(2048, 512, 1024))
+    assert stats.candidates_evaluated == grid
+    assert stats.cache_misses == 1 and stats.cache_hits == 0
+    p2 = tune_gemm(2048, 512, 1024, stats=stats)
+    assert stats.candidates_evaluated == grid     # no new evaluations
+    assert stats.cache_hits == 1
+    assert p1 == p2                               # bit-identical Program
+
+
+def test_json_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "tuning_log.json")
+    stats = TunerStats()
+    p1 = tune_gemm(4096, 1024, 2048, stats=stats, epilogue_ops=3)
+    assert tuning_cache.global_cache().save(path) >= 1
+
+    tuning_cache.reset_global_cache()
+    assert tuning_cache.global_cache().load(path) >= 1
+    stats2 = TunerStats()
+    p2 = tune_gemm(4096, 1024, 2048, stats=stats2, epilogue_ops=3)
+    assert stats2.candidates_evaluated == 0 and stats2.cache_hits == 1
+    assert p1 == p2
+
+
+def test_target_constant_swap_invalidates_cache():
+    stats = TunerStats()
+    tune_gemm(512, 512, 512, stats=stats)
+    old = cost_model.HBM_BW
+    cost_model.HBM_BW = 2 * old
+    try:
+        tune_gemm(512, 512, 512, stats=stats)
+    finally:
+        cost_model.HBM_BW = old
+    assert stats.cache_misses == 2 and stats.cache_hits == 0
+    # back on the original target: the first entry is valid again
+    tune_gemm(512, 512, 512, stats=stats)
+    assert stats.cache_hits == 1
+
+
+def test_vmem_override_constrains_search():
+    small = 1 * 1024 * 1024
+    for blk in tuner.candidate_blocks(65536, 1024, 2048, vmem=small):
+        assert blk.vmem_bytes(2) <= small
+    p_small = tune_gemm(65536, 1024, 2048, vmem=small)
+    p_big = tune_gemm(65536, 1024, 2048)
+    assert p_small.block.vmem_bytes(2) <= small
+    assert p_big.block.vmem_bytes(2) > small      # override actually binds
+    assert p_small.latency >= p_big.latency
+
+
+# ---------------------------------------------------------------------------
+# Incremental TaskTable retuning
+# ---------------------------------------------------------------------------
+
+def _sites_and_wl():
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        d_model=128, d_ff=2048, n_layers=2)
+    return cfg, prune_sites(cfg), Workload(tokens_global=4096)
+
+
+def test_incremental_retune_matches_scratch_rebuild():
+    cfg, sites, wl = _sites_and_wl()
+    table = build_tuned_table(sites, wl)
+
+    pruned = [s.with_dim(s.dim - 128) if s.kind == "ffn" else s
+              for s in sites]
+    s_inc = TunerStats()
+    inc = build_tuned_table(pruned, wl, stats=s_inc, prev=table)
+    assert s_inc.tasks_reused >= 1           # heads task carried over
+
+    tuning_cache.reset_global_cache()        # scratch build is truly cold
+    scratch = build_tuned_table(pruned, wl)
+    assert len(inc.tasks) == len(scratch.tasks)
+    for a, b in zip(inc.tasks, scratch.tasks):
+        assert a.signature == b.signature
+        assert a.programs == b.programs      # bit-identical programs
+        assert a.latency == b.latency
+
+
+def test_incremental_retune_refuses_stale_prev():
+    """A prev table tuned under another target/workload must not carry."""
+    cfg, sites, wl = _sites_and_wl()
+    table = build_tuned_table(sites, wl)
+    old = cost_model.HBM_BW
+    cost_model.HBM_BW = 2 * old
+    try:
+        stats = TunerStats()
+        swapped = build_tuned_table(sites, wl, stats=stats, prev=table)
+        assert stats.tasks_reused == 0       # fingerprint mismatch
+        fresh = build_tuned_table(sites, wl)
+        for a, b in zip(swapped.tasks, fresh.tasks):
+            assert a.programs == b.programs
+    finally:
+        cost_model.HBM_BW = old
+    # different workload sharding: signature matches but programs don't
+    stats = TunerStats()
+    build_tuned_table(sites, Workload(tokens_global=4096, tp=2),
+                      stats=stats, prev=table)
+    assert stats.tasks_reused == 0
+
+
+def test_task_for_site_index():
+    cfg, sites, wl = _sites_and_wl()
+    table = TaskTable(sites, wl)
+    for s in sites:
+        t = table.task_for_site(s.site_id)
+        assert t is not None and any(x.site_id == s.site_id for x in t.sites)
+    assert table.task_for_site("no/such:site") is None
+    for t in table.tasks:
+        assert table.task_by_signature(t.signature) is t
+
+
+# ---------------------------------------------------------------------------
+# fixed_latency memoization
+# ---------------------------------------------------------------------------
+
+def test_fixed_latency_memoized_by_head_dims():
+    cfg, sites, wl = _sites_and_wl()
+    stats = TunerStats()
+    t1, bd1 = latency.fixed_latency(cfg, sites, wl, seq_len=64, stats=stats)
+    work = stats.candidates_evaluated
+    assert work > 0
+    t2, bd2 = latency.fixed_latency(cfg, sites, wl, seq_len=64, stats=stats)
+    assert stats.candidates_evaluated == work    # served from the memo
+    assert t1 == t2 and bd1 == bd2
+    bd2["unembed"] = 0.0                         # memo hands out copies
+    _, bd3 = latency.fixed_latency(cfg, sites, wl, seq_len=64, stats=stats)
+    assert bd3 == bd1
+    # pruning q-heads changes the fixed half -> recompute, new total
+    pruned = [s.with_dim(s.dim - s.granularity) if s.kind == "heads" else s
+              for s in sites]
+    t3, _ = latency.fixed_latency(cfg, pruned, wl, seq_len=64, stats=stats)
+    assert t3 != t1
+
+
+# ---------------------------------------------------------------------------
+# CPrune regression: tuning work collapses after the cold start
+# ---------------------------------------------------------------------------
+
+class _RecordingCPrune(CPrune):
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.deltas = []
+
+    def _tuned_table(self, sites, prev=None):
+        before = self.stats.candidates_evaluated
+        table = super()._tuned_table(sites, prev)
+        self.deltas.append(self.stats.candidates_evaluated - before)
+        return table
+
+
+def _fake_hooks(acc=0.9):
+    return TrainHooks(short_term_train=lambda p, s: p,
+                      eval_acc=lambda p, s: acc)
+
+
+def test_cprune_candidates_evaluated_drops_across_iterations():
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        d_model=128, d_ff=2048, n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sites = prune_sites(cfg)
+    pcfg = CPruneConfig(a_g=0.5, alpha=0.5, beta=0.9999, max_iterations=4,
+                        seq_len=64)
+    cp = _RecordingCPrune(cfg, sites, Workload(tokens_global=16384),
+                          _fake_hooks(), pcfg)
+    res = cp.run(params)
+    assert sum(h.accepted for h in res.history) >= 2
+    cold, warm = cp.deltas[0], cp.deltas[1:]
+    assert cold > 0 and warm
+    # every candidate retune after the cold start does strictly less work:
+    # unchanged tasks carry over, unchanged GEMMs hit the ProgramCache
+    assert all(d < cold for d in warm)
+    assert res.tuner_stats.cache_hits > 0
+    assert res.tuner_stats.tasks_reused >= len(warm)
+    # warm re-tune of an unchanged model does no grid work at all
+    stats = TunerStats()
+    build_tuned_table(res.sites, cp.wl, stats=stats, prev=None)
+    assert stats.candidates_evaluated == 0       # every GEMM already cached
+
+
+def test_engines_agree_on_cprune_history():
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        d_model=128, d_ff=1024, n_layers=2)
+    pcfg = CPruneConfig(a_g=0.5, alpha=0.5, beta=0.9999, max_iterations=3,
+                        seq_len=64)
+    wl = Workload(tokens_global=16384)
+    sites = prune_sites(cfg)
+
+    def history(engine):
+        tuning_cache.reset_global_cache()
+        latency.clear_fixed_latency_cache()
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        with tuner.engine_mode(engine):
+            res = CPrune(cfg, sites, wl, _fake_hooks(), pcfg).run(params)
+        return [(h.task_kind, h.prune_units, h.dim_before, h.dim_after,
+                 h.l_m, h.accepted) for h in res.history]
+
+    assert history("reference") == history("vectorized")
