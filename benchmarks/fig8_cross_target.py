@@ -3,74 +3,59 @@
 The paper prunes for one processor and shows the FPS increase is
 significantly higher on the pruning target than when the same pruned model
 runs on a different processor. We emulate two TPU "targets" with different
-roofline balances (v5e-like vs a bandwidth-rich/compute-poor variant):
-CPrune tuned against target A should beat, on A, the model that was pruned
+roofline balances — the registered `tpu_v5e` backend vs a custom
+`bw_rich` :class:`TargetSpec` (compute-poor, bandwidth-rich, tiny VMEM):
+CPrune run against target A should beat, on A, the model that was pruned
 for target B — and vice versa.
 """
 from __future__ import annotations
 
-import contextlib
-
 from benchmarks import common
-from repro.core import CPrune, tuner
-from repro.core import cost_model
+from repro.api import PruningSession, TargetSpec, get_target
+from repro.core import tuner
 from repro.core.latency import model_latency
 
-# (peak_flops, hbm_bw, vmem_bytes) per emulated target — the VMEM budget
-# changes which blocks tune fastest, hence the structure-preserving steps
-TARGETS = {
-    "v5e": (197e12, 819e9, 64 * 2 ** 20),
-    "bw_rich": (60e12, 1600e9, 4 * 2 ** 20),   # compute-poor, tiny VMEM
-}
+# the VMEM budget changes which blocks tune fastest, hence the
+# structure-preserving prune steps (custom spec: not in the registry)
+BW_RICH = TargetSpec(
+    name="bw_rich", peak_flops_bf16=60e12, peak_flops_f32=60e12 / 4,
+    hbm_bw=1600e9, ici_bw=50e9, vmem_bytes=4 * 2 ** 20,
+    description="compute-poor, bandwidth-rich, tiny VMEM")
+
+TARGETS = {"tpu_v5e": get_target("tpu_v5e"), "bw_rich": BW_RICH}
 
 
-@contextlib.contextmanager
-def _target(name: str):
-    peak, bw, vmem = TARGETS[name]
-    old = (cost_model.PEAK_FLOPS_BF16, cost_model.HBM_BW,
-           cost_model.VMEM_BYTES)
-    cost_model.PEAK_FLOPS_BF16 = peak
-    cost_model.HBM_BW = bw
-    cost_model.VMEM_BYTES = vmem
-    try:
-        yield
-    finally:
-        (cost_model.PEAK_FLOPS_BF16, cost_model.HBM_BW,
-         cost_model.VMEM_BYTES) = old
-
-
-def _fps(cfg, sites, wl, seq_len):
-    table = tuner.build_tuned_table(sites, wl)
-    return model_latency(cfg, sites, table, seq_len=seq_len).fps
+def _fps_on(target, cfg, sites, wl, seq_len):
+    table = tuner.build_tuned_table(sites, wl, target=target)
+    return model_latency(cfg, sites, table, seq_len=seq_len,
+                         target=target).fps
 
 
 def run():
     t = common.Timer()
     pruned = {}
     base_fps = {}
-    # prune one model per target
-    for tgt in TARGETS:
+    # prune one model per target — same seed/pretraining, different backend
+    for tgt, spec in TARGETS.items():
         setup = common.make_setup(d_model=256, d_ff=2048, n_heads=8,
                                   n_kv_heads=2, head_dim=32, n_layers=4,
                                   max_iterations=6, alpha=0.8, beta=0.99)
         common.pretrain(setup, steps=36)
-        with _target(tgt):
-            base_fps[tgt] = _fps(setup.cfg, setup.sites, setup.wl,
-                                 setup.pcfg.seq_len)
-            cp = CPrune(setup.cfg, setup.sites, setup.wl, setup.hooks,
-                        setup.pcfg)
-            res = cp.run(setup.params)
+        session = PruningSession(setup.cfg, params=setup.params, target=spec,
+                                 workload=setup.wl, hooks=setup.hooks,
+                                 pcfg=setup.pcfg)
+        base_fps[tgt] = session.latency_report().fps
+        res = session.prune(strategy="cprune")
         pruned[tgt] = (setup.cfg, res.sites)
 
     # cross matrix: FPS increase of model pruned-for-row measured on col
     rates = {}
     for made_for, (cfg, sites) in pruned.items():
-        for run_on in TARGETS:
-            with _target(run_on):
-                wl = common.bench_workload()
-                rates[(made_for, run_on)] = (
-                    _fps(cfg, sites, wl, common.BENCH_SEQ)
-                    / base_fps[run_on])
+        for run_on, spec in TARGETS.items():
+            wl = common.bench_workload()
+            rates[(made_for, run_on)] = (
+                _fps_on(spec, cfg, sites, wl, common.BENCH_SEQ)
+                / base_fps[run_on])
 
     own = [rates[(t, t)] for t in TARGETS]
     cross = [rates[(a, b)] for a in TARGETS for b in TARGETS if a != b]

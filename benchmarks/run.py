@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   table2_ablations   paper Table 2 + Fig. 9 + Fig. 10 (tuning,
                      associated-subgraph ablations)
   fig11_search_cost  paper Fig. 11 (selective vs exhaustive search)
+  session_targets    PruningSession target registry: tpu_v5e bit-identical
+                     to the seed model, edge yields a different history
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -20,8 +22,8 @@ import traceback
 def main() -> None:
     from benchmarks import (fig1_correlation, fig6_iterations,
                             fig8_cross_target, fig11_search_cost,
-                            kernels_bench, roofline, table1_methods,
-                            table2_ablations, tuner_bench)
+                            kernels_bench, roofline, session_targets,
+                            table1_methods, table2_ablations, tuner_bench)
     from benchmarks import common
 
     print("name,us_per_call,derived")
@@ -31,6 +33,7 @@ def main() -> None:
         ("table1_methods", table1_methods.run),
         ("table2_ablations", table2_ablations.run),
         ("fig8_cross_target", fig8_cross_target.run),
+        ("session_targets", session_targets.run),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

@@ -1,0 +1,79 @@
+"""Target-aware session benchmark — the acceptance check for the
+`PruningSession` target registry:
+
+  * under the ``tpu_v5e`` backend the accepted prune history is identical
+    to the default (active-constants) run — the registry is bit-identical
+    to the seed cost model;
+  * under the ``edge`` backend the same quickstart-shaped workload yields
+    a *different* accepted history (different prune quanta / trajectory) —
+    the compiler-informed loop actually listens to the target.
+
+Training hooks are stubbed so the digest isolates the compiler/tuner side.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.api import CPruneConfig, PruningSession, TrainHooks, list_targets
+from repro.models.model import init_params
+
+_QUICKSTART_KW = dict(n_layers=4, d_model=128, d_ff=1024, n_heads=8,
+                      n_kv_heads=2, head_dim=16, vocab_size=256)
+
+
+def _hooks_pcfg():
+    return (TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: 0.9),
+            CPruneConfig(a_g=0.5, alpha=0.5, beta=0.9999, max_iterations=8,
+                         seq_len=common.BENCH_SEQ))
+
+
+def _prune_on(target, cfg, params):
+    common.reset_tuning_caches()
+    hooks, pcfg = _hooks_pcfg()
+    session = PruningSession(
+        cfg, params=params, target=target, workload=common.bench_workload(),
+        hooks=hooks, pcfg=pcfg)
+    return session.prune(strategy="cprune")
+
+
+def _prune_raw_core(cfg, params):
+    """The pre-registry path: CPrune directly on the active (seed) target
+    constants — the baseline the ``tpu_v5e`` backend must reproduce."""
+    from repro.core import CPrune
+    from repro.models.model import prune_sites
+    common.reset_tuning_caches()
+    hooks, pcfg = _hooks_pcfg()
+    res = CPrune(cfg, prune_sites(cfg), common.bench_workload(), hooks,
+                 pcfg).run(params)
+    return [(h.task_kind, h.prune_units, h.dim_before, h.dim_after,
+             h.accepted) for h in res.history]
+
+
+def run():
+    t = common.Timer()
+    cfg = common.bench_config("qwen3_1_7b", **_QUICKSTART_KW)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    digests = {tgt: tuple(_prune_on(tgt, cfg, params).history_digest())
+               for tgt in list_targets()}
+    v5e_default_identical = digests["tpu_v5e"] == tuple(
+        _prune_raw_core(cfg, params))
+    edge_differs = digests["edge"] != digests["tpu_v5e"]
+
+    derived = (f"v5e_matches_default={v5e_default_identical};"
+               f"edge_differs_from_v5e={edge_differs};"
+               + ";".join(f"{k}_accepted={len(v)}"
+                          for k, v in sorted(digests.items())))
+    common.emit("session_targets", t.us(), derived)
+    if not v5e_default_identical:
+        raise AssertionError("tpu_v5e target drifted from the seed model")
+    if not edge_differs:
+        raise AssertionError("edge target did not change the prune history")
+    return {"digests": digests, "v5e_default": v5e_default_identical,
+            "edge_differs": edge_differs}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,21 +1,20 @@
 """Table 1 reproduction: CPrune vs model-based pruning (L1, FPGM) and
-hardware-aware pruning (NetAdapt-style), all through the same tuner.
+hardware-aware pruning (NetAdapt-style), all through the same tuner — one
+`PruningSession` per method, strategies swapped by name.
 
 Columns: FPS (increase rate), FLOPs, params, accuracy — mirroring the
 paper's Mobile CPU/GPU table on our v5e cost-model target.
 """
 from __future__ import annotations
 
-import jax
-
 from benchmarks import common
-from repro.core import CPrune, baselines, tuner
-from repro.core.latency import model_latency
+from repro.api import PruningSession
 
 
-def _fps(cfg, sites, wl, seq_len):
-    table = tuner.build_tuned_table(sites, wl)
-    return model_latency(cfg, sites, table, seq_len=seq_len).fps
+def _session(setup) -> PruningSession:
+    return PruningSession(setup.cfg, params=setup.params, target="tpu_v5e",
+                          workload=setup.wl, hooks=setup.hooks,
+                          pcfg=setup.pcfg)
 
 
 def run():
@@ -25,43 +24,29 @@ def run():
     # Original (tuned only — the "TVM auto-tune" row)
     setup = common.make_setup(max_iterations=8, alpha=0.8, beta=0.99)
     common.pretrain(setup, steps=30)
-    base_fps = _fps(setup.cfg, setup.sites, setup.wl, setup.pcfg.seq_len)
+    base = _session(setup)
+    base_fps = base.latency_report().fps
     base_acc = setup.hooks.eval_acc(setup.params, setup.sites)
     rows["original"] = dict(
         fps=base_fps, rate=1.0, acc=base_acc,
         params=common.count_params(setup.params),
         flops=common.model_flops_per_token(setup.cfg))
 
-    p0 = setup.params   # shared pretrained start for every method
-
-    # L1 / FPGM uniform baselines
-    for method, name in (("l1", "l1_uniform"), ("fpgm", "fpgm")):
-        res = baselines.uniform_prune(
-            setup.cfg, p0, setup.sites, setup.wl, setup.hooks, setup.pcfg,
-            ratio=0.375, method=method, name=name)
-        rows[name] = dict(fps=res.latency.fps,
-                          rate=res.latency.fps / base_fps, acc=res.acc,
-                          params=common.count_params(res.params),
-                          flops=0)
-
-    # NetAdapt-style exhaustive hardware-aware
-    common.reset_tuning_caches()   # per-arm cold start: evals comparable
-    res = baselines.netadapt_prune(
-        setup.cfg, p0, setup.sites, setup.wl, setup.hooks, setup.pcfg,
-        latency_decay=0.96, max_iterations=4)
-    rows["netadapt"] = dict(fps=res.latency.fps,
-                            rate=res.latency.fps / base_fps, acc=res.acc,
-                            params=common.count_params(res.params),
-                            flops=0, evals=res.candidates_evaluated)
-
-    # CPrune
-    common.reset_tuning_caches()
-    cp = CPrune(setup.cfg, setup.sites, setup.wl, setup.hooks, setup.pcfg)
-    cres = cp.run(p0)
-    rows["cprune"] = dict(fps=cres.final_latency.fps,
-                          rate=cres.fps_increase, acc=cres.final_acc,
-                          params=common.count_params(cres.params),
-                          flops=0)
+    # One strategy registry, one calling convention per method row.
+    arms = [
+        ("l1_uniform", "uniform_l1", dict(ratio=0.375)),
+        ("fpgm", "fpgm", dict(ratio=0.375)),
+        ("netadapt", "netadapt", dict(latency_decay=0.96, max_iterations=4)),
+        ("cprune", "cprune", {}),
+    ]
+    for row_name, strategy, kw in arms:
+        common.reset_tuning_caches()   # per-arm cold start: evals comparable
+        res = _session(setup).prune(strategy=strategy, **kw)
+        rows[row_name] = dict(fps=res.final_latency.fps,
+                              rate=res.final_latency.fps / base_fps,
+                              acc=res.final_acc,
+                              params=common.count_params(res.params),
+                              flops=0, evals=res.candidates_evaluated)
 
     derived = ";".join(
         f"{k}:rate={v['rate']:.2f},acc={v['acc']:.3f},"

@@ -8,6 +8,10 @@
                       iteration instead of all associated subgraphs.
   * full CPrune       (reference row)
 
+Each variant is one `PruningSession.prune("cprune", **ablation)` call —
+the ablation switches are CPruneConfig overrides forwarded by the
+strategy.
+
 Arch: the hybrid (RecurrentGemma-family) bench config — its FFN task spans
 three stack positions, so "associated subgraphs" is a real set, as in the
 paper's ResNet graph (Fig. 4).
@@ -24,16 +28,8 @@ cost comparison lives in fig11_search_cost.py.
 """
 from __future__ import annotations
 
-import dataclasses
-
 from benchmarks import common
-from repro.core import CPrune, tuner
-from repro.core.latency import model_latency
-
-
-def _tuned_fps(cfg, sites, wl, seq_len):
-    table = tuner.build_tuned_table(sites, wl, use_tuning=True)
-    return model_latency(cfg, sites, table, seq_len=seq_len).fps
+from repro.api import PruningSession
 
 
 def _run_variant(name: str, **pcfg_over):
@@ -47,18 +43,18 @@ def _run_variant(name: str, **pcfg_over):
                               head_dim=64, rglru_width=256,
                               max_iterations=6, alpha=0.8, beta=0.99)
     common.pretrain(setup, steps=36)
-    base_fps = _tuned_fps(setup.cfg, setup.sites, setup.wl,
-                          setup.pcfg.seq_len)
-    pcfg = dataclasses.replace(setup.pcfg, **pcfg_over)
-    cp = CPrune(setup.cfg, setup.sites, setup.wl, setup.hooks, pcfg)
-    res = cp.run(setup.params)
+    session = PruningSession(setup.cfg, params=setup.params,
+                             workload=setup.wl, hooks=setup.hooks,
+                             pcfg=setup.pcfg)
+    base_fps = session.latency_report().fps
+    res = session.prune(strategy="cprune", **pcfg_over)
     # paper Line 17: the final model is tuned regardless of the ablation
-    final_fps = _tuned_fps(setup.cfg, res.sites, setup.wl,
-                           setup.pcfg.seq_len)
+    # (the session's latency_report always consults the tuned table)
+    final_fps = session.latency_report().fps
     return {
         "rate": final_fps / base_fps,
         "acc": res.final_acc,
-        "evals": res.tuner_stats.candidates_evaluated,
+        "evals": res.candidates_evaluated,
         "accepted": sum(h.accepted for h in res.history),
         "iters": len(res.history),
     }

@@ -1,16 +1,16 @@
 """MoE pruning demo: CPrune on a Mixtral-family model, where the prunable
 units are expert FFN channels (all 4 experts x all layers = one task, the
-paper's associated-subgraph set) and whole experts.
+paper's associated-subgraph set) and whole experts — driven through the
+`PruningSession` front door.
 
     PYTHONPATH=src python examples/prune_moe.py
 """
 import jax
 
+from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
 from repro.configs import get_reduced_config
-from repro.core import CPrune, CPruneConfig, TrainHooks, Workload
-from repro.core.tuner import build_tuned_table
 from repro.data.pipeline import DataPipeline
-from repro.models.model import Model, init_params, prune_sites
+from repro.models.model import Model, init_params
 from repro.optim.optimizers import sgd_init, sgd_update
 
 
@@ -20,19 +20,6 @@ def main():
         top_k=2, n_heads=8, n_kv_heads=2, head_dim=16, vocab_size=256)
     model = Model(cfg)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    sites = prune_sites(cfg)
-    print("prunable sites:")
-    for s in sites:
-        print(f"  {s.site_id:26s} kind={s.kind:8s} dim={s.dim} "
-              f"subgraphs={s.multiplicity}")
-
-    wl = Workload(tokens_global=65536)
-    table = build_tuned_table(sites, wl)
-    print("\ntask table (C) — impact = latency x #subgraphs (paper §3.3):")
-    for t in table.ordered():
-        print(f"  task{t.task_id} {t.sites[0].kind:8s} "
-              f"lat={t.latency*1e6:8.1f}us x {t.n_subgraphs:2d} subgraphs "
-              f"-> impact {t.pruning_impact*1e6:9.1f}")
 
     pipe = DataPipeline(cfg, global_batch=8, seq_len=64)
     val = pipe.batch(10 ** 6)
@@ -53,15 +40,30 @@ def main():
             p, o, _ = jstep(p, o, pipe.batch(state["i"]))
         return p
 
-    print("\npretraining ...")
-    params = train(params, sites, 40)
+    print("pretraining ...")
+    params = train(params, None, 40)
 
-    hooks = TrainHooks(
-        short_term_train=lambda p, s: train(p, s, 4),
-        eval_acc=lambda p, s: float(jloss(p, val)[1]["acc"]))
-    pcfg = CPruneConfig(a_g=0.4, alpha=0.88, beta=0.98, max_iterations=8,
-                        seq_len=256)
-    res = CPrune(cfg, sites, wl, hooks, pcfg).run(params, verbose=True)
+    session = PruningSession(
+        cfg, params=params, workload=Workload(tokens_global=65536),
+        hooks=TrainHooks(
+            short_term_train=lambda p, s: train(p, s, 4),
+            eval_acc=lambda p, s: float(jloss(p, val)[1]["acc"])),
+        pcfg=CPruneConfig(a_g=0.4, alpha=0.88, beta=0.98, max_iterations=8,
+                          seq_len=256))
+
+    print("prunable sites:")
+    for s in session.sites:
+        print(f"  {s.site_id:26s} kind={s.kind:8s} dim={s.dim} "
+              f"subgraphs={s.multiplicity}")
+
+    table = session.tune()
+    print("\ntask table (C) — impact = latency x #subgraphs (paper §3.3):")
+    for t in table.ordered():
+        print(f"  task{t.task_id} {t.sites[0].kind:8s} "
+              f"lat={t.latency*1e6:8.1f}us x {t.n_subgraphs:2d} subgraphs "
+              f"-> impact {t.pruning_impact*1e6:9.1f}")
+
+    res = session.prune(strategy="cprune", verbose=True)
 
     print(f"\nFPS increase {res.fps_increase:.2f}x, acc {res.final_acc:.3f}")
     for s in res.sites:

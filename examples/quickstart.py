@@ -1,30 +1,40 @@
 """Quickstart: compiler-informed pruning of a small LM in ~2 minutes.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--target edge] [--fast]
 
-Walks the whole public API: build a model from an assigned-architecture
-config, pretrain briefly on the synthetic task, run CPrune (tune ->
-task-order -> structure-preserving prune -> accept/reject), and report the
-FPS gain on the v5e cost-model target.
+Walks the public API front door (`repro.api.PruningSession`): build a
+model from an assigned-architecture config, pretrain briefly on the
+synthetic task, run CPrune against a registered target backend (tune ->
+task-order -> structure-preserving prune -> accept/reject), and report
+the FPS gain on that target's cost model. ``--target`` swaps the device
+profile (tpu_v5e | tpu_v4 | edge) — the same loop produces a different
+pruned architecture per target. ``--fast`` shrinks the run for CI smoke.
 """
-import jax
-import jax.numpy as jnp
+import argparse
 
+import jax
+
+from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
+from repro.api import list_targets
 from repro.configs import get_reduced_config
-from repro.core import CPrune, CPruneConfig, TrainHooks, Workload
 from repro.data.pipeline import DataPipeline
-from repro.models.model import Model, init_params, prune_sites
+from repro.models.model import Model, init_params
 from repro.optim.optimizers import sgd_init, sgd_update
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default="tpu_v5e", choices=list_targets())
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced iteration counts for the CI smoke job")
+    args = ap.parse_args()
+
     # 1. model + data
     cfg = get_reduced_config("qwen3_1_7b").with_overrides(
         n_layers=4, d_model=128, d_ff=1024, n_heads=8, n_kv_heads=2,
         head_dim=16, vocab_size=256)
     model = Model(cfg)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    sites = prune_sites(cfg)
     pipe = DataPipeline(cfg, global_batch=8, seq_len=64)
     val = pipe.batch(10 ** 6)
 
@@ -51,21 +61,29 @@ def main():
         return float(m["acc"])
 
     print("pretraining on the synthetic Markov task ...")
-    params = train(params, sites, 48)
-    print(f"  pretrained accuracy: {eval_acc(params, sites):.3f}")
+    params = train(params, None, 16 if args.fast else 48)
+    print(f"  pretrained accuracy: {eval_acc(params, None):.3f}")
 
-    # 3. CPrune: target = one v5e shard serving 64k tokens/step
-    hooks = TrainHooks(
-        short_term_train=lambda p, s: train(p, s, 4),
-        eval_acc=eval_acc,
-        long_term_train=lambda p, s: train(p, s, 16))
-    pcfg = CPruneConfig(a_g=0.5, alpha=0.9, beta=0.98, max_iterations=8,
-                        seq_len=256)
-    cp = CPrune(cfg, sites, Workload(tokens_global=65536), hooks, pcfg)
-    res = cp.run(params, verbose=True)
+    # 3. one front door: target = a registered device profile serving 64k
+    #    tokens/step; CPrune runs entirely under that target's cost model
+    session = PruningSession(
+        cfg, params=params, target=args.target,
+        workload=Workload(tokens_global=65536),
+        hooks=TrainHooks(
+            short_term_train=lambda p, s: train(p, s, 2 if args.fast else 4),
+            eval_acc=eval_acc,
+            long_term_train=lambda p, s: train(p, s, 4 if args.fast else 16)),
+        # --fast pretrains too briefly to clear the full accuracy bar, so
+        # the smoke run lowers a_g enough for the loop to actually prune
+        pcfg=CPruneConfig(a_g=0.05 if args.fast else 0.5,
+                          alpha=0.7 if args.fast else 0.9, beta=0.98,
+                          max_iterations=3 if args.fast else 8, seq_len=256))
+    res = session.prune(strategy="cprune", verbose=True)
 
-    print(f"\nFPS increase     : {res.fps_increase:.2f}x")
-    print(f"final accuracy   : {res.final_acc:.3f} (required > {pcfg.a_g})")
+    print(f"\ntarget           : {session.target.name}")
+    print(f"FPS increase     : {res.fps_increase:.2f}x")
+    print(f"final accuracy   : {res.final_acc:.3f} "
+          f"(required > {session.pcfg.a_g})")
     print("final prunable dims:")
     for s in res.sites:
         print(f"  {s.site_id:24s} {s.kind:8s} dim={s.dim}")

@@ -1,50 +1,53 @@
 """Serving demo: batched decode of a pruned vs unpruned model through the
-continuous-batching engine (prefill + per-token decode with KV caches).
+continuous-batching engine (prefill + per-token decode with KV caches),
+wired through `PruningSession.prune -> serve`.
 
     PYTHONPATH=src python examples/serve_pruned.py
 """
-import time
-
-import jax
 import numpy as np
 
+from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
 from repro.configs import get_reduced_config
-from repro.core import applier, ranking
-from repro.models.model import init_params, prune_sites
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request
 
 
 def main():
     cfg = get_reduced_config("qwen3_1_7b").with_overrides(
         n_layers=4, d_model=128, d_ff=1024, n_heads=8, n_kv_heads=2,
         head_dim=16, vocab_size=512)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    sites = prune_sites(cfg)
 
-    # structured 50% FFN prune (L1 ranking)
-    site = next(s for s in sites if s.kind == "ffn")
-    scores = ranking.rank_units(params, site, "l1")
-    pruned_params, _ = applier.prune_site_by_rank(params, site, 512, scores)
+    # one session: 50% structured L1 prune of the FFN sites only
+    # (prunable_kinds keeps the demo's "50%-FFN-pruned" comparison honest),
+    # then serve both models. This demo measures *serving throughput*, not
+    # model quality, so the hooks deliberately skip training — explicit
+    # stubs rather than the defaults, which would warn about it.
+    session = PruningSession(
+        cfg, workload=Workload(tokens_global=65536),
+        hooks=TrainHooks(short_term_train=lambda p, s: p,
+                         eval_acc=lambda p, s: float("nan")),
+        pcfg=CPruneConfig(a_g=0.0, seq_len=256, prunable_kinds=("ffn",)))
+    dense_params = session.params
+    session.prune(strategy="uniform_l1", ratio=0.5)
 
     rng = np.random.default_rng(0)
 
-    def bench(p, label):
-        eng = ServeEngine(cfg, p, max_batch=8, max_seq=64)
+    def bench(engine, label):
         for i in range(8):
-            eng.submit(Request(
+            engine.submit(Request(
                 rid=i,
                 prompt=rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
                 max_new_tokens=16,
                 temperature=0.7 if i % 2 else 0.0))
-        stats = eng.run()
+        stats = engine.run()
         print(f"{label:10s} {stats['requests']} reqs in "
               f"{stats['wall_s']:.2f}s -> {stats['tokens_per_s']:.1f} tok/s "
               f"(TTFT {stats['mean_ttft_s']*1e3:.0f} ms)")
         return stats
 
     print("serving dense vs 50%-FFN-pruned model (same engine):")
-    bench(params, "dense")
-    bench(pruned_params, "pruned")
+    bench(session.serve(params=dense_params, max_batch=8, max_seq=64),
+          "dense")
+    bench(session.serve(max_batch=8, max_seq=64), "pruned")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """End-to-end driver: pretrain a ~100M-class LM, CPrune it, final-train,
-and compare served throughput before/after.
+and compare served throughput before/after — stages 2 and 3 ride the
+`PruningSession` front door (prune -> save -> serve).
 
 Default is a CPU-friendly ~3M model so the script finishes in minutes;
 ``--full`` scales the same family to ~100M params (6·N·D per step grows
@@ -9,21 +10,19 @@ Default is a CPU-friendly ~3M model so the script finishes in minutes;
 
 The run exercises the production path: data pipeline -> Trainer (with
 checkpointing + straggler monitor) -> CPrune loop -> final training ->
-ServeEngine throughput measurement.
+session checkpoint -> ServeEngine throughput measurement.
 """
 import argparse
 import time
 
 import jax
-
-from repro.configs import get_reduced_config
-from repro.core import CPrune, CPruneConfig, TrainHooks, Workload
-from repro.data.pipeline import DataPipeline
-from repro.models.model import init_params, prune_sites
-from repro.serve.engine import Request, ServeEngine
-from repro.train.trainer import Trainer, TrainerConfig
-
 import numpy as np
+
+from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
+from repro.configs import get_reduced_config
+from repro.data.pipeline import DataPipeline
+from repro.serve.engine import Request
+from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
@@ -56,9 +55,8 @@ def main():
           f"restarts {stats['restarts']}, stragglers {stats['stragglers']})")
     print(f"eval: {trainer.eval_batch()}")
 
-    # --- stage 2: CPrune ---------------------------------------------------
+    # --- stage 2: CPrune through the session front door -------------------
     model = trainer.model
-    sites = prune_sites(cfg)
     val = pipe.batch(10 ** 6)
     jloss = jax.jit(model.loss_fn)
 
@@ -72,28 +70,31 @@ def main():
         _, m = jloss(p, val)
         return float(m["acc"])
 
-    hooks = TrainHooks(short_term_train=short_train, eval_acc=eval_acc,
-                       long_term_train=lambda p, s: short_train(p, s))
-    pcfg = CPruneConfig(a_g=0.3, alpha=0.9, beta=0.98, max_iterations=6,
-                        seq_len=2048)
-    cp = CPrune(cfg, sites, Workload(tokens_global=262144, dp=1, tp=1),
-                hooks, pcfg)
-    res = cp.run(trainer.params, verbose=True)
+    session = PruningSession(
+        cfg, params=trainer.params,
+        workload=Workload(tokens_global=262144, dp=1, tp=1),
+        hooks=TrainHooks(short_term_train=short_train, eval_acc=eval_acc,
+                         long_term_train=lambda p, s: short_train(p, s)),
+        pcfg=CPruneConfig(a_g=0.3, alpha=0.9, beta=0.98, max_iterations=6,
+                          seq_len=2048))
+    res = session.prune(strategy="cprune", verbose=True)
     print(f"CPrune: {res.fps_increase:.2f}x target FPS, "
           f"acc {res.final_acc:.3f}")
+    session.save(args.ckpt_dir + "/pruned_session")
+    print(f"session checkpoint -> {args.ckpt_dir}/pruned_session")
 
     # --- stage 3: serve both models, measure real tokens/s ----------------
     rng = np.random.default_rng(0)
 
-    def throughput(params):
-        eng = ServeEngine(cfg, params, max_batch=8, max_seq=96)
+    def throughput(engine):
         for i in range(8):
-            eng.submit(Request(rid=i, prompt=rng.integers(
+            engine.submit(Request(rid=i, prompt=rng.integers(
                 0, cfg.vocab_size, 64).astype(np.int32), max_new_tokens=16))
-        return eng.run()["tokens_per_s"]
+        return engine.run()["tokens_per_s"]
 
-    tps_before = throughput(trainer.params)
-    tps_after = throughput(res.params)
+    tps_before = throughput(
+        session.serve(params=trainer.params, max_batch=8, max_seq=96))
+    tps_after = throughput(session.serve(max_batch=8, max_seq=96))
     print(f"serving throughput (CPU, interpret-free XLA path): "
           f"{tps_before:.1f} -> {tps_after:.1f} tokens/s "
           f"({tps_after/tps_before:.2f}x)")

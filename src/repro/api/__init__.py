@@ -1,0 +1,36 @@
+"""`repro.api` — the public front door: target-aware pruning sessions.
+
+    from repro.api import PruningSession, Workload, CPruneConfig, TrainHooks
+
+    session = PruningSession(cfg, target="tpu_v5e",
+                             workload=Workload(tokens_global=65536),
+                             hooks=hooks, pcfg=CPruneConfig(a_g=0.5))
+    result = session.prune(strategy="cprune")   # netadapt | uniform_l1 | fpgm
+    engine = session.serve(max_batch=8)
+    session.save("ckpt/");  PruningSession.resume("ckpt/", hooks=hooks)
+
+Targets (`targets.py`): registry of :class:`TargetSpec` device profiles —
+``tpu_v5e`` (the seed cost model, bit-identical), ``tpu_v4``, ``edge`` —
+threaded through the tuner, the tuning-cache fingerprints, the latency
+model, and CPrune, so one prune loop produces per-target architectures.
+
+Strategies (`strategies.py`): registry unifying Algorithm 1 and the
+baselines behind one call with a common :class:`PruneResult`.
+
+The `repro.core` modules remain importable as before; this package only
+composes them.
+"""
+from repro.api.session import PruningSession
+from repro.api.strategies import (PruneResult, get_strategy, list_strategies,
+                                  register_strategy)
+from repro.api.targets import (Target, TargetSpec, get_target, list_targets,
+                               register_target)
+from repro.core.cprune import CPruneConfig, TrainHooks
+from repro.core.tasks import Workload
+
+__all__ = [
+    "PruningSession", "PruneResult", "get_strategy", "list_strategies",
+    "register_strategy", "Target", "TargetSpec", "get_target",
+    "list_targets", "register_target", "CPruneConfig", "TrainHooks",
+    "Workload",
+]

@@ -1,0 +1,239 @@
+"""`PruningSession` — the repo's single front door for prune -> tune -> serve.
+
+One object owns the pieces users previously hand-wired across every
+example and benchmark (Model + params + PruneSite list + Workload +
+TrainHooks + CPruneConfig + tuner + ServeEngine) and threads the selected
+:class:`~repro.api.targets.TargetSpec` through all of them:
+
+    session = PruningSession(cfg, target="edge",
+                             workload=Workload(tokens_global=65536),
+                             hooks=my_hooks, pcfg=CPruneConfig(a_g=0.5))
+    result = session.prune(strategy="cprune")     # or netadapt/uniform_l1/...
+    engine = session.serve(max_batch=8)           # serves the pruned params
+    session.save("ckpt/")                         # prune-loop checkpoint
+    session = PruningSession.resume("ckpt/", hooks=my_hooks)
+
+``prune`` runs entirely under ``target.activate()``, so the tuner, the
+tuning-cache fingerprints, and the latency model all see the session's
+target — the same loop provably produces different pruned architectures
+per target (tests/test_api.py, benchmarks/session_targets.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.api.strategies import PruneResult, get_strategy, list_strategies
+from repro.api.targets import TargetSpec, get_target
+from repro.configs.base import ModelConfig
+from repro.core import latency, tuner
+from repro.core.cprune import CPruneConfig, IterationRecord, TrainHooks
+from repro.core.tasks import TaskTable, Workload
+from repro.models.model import Model, init_params, prune_sites
+from repro.serve.engine import ServeEngine
+
+_CKPT_VERSION = 1
+
+
+def _null_hooks() -> TrainHooks:
+    """Hooks for tune/serve-only sessions: no training, perfect accuracy."""
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: 1.0)
+    hooks._is_null = True      # lets prune() warn that accuracy is a stub
+    return hooks
+
+
+def _flatten_params(tree: Dict[str, Any], prefix: str = ""
+                    ) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flatten_params(v, path))
+        else:
+            out[path] = np.asarray(v)
+    return out
+
+
+def _unflatten_params(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    tree: Dict[str, Any] = {}
+    for path, arr in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+class PruningSession:
+    """Facade over the prune -> tune -> serve pipeline for one model on one
+    target. Mutable: ``prune`` advances ``params``/``sites`` to the pruned
+    model, so subsequent ``tune``/``serve``/``save`` (or another ``prune``
+    round) operate on the current state.
+    """
+
+    def __init__(self, cfg: ModelConfig, *,
+                 params: Optional[Dict[str, Any]] = None,
+                 target: Union[str, TargetSpec, None] = "tpu_v5e",
+                 workload: Optional[Workload] = None,
+                 hooks: Optional[TrainHooks] = None,
+                 pcfg: Optional[CPruneConfig] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.target = get_target(target)
+        self.model = Model(cfg)
+        self.params = params if params is not None \
+            else init_params(jax.random.PRNGKey(seed), cfg)
+        self.sites = prune_sites(cfg)
+        self.workload = workload or Workload(tokens_global=65536)
+        self.hooks = hooks or _null_hooks()
+        self.pcfg = pcfg or CPruneConfig(a_g=0.0)
+        self.result: Optional[PruneResult] = None
+        # accumulated across prune() rounds and survives save()/resume()
+        self.history: List[IterationRecord] = []
+        self.final_acc: Optional[float] = None
+        self.last_strategy: Optional[str] = None
+
+    # -- prune --------------------------------------------------------------
+
+    def prune(self, strategy: str = "cprune", **kwargs) -> PruneResult:
+        """Run a registered pruning strategy under the session's target and
+        adopt the pruned model as the session state."""
+        fn = get_strategy(strategy)
+        if getattr(self.hooks, "_is_null", False):
+            import warnings
+            warnings.warn(
+                "pruning with default (no-op) hooks: accuracy is stubbed to "
+                "1.0, so every candidate passes the accuracy gate and "
+                "final_acc is meaningless — pass hooks=TrainHooks(...) for "
+                "real accuracy-gated pruning", stacklevel=2)
+        with self.target.activate():
+            result = fn(self, **kwargs)
+        self.params = result.params
+        # strategies filter to pcfg.prunable_kinds and return only that
+        # subset; merge it back so the session keeps the full site list
+        # (tune/latency_report/save must still see the untouched sites)
+        by_id = {s.site_id: s for s in result.sites}
+        self.sites = [by_id.get(s.site_id, s) for s in self.sites]
+        self.result = result
+        self.history.extend(result.history)
+        self.final_acc = result.final_acc
+        self.last_strategy = result.strategy
+        return result
+
+    @staticmethod
+    def strategies() -> List[str]:
+        return list_strategies()
+
+    # -- tune / measure -----------------------------------------------------
+
+    def tune(self, *, use_tuning: bool = True,
+             stats: Optional[tuner.TunerStats] = None) -> TaskTable:
+        """Tuned task table (the paper's C) for the current sites under the
+        session's target."""
+        with self.target.activate():
+            return tuner.build_tuned_table(
+                self.sites, self.workload, use_tuning=use_tuning, stats=stats)
+
+    def latency_report(self, *, use_tuning: bool = True
+                       ) -> latency.LatencyReport:
+        """Whole-model latency of the current (possibly pruned) model on the
+        session's target."""
+        with self.target.activate():
+            table = tuner.build_tuned_table(self.sites, self.workload,
+                                            use_tuning=use_tuning)
+            return latency.model_latency(
+                self.cfg, self.sites, table, seq_len=self.pcfg.seq_len,
+                use_tuning=use_tuning)
+
+    # -- serve --------------------------------------------------------------
+
+    def serve(self, *, params: Optional[Dict[str, Any]] = None,
+              max_batch: int = 8, max_seq: int = 512,
+              seed: int = 0) -> ServeEngine:
+        """A :class:`ServeEngine` over the current (pruned) params — or an
+        explicit ``params`` override, e.g. the dense baseline."""
+        return ServeEngine(self.cfg, self.params if params is None else params,
+                           max_batch=max_batch, max_seq=max_seq, seed=seed)
+
+    # -- checkpointing ------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Checkpoint the prune-loop state: config, target, workload, current
+        (pruned) params + site dims, and the iteration history."""
+        if not dataclasses.is_dataclass(self.target):
+            raise ValueError(
+                f"cannot checkpoint a session whose target is not a "
+                f"TargetSpec-style dataclass: {type(self.target).__name__}")
+        os.makedirs(path, exist_ok=True)
+        meta = {
+            "version": _CKPT_VERSION,
+            "config": dataclasses.asdict(self.cfg),
+            "target": self.target.name,
+            # full spec fields so custom/unregistered targets round-trip
+            "target_spec": dataclasses.asdict(self.target),
+            "workload": dataclasses.asdict(self.workload),
+            "pcfg": dataclasses.asdict(self.pcfg),
+            "site_dims": {s.site_id: s.dim for s in self.sites},
+            "strategy": self.last_strategy,
+            "final_acc": self.final_acc,
+            "history": [dataclasses.asdict(h) for h in self.history],
+        }
+        # params first, metadata last: session.json is the commit record, so
+        # a crash mid-save can never pair new metadata with missing/stale
+        # params (both writes are tmp + atomic rename)
+        tmp = os.path.join(path, "params.npz.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **_flatten_params(self.params))
+        os.replace(tmp, os.path.join(path, "params.npz"))
+        tmp = os.path.join(path, "session.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=1)
+        os.replace(tmp, os.path.join(path, "session.json"))
+
+    @classmethod
+    def resume(cls, path: str, *,
+               hooks: Optional[TrainHooks] = None,
+               target: Union[str, TargetSpec, None] = None,
+               workload: Optional[Workload] = None,
+               pcfg: Optional[CPruneConfig] = None) -> "PruningSession":
+        """Rebuild a session from :meth:`save`. Training hooks are live
+        objects and cannot be serialized — pass them again to continue
+        pruning; tune/serve work without them. A further ``prune`` call
+        re-enters Algorithm 1 from the checkpointed model (the loop's
+        ``l_t``/``a_p`` are re-derived from the restored state).
+        """
+        with open(os.path.join(path, "session.json")) as f:
+            meta = json.load(f)
+        if meta.get("version") != _CKPT_VERSION:
+            raise ValueError(f"unsupported session checkpoint version: "
+                             f"{meta.get('version')!r}")
+        cfg_d = dict(meta["config"])
+        cfg_d["block_pattern"] = tuple(cfg_d["block_pattern"])
+        cfg = ModelConfig(**cfg_d)
+        with np.load(os.path.join(path, "params.npz")) as z:
+            params = _unflatten_params({k: z[k] for k in z.files})
+        if target is None:
+            # prefer the checkpointed spec fields: a customized spec whose
+            # name shadows a registry entry must not be silently replaced
+            # by the stock profile
+            spec_d = meta.get("target_spec")
+            target = TargetSpec(**spec_d) if spec_d \
+                else get_target(meta["target"])
+        session = cls(
+            cfg, params=params, target=target,
+            workload=workload or Workload(**meta["workload"]),
+            hooks=hooks, pcfg=pcfg or CPruneConfig(**meta["pcfg"]))
+        dims = meta["site_dims"]
+        session.sites = [s.with_dim(dims[s.site_id]) if s.site_id in dims
+                         else s for s in session.sites]
+        session.history = [IterationRecord(**h) for h in meta["history"]]
+        session.final_acc = meta.get("final_acc")
+        session.last_strategy = meta.get("strategy")
+        return session

@@ -1,0 +1,141 @@
+"""Pruning-strategy registry: one calling convention for CPrune and every
+baseline, so ``session.prune(strategy=...)`` swaps the *search policy*
+while target, workload, training hooks, and applier stay fixed — exactly
+how the paper's Table 1 isolates policies (every row shares the tuner).
+
+Built-in strategies:
+  cprune      Algorithm 1 (compiler-informed selective search)
+  netadapt    hardware-aware exhaustive search (paper's main comparison)
+  uniform_l1  L1-magnitude structured pruning at a uniform ratio
+  fpgm        geometric-median ranking at a uniform ratio
+
+Register custom policies with :func:`register_strategy`; they receive the
+session and must return a :class:`PruneResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import baselines, latency, tuner
+from repro.core.cprune import CPrune, IterationRecord
+from repro.models.model import PruneSite
+
+
+@dataclasses.dataclass
+class PruneResult:
+    """What every strategy returns — the common currency of the API."""
+
+    strategy: str
+    target: str
+    params: Dict
+    sites: List[PruneSite]
+    final_latency: latency.LatencyReport
+    original_latency: latency.LatencyReport
+    final_acc: float
+    candidates_evaluated: int
+    history: List[IterationRecord] = dataclasses.field(default_factory=list)
+    tuner_stats: Optional[tuner.TunerStats] = None
+
+    @property
+    def fps_increase(self) -> float:
+        return self.original_latency.total_s / self.final_latency.total_s
+
+    def history_digest(self) -> List[Tuple]:
+        """Hashable digest of the *accepted* prune trajectory — the quantity
+        that differs between targets (paper Fig. 7/8) and must not differ
+        between tuning engines (tuner_bench)."""
+        return [(h.task_kind, h.prune_units, h.dim_before, h.dim_after,
+                 h.accepted) for h in self.history]
+
+
+StrategyFn = Callable[..., PruneResult]
+
+_STRATEGIES: Dict[str, StrategyFn] = {}
+
+
+def register_strategy(name: str, *, overwrite: bool = False):
+    """Decorator: ``@register_strategy("mine")`` over ``fn(session, **kw)``."""
+
+    def deco(fn: StrategyFn) -> StrategyFn:
+        if name in _STRATEGIES and not overwrite:
+            raise ValueError(f"strategy {name!r} already registered "
+                             f"(pass overwrite=True to replace)")
+        _STRATEGIES[name] = fn
+        return fn
+
+    return deco
+
+
+def get_strategy(name: str) -> StrategyFn:
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; registered strategies: "
+                       f"{sorted(_STRATEGIES)}") from None
+
+
+def list_strategies() -> List[str]:
+    return sorted(_STRATEGIES)
+
+
+# ---------------------------------------------------------------------------
+# Built-in strategies. Each runs under the session's already-activated
+# target (PruningSession.prune wraps the call in target.activate()).
+# ---------------------------------------------------------------------------
+
+@register_strategy("cprune")
+def _cprune(session, *, verbose: bool = False, **pcfg_over) -> PruneResult:
+    pcfg = dataclasses.replace(session.pcfg, **pcfg_over) if pcfg_over \
+        else session.pcfg
+    cp = CPrune(session.cfg, session.sites, session.workload, session.hooks,
+                pcfg)
+    res = cp.run(session.params, verbose=verbose)
+    return PruneResult(
+        strategy="cprune", target=session.target.name, params=res.params,
+        sites=res.sites, final_latency=res.final_latency,
+        original_latency=res.original_latency, final_acc=res.final_acc,
+        candidates_evaluated=res.tuner_stats.candidates_evaluated,
+        history=res.history, tuner_stats=res.tuner_stats)
+
+
+def _uniform(session, method: str, name: str, *, ratio: float) -> PruneResult:
+    res = baselines.uniform_prune(
+        session.cfg, session.params, session.sites, session.workload,
+        session.hooks, session.pcfg, ratio=ratio, method=method, name=name)
+    # after the baseline: session.sites is still the original model, the
+    # ProgramCache is warm, and the baseline's eval accounting stays
+    # identical to a standalone run (no front-door pre-tune)
+    rep0 = session.latency_report()
+    return PruneResult(
+        strategy=name, target=session.target.name, params=res.params,
+        sites=res.sites, final_latency=res.latency, original_latency=rep0,
+        final_acc=res.acc, candidates_evaluated=res.candidates_evaluated)
+
+
+@register_strategy("uniform_l1")
+def _uniform_l1(session, *, ratio: float = 0.5) -> PruneResult:
+    return _uniform(session, "l1", "uniform_l1", ratio=ratio)
+
+
+@register_strategy("fpgm")
+def _fpgm(session, *, ratio: float = 0.5) -> PruneResult:
+    return _uniform(session, "fpgm", "fpgm", ratio=ratio)
+
+
+@register_strategy("netadapt")
+def _netadapt(session, *, latency_decay: float = 0.97,
+              max_iterations: int = 30) -> PruneResult:
+    res = baselines.netadapt_prune(
+        session.cfg, session.params, session.sites, session.workload,
+        session.hooks, session.pcfg, latency_decay=latency_decay,
+        max_iterations=max_iterations)
+    # measured after the run (session.sites is untouched until prune()
+    # adopts the result): the baseline pays its own cold start, so its
+    # candidates_evaluated matches a standalone netadapt run, and this
+    # report is served almost entirely from the warmed ProgramCache
+    rep0 = session.latency_report()
+    return PruneResult(
+        strategy="netadapt", target=session.target.name, params=res.params,
+        sites=res.sites, final_latency=res.latency, original_latency=rep0,
+        final_acc=res.acc, candidates_evaluated=res.candidates_evaluated)

@@ -1,0 +1,196 @@
+"""Pluggable target backends — the "compiler-informed" half of CPrune.
+
+The paper's thesis is that pruning decisions must consult the *target
+device's* compiler/tuner: the same network pruned for two processors ends
+up with two different architectures (paper Fig. 7/8). This module turns
+the previously hardcoded v5e constants in :mod:`repro.core.cost_model`
+into swappable :class:`TargetSpec` profiles behind a registry, so the
+whole prune -> tune -> serve stack (tuner, tuning cache, latency, CPrune)
+runs against any registered target.
+
+Design: ``cost_model``'s module globals remain the single *active-target*
+storage — the tuning cache fingerprints them at lookup time, existing
+tests mutate them directly, and the scalar/vectorized cost kernels read
+them. ``TargetSpec.activate()`` installs a profile into those globals
+(restoring the prior values on exit, exceptions included), which makes a
+target swap automatically invalidate every cache through the existing
+``target_fingerprint`` contract. The built-in ``tpu_v5e`` profile holds
+exactly the seed constants, so activating it is bit-identical to the
+pre-registry behavior.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import (Dict, Iterator, List, Protocol, Tuple, Union,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.core import cost_model
+
+
+@runtime_checkable
+class Target(Protocol):
+    """The full target-backend surface. The tuner/latency stack itself
+    consumes only ``activate()`` (via ``tuner.target_activation``) plus the
+    dataclass constants; the cost methods exist for direct, out-of-loop
+    queries (e.g. comparing one GEMM across targets) — inside a tuning
+    loop, activate once instead of paying per-call activation."""
+
+    name: str
+    vmem_bytes: int
+
+    def fingerprint(self) -> Tuple: ...
+
+    def activate(self): ...
+
+    def matmul_cost(self, m: int, k: int, n: int, block, **kw) -> float: ...
+
+    def matmul_cost_grid(self, m: int, k: int, n: int, bm, bk, bn,
+                         **kw) -> np.ndarray: ...
+
+
+# (cost_model global, TargetSpec field) — the full active-target state
+_CONSTS: Tuple[Tuple[str, str], ...] = (
+    ("PEAK_FLOPS_BF16", "peak_flops_bf16"),
+    ("PEAK_FLOPS_F32", "peak_flops_f32"),
+    ("HBM_BW", "hbm_bw"),
+    ("ICI_BW", "ici_bw"),
+    ("VMEM_BYTES", "vmem_bytes"),
+    ("LANE", "lane"),
+    ("SUBLANE", "sublane"),
+    ("MXU", "mxu"),
+    ("BLOCK_OVERHEAD_S", "block_overhead_s"),
+    ("CALL_OVERHEAD_S", "call_overhead_s"),
+    ("VPU_THROUGHPUT", "vpu_throughput"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    """One emulated device: the roofline + layout constants the cost model,
+    tuner, and cache fingerprint depend on."""
+
+    name: str
+    peak_flops_bf16: float
+    peak_flops_f32: float
+    hbm_bw: float
+    ici_bw: float
+    vmem_bytes: int
+    lane: int = 128
+    sublane: int = 8
+    mxu: int = 128
+    block_overhead_s: float = 0.4e-6
+    call_overhead_s: float = 2e-6
+    vpu_throughput: float = 4e12
+    description: str = ""
+
+    def fingerprint(self) -> Tuple:
+        """Constants a tuned program depends on, in the exact order of
+        :func:`repro.core.tuning_cache.target_fingerprint` (ICI_BW is not
+        part of GEMM cost, hence not part of the fingerprint)."""
+        return (self.peak_flops_bf16, self.peak_flops_f32, self.hbm_bw,
+                self.vmem_bytes, self.block_overhead_s, self.call_overhead_s,
+                self.vpu_throughput, self.lane, self.sublane, self.mxu)
+
+    @contextlib.contextmanager
+    def activate(self) -> Iterator["TargetSpec"]:
+        """Install this target into ``cost_model``; restore the previous
+        one on exit — including exception paths."""
+        old = [getattr(cost_model, g) for g, _ in _CONSTS]
+        for g, f in _CONSTS:
+            setattr(cost_model, g, getattr(self, f))
+        try:
+            yield self
+        finally:
+            for (g, _), v in zip(_CONSTS, old):
+                setattr(cost_model, g, v)
+
+    # -- cost protocol ------------------------------------------------------
+
+    def matmul_cost(self, m: int, k: int, n: int, block, **kw) -> float:
+        """Scalar GEMM latency under *this* target (same kernel as the
+        active-target free function)."""
+        with self.activate():
+            return cost_model.matmul_cost(m, k, n, block, **kw)
+
+    def matmul_cost_grid(self, m: int, k: int, n: int, bm, bk, bn,
+                         **kw) -> np.ndarray:
+        """Vectorized GEMM latency grid under *this* target."""
+        with self.activate():
+            return cost_model.matmul_cost_grid(m, k, n, bm, bk, bn, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_TARGETS: Dict[str, TargetSpec] = {}
+
+
+def register_target(spec: TargetSpec, *, overwrite: bool = False
+                    ) -> TargetSpec:
+    if spec.name in _TARGETS and not overwrite:
+        raise ValueError(f"target {spec.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _TARGETS[spec.name] = spec
+    return spec
+
+
+def get_target(target: Union[str, Target, None]) -> TargetSpec:
+    """Resolve a target name (or pass a spec / any :class:`Target`
+    implementation through). ``None`` resolves to the default ``tpu_v5e``
+    profile."""
+    if target is None:
+        return _TARGETS["tpu_v5e"]
+    if not isinstance(target, str):
+        if hasattr(target, "activate"):    # duck-typed Target passthrough
+            return target
+        raise TypeError(f"target must be a registered name or implement "
+                        f"the Target protocol, got {type(target).__name__}")
+    try:
+        return _TARGETS[target]
+    except KeyError:
+        raise KeyError(f"unknown target {target!r}; registered targets: "
+                       f"{sorted(_TARGETS)}") from None
+
+
+def list_targets() -> List[str]:
+    return sorted(_TARGETS)
+
+
+# ---------------------------------------------------------------------------
+# Built-in profiles
+# ---------------------------------------------------------------------------
+
+# The seed repo's hardcoded target, captured verbatim from cost_model so
+# activating it is a no-op — tuner selections stay bit-identical to the
+# pre-registry code (enforced by tests/test_api.py and tuner_bench.py).
+TPU_V5E = register_target(TargetSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12, peak_flops_f32=197e12 / 4,
+    hbm_bw=819e9, ici_bw=50e9, vmem_bytes=64 * 1024 * 1024,
+    description="analytic TPU v5e shard — the seed cost model"))
+
+# A v4-like profile: more compute and HBM bandwidth, smaller usable VMEM
+# working-set budget — tuned blocks grow, prune quanta shift accordingly.
+TPU_V4 = register_target(TargetSpec(
+    name="tpu_v4",
+    peak_flops_bf16=275e12, peak_flops_f32=275e12 / 4,
+    hbm_bw=1228e9, ici_bw=100e9, vmem_bytes=32 * 1024 * 1024,
+    description="analytic TPU v4-like chip (compute/bandwidth-rich, "
+                "tighter VMEM budget)"))
+
+# A bandwidth-skewed edge accelerator: compute-poor, narrow memory bus,
+# tiny on-chip buffer, expensive dispatch. GEMMs are memory-bound almost
+# everywhere, so the tuner picks small blocks and CPrune's accepted prune
+# history diverges from the TPU targets on the same workload (the paper's
+# Fig. 7/8 target-specificity claim).
+EDGE = register_target(TargetSpec(
+    name="edge",
+    peak_flops_bf16=8e12, peak_flops_f32=2e12,
+    hbm_bw=68e9, ici_bw=5e9, vmem_bytes=2 * 1024 * 1024,
+    block_overhead_s=1.0e-6, call_overhead_s=5e-6,
+    vpu_throughput=0.5e12,
+    description="bandwidth-skewed edge accelerator (memory-bound regime)"))

@@ -1,6 +1,6 @@
 """CPrune core: compiler-informed model pruning (the paper's contribution).
 
-cost_model  — analytic TPU v5e latency model (the "target device")
+cost_model  — analytic latency model of the *active* target device
 program     — tuned Pallas block configs + iterator factorizations
 tuner       — per-task program search (the AutoTVM/Ansor role)
 tasks       — subgraph/task decomposition + relationship table C
@@ -11,6 +11,10 @@ latency     — whole-model latency/FPS estimates
 cprune      — Algorithm 1 (the iterative loop)
 baselines   — uniform-L1 / FPGM / NetAdapt-style comparisons
 tuning_cache— process-wide ProgramCache + JSON tuning logs
+
+These modules stay importable as before, but new code should go through
+the :mod:`repro.api` front door (``PruningSession`` + the target and
+strategy registries) — see the README's "Public API" migration table.
 """
 from repro.core.cost_model import Block, matmul_cost, matmul_cost_grid
 from repro.core.cprune import (CPrune, CPruneConfig, CPruneResult,
@@ -30,7 +34,26 @@ def clear_tuning_caches() -> None:
     from repro.core import latency, tuner
     reset_global_cache()
     latency.clear_fixed_latency_cache()
-    tuner._GRID_CACHE.clear()
+    tuner.clear_grid_cache()
+
+
+# Thin deprecation shims: the session/target/strategy layer moved to
+# repro.api, but `from repro.core import PruningSession` keeps working.
+_API_SHIMS = ("PruningSession", "PruneResult", "TargetSpec", "get_target",
+              "list_targets", "register_target", "get_strategy",
+              "list_strategies", "register_strategy")
+
+
+def __getattr__(name: str):
+    if name in _API_SHIMS:
+        import warnings
+
+        import repro.api as _api
+        warnings.warn(
+            f"repro.core.{name} is a compatibility shim; import it from "
+            f"repro.api instead", DeprecationWarning, stacklevel=2)
+        return getattr(_api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [

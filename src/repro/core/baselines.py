@@ -52,8 +52,12 @@ def _tuned_latency(cfg, sites, wl, pcfg, stats=None, prev=None):
 def uniform_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
                   wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig, *,
                   ratio: float, method: str = "l1",
-                  name: str = "l1_uniform") -> BaselineResult:
+                  name: str = "l1_uniform", target=None) -> BaselineResult:
     """Prune every site by ``ratio`` with the given ranking, then tune."""
+    if target is not None:
+        with target.activate():
+            return uniform_prune(cfg, params, sites, wl, hooks, pcfg,
+                                 ratio=ratio, method=method, name=name)
     sites = [s for s in sites if s.kind in pcfg.prunable_kinds
              and s.kind != "experts"]
     pruned: Dict[str, PruneSite] = {}
@@ -80,8 +84,8 @@ def uniform_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
 
 def netadapt_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
                    wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig, *,
-                   latency_decay: float = 0.97, max_iterations: int = 30
-                   ) -> BaselineResult:
+                   latency_decay: float = 0.97, max_iterations: int = 30,
+                   target=None) -> BaselineResult:
     """NetAdapt-style exhaustive hardware-aware pruning (paper §4.7).
 
     Per iteration: one candidate per site, each pruned by the smallest
@@ -89,6 +93,11 @@ def netadapt_prune(cfg: ModelConfig, params, sites: Sequence[PruneSite],
     every candidate is short-term trained and measured (exhaustive), the
     best-accuracy candidate wins.
     """
+    if target is not None:
+        with target.activate():
+            return netadapt_prune(cfg, params, sites, wl, hooks, pcfg,
+                                  latency_decay=latency_decay,
+                                  max_iterations=max_iterations)
     sites = [s for s in sites if s.kind in pcfg.prunable_kinds
              and s.kind != "experts"]
     stats = tuner.TunerStats()

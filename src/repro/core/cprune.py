@@ -94,11 +94,13 @@ class CPrune:
     """The paper's Algorithm 1 over a JAX model."""
 
     def __init__(self, cfg: ModelConfig, sites: Sequence[PruneSite],
-                 wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig):
+                 wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig,
+                 *, target=None):
         self.cfg = cfg
         self.wl = wl
         self.hooks = hooks
         self.pcfg = pcfg
+        self.target = target      # TargetSpec (or None = active constants)
         self.stats = tuner.TunerStats()
         self.sites = [s for s in sites if s.kind in pcfg.prunable_kinds]
 
@@ -151,6 +153,12 @@ class CPrune:
     # -- Algorithm 1 ----------------------------------------------------------
 
     def run(self, params, *, verbose: bool = False) -> CPruneResult:
+        """Run Algorithm 1 under the instance's target (tuner, cache
+        fingerprints, and latency all see it for the whole loop)."""
+        with tuner.target_activation(self.target):
+            return self._run(params, verbose=verbose)
+
+    def _run(self, params, *, verbose: bool = False) -> CPruneResult:
         pcfg = self.pcfg
         sites = list(self.sites)
 

@@ -63,9 +63,15 @@ def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning) -> Optional[Tuple]:
 
 def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                   *, seq_len: int, use_tuning: bool = True,
-                  stats: Optional[tuner.TunerStats] = None
+                  stats: Optional[tuner.TunerStats] = None, target=None
                   ) -> Tuple[float, Dict[str, float]]:
-    """Latency of the non-prunable ops, per step, per shard."""
+    """Latency of the non-prunable ops, per step, per shard. ``target``
+    evaluates under a registered target (the memo keys per target through
+    the fingerprint)."""
+    if target is not None:
+        with target.activate():
+            return fixed_latency(cfg, sites, wl, seq_len=seq_len,
+                                 use_tuning=use_tuning, stats=stats)
     memo_key = None
     if tuner.engine() != "reference":
         memo_key = _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning)
@@ -147,7 +153,12 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
 
 def model_latency(cfg: ModelConfig, sites: Sequence[PruneSite],
                   table: TaskTable, *, seq_len: int, use_tuning: bool = True,
-                  stats: Optional[tuner.TunerStats] = None) -> LatencyReport:
+                  stats: Optional[tuner.TunerStats] = None,
+                  target=None) -> LatencyReport:
+    if target is not None:
+        with target.activate():
+            return model_latency(cfg, sites, table, seq_len=seq_len,
+                                 use_tuning=use_tuning, stats=stats)
     task_s = table.total_task_latency()
     fixed_s, bd = fixed_latency(cfg, sites, table.wl, seq_len=seq_len,
                                 use_tuning=use_tuning, stats=stats)

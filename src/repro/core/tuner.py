@@ -55,6 +55,7 @@ _BN_CHOICES = tuple(128 * i for i in range(1, 17))     # 128..2048
 
 
 _ENGINE = "vectorized"
+_ENGINE_MODES = ("vectorized", "reference")
 
 
 def engine() -> str:
@@ -68,15 +69,28 @@ def engine_mode(mode: str) -> Iterator[None]:
     ``reference`` restores the full pre-cache behavior — scalar candidate
     loop, no ProgramCache, no incremental table reuse, no fixed-latency
     memo — so benchmarks can measure an honest before/after.
+
+    Unknown modes are rejected before the engine is touched, and the prior
+    engine is restored even when the body raises.
     """
     global _ENGINE
-    if mode not in ("vectorized", "reference"):
-        raise ValueError(mode)
+    if mode not in _ENGINE_MODES:
+        raise ValueError(f"unknown tuning engine mode {mode!r}; "
+                         f"valid modes: {_ENGINE_MODES}")
     old, _ENGINE = _ENGINE, mode
     try:
         yield
     finally:
         _ENGINE = old
+
+
+def target_activation(target):
+    """Context manager activating ``target`` (anything with ``.activate()``,
+    e.g. :class:`repro.api.targets.TargetSpec`); no-op when ``None`` —
+    the shared threading helper for tuner/latency/CPrune/baselines."""
+    if target is None:
+        return contextlib.nullcontext()
+    return target.activate()
 
 
 def _choices(m: int, k: int, n: int) -> Tuple[List[int], List[int], List[int]]:
@@ -90,6 +104,13 @@ def _choices(m: int, k: int, n: int) -> Tuple[List[int], List[int], List[int]]:
 # the meshgrid+filter construction — and the hardware-padded block dims,
 # which depend only on the grid — are memoized. Entries are read-only.
 _GRID_CACHE: Dict[Tuple, Tuple[np.ndarray, ...]] = {}
+
+
+def clear_grid_cache() -> None:
+    """Drop the memoized candidate grids (cold-start benchmarking). The
+    public counterpart of the private ``_GRID_CACHE`` — callers must not
+    reach into the module internals."""
+    _GRID_CACHE.clear()
 
 
 def _grid_with_hw(m: int, k: int, n: int, dtype_bytes: int,
@@ -164,12 +185,20 @@ def tune_gemm(m: int, k: int, n: int, *, batch: int = 1,
               dtype_bytes: int = 2, epilogue_ops: int = 0,
               vmem: Optional[int] = None,
               stats: Optional[TunerStats] = None,
-              cache: Optional[tuning_cache.ProgramCache] = None) -> Program:
+              cache: Optional[tuning_cache.ProgramCache] = None,
+              target=None) -> Program:
     """Exhaustive search for the fastest block config of one GEMM.
 
-    ``vmem`` overrides the target VMEM budget for this search (target
-    swaps); ``cache`` overrides the process-wide ProgramCache.
+    ``target`` tunes under a :class:`~repro.api.targets.TargetSpec` (or any
+    object with ``.activate()``) instead of the currently active constants;
+    ``vmem`` overrides the target VMEM budget for this search;
+    ``cache`` overrides the process-wide ProgramCache.
     """
+    if target is not None:
+        with target.activate():
+            return tune_gemm(m, k, n, batch=batch, dtype_bytes=dtype_bytes,
+                             epilogue_ops=epilogue_ops, vmem=vmem,
+                             stats=stats, cache=cache)
     if _ENGINE == "reference":
         return _tune_gemm_reference(m, k, n, batch=batch,
                                     dtype_bytes=dtype_bytes,
@@ -221,8 +250,12 @@ def _epilogue_ops_for(op_kind: str) -> int:
 
 def tune_task(task: Task, wl: Workload, *, use_tuning: bool = True,
               vmem: Optional[int] = None,
-              stats: Optional[TunerStats] = None) -> None:
+              stats: Optional[TunerStats] = None, target=None) -> None:
     """Tune every constituent GEMM of a task; records fastest programs."""
+    if target is not None:
+        with target.activate():
+            return tune_task(task, wl, use_tuning=use_tuning, vmem=vmem,
+                             stats=stats)
     site = task.sites[0]
     epi = _epilogue_ops_for(site.op_kind)
     for g in site.gemms:
@@ -243,7 +276,7 @@ def tune_task(task: Task, wl: Workload, *, use_tuning: bool = True,
 def tune_table(table: TaskTable, *, use_tuning: bool = True,
                vmem: Optional[int] = None,
                stats: Optional[TunerStats] = None,
-               prev: Optional[TaskTable] = None) -> TaskTable:
+               prev: Optional[TaskTable] = None, target=None) -> TaskTable:
     """Tune all tasks; ``prev`` enables incremental retuning.
 
     When a previous table is given, any task whose signature is unchanged
@@ -253,7 +286,15 @@ def tune_table(table: TaskTable, *, use_tuning: bool = True,
     when ``prev`` was tuned under a different target fingerprint, VMEM
     override, or workload: a signature match alone does not make its
     programs valid (the signature ignores sharding and target constants).
+
+    ``target`` activates a registered target for the whole table tune —
+    the fingerprint is computed under it, so a prev table from another
+    target is refused and the ProgramCache keys per target.
     """
+    if target is not None:
+        with target.activate():
+            return tune_table(table, use_tuning=use_tuning, vmem=vmem,
+                              stats=stats, prev=prev)
     mode = "tuned" if use_tuning else "untuned"
     fingerprint = tuning_cache.target_fingerprint() + (vmem,)
     incremental = (prev is not None and _ENGINE != "reference"
@@ -277,7 +318,8 @@ def build_tuned_table(sites: Sequence[PruneSite], wl: Workload, *,
                       use_tuning: bool = True,
                       vmem: Optional[int] = None,
                       stats: Optional[TunerStats] = None,
-                      prev: Optional[TaskTable] = None) -> TaskTable:
+                      prev: Optional[TaskTable] = None,
+                      target=None) -> TaskTable:
     table = TaskTable(sites, wl)
     return tune_table(table, use_tuning=use_tuning, vmem=vmem, stats=stats,
-                      prev=prev)
+                      prev=prev, target=target)

@@ -1,0 +1,295 @@
+"""The repro.api front door: target registry, strategy registry, and the
+PruningSession facade (prune -> tune -> serve -> save/resume).
+
+Key contracts:
+  * the ``tpu_v5e`` backend is bit-identical to the seed (active-constants)
+    cost model — registry threading cannot drift tuner selections;
+  * the ``edge`` backend yields a *different* accepted prune history on the
+    quickstart workload — the loop is genuinely target-aware;
+  * all four registered strategies return a common PruneResult;
+  * save()/resume() round-trips the prune-loop state and the loop can
+    continue afterwards.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CPruneConfig, PruneResult, PruningSession, TrainHooks,
+                       Workload, get_strategy, get_target, list_strategies,
+                       list_targets, register_strategy, register_target)
+from repro.configs import get_reduced_config
+from repro.core import clear_tuning_caches, cost_model, tuner, tuning_cache
+from repro.core.cprune import CPrune
+from repro.models.model import init_params, prune_sites
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+def _quickstart_cfg():
+    return get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=4, d_model=128, d_ff=1024, n_heads=8, n_kv_heads=2,
+        head_dim=16, vocab_size=256)
+
+
+def _stub_hooks(acc=0.9):
+    return TrainHooks(short_term_train=lambda p, s: p,
+                      eval_acc=lambda p, s: acc)
+
+
+def _fast_pcfg(**over):
+    base = dict(a_g=0.5, alpha=0.5, beta=0.9999, max_iterations=4,
+                seq_len=64)
+    base.update(over)
+    return CPruneConfig(**base)
+
+
+def _session(cfg, params, target="tpu_v5e", **pcfg_over):
+    return PruningSession(cfg, params=params, target=target,
+                          workload=Workload(tokens_global=16384),
+                          hooks=_stub_hooks(), pcfg=_fast_pcfg(**pcfg_over))
+
+
+# ---------------------------------------------------------------------------
+# Target registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_required_targets_and_strategies():
+    assert {"tpu_v5e", "tpu_v4", "edge"} <= set(list_targets())
+    assert {"cprune", "netadapt", "uniform_l1", "fpgm"} \
+        <= set(list_strategies())
+    with pytest.raises(KeyError, match="unknown target"):
+        get_target("no_such_chip")
+    with pytest.raises(KeyError, match="unknown strategy"):
+        get_strategy("no_such_policy")
+    spec = get_target("edge")
+    assert get_target(spec) is spec              # spec passthrough
+    assert get_target(None).name == "tpu_v5e"    # default
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_target(get_target("edge"))
+    with pytest.raises(ValueError, match="already registered"):
+        register_strategy("cprune")(lambda session: None)
+
+
+def test_tpu_v5e_activation_is_bit_identical():
+    v5e = get_target("tpu_v5e")
+    # the registered profile IS the seed constants
+    with v5e.activate():
+        assert tuning_cache.target_fingerprint() == v5e.fingerprint()
+    assert tuning_cache.target_fingerprint() == v5e.fingerprint()
+    for (m, k, n) in ((65536, 256, 8192), (512, 256, 1024), (64, 64, 64)):
+        plain = tuner.tune_gemm(m, k, n)
+        via_target = tuner.tune_gemm(m, k, n, target=v5e)
+        assert plain == via_target               # Block AND latency float
+
+
+def test_activation_restores_on_exception():
+    before = cost_model.HBM_BW
+    with pytest.raises(RuntimeError):
+        with get_target("edge").activate():
+            assert cost_model.HBM_BW != before
+            raise RuntimeError("boom")
+    assert cost_model.HBM_BW == before
+
+
+def test_targets_key_the_program_cache_separately():
+    stats = tuner.TunerStats()
+    tuner.tune_gemm(2048, 512, 1024, stats=stats, target=get_target("edge"))
+    tuner.tune_gemm(2048, 512, 1024, stats=stats,
+                    target=get_target("tpu_v5e"))
+    assert stats.cache_misses == 2               # different fingerprints
+    tuner.tune_gemm(2048, 512, 1024, stats=stats, target=get_target("edge"))
+    assert stats.cache_hits == 1                 # edge entry still valid
+
+
+def test_edge_target_tunes_within_its_vmem_budget():
+    edge = get_target("edge")
+    prog = tuner.tune_gemm(65536, 1024, 2048, target=edge)
+    assert prog.block.vmem_bytes(2) <= edge.vmem_bytes
+
+
+# ---------------------------------------------------------------------------
+# Target-aware pruning: the acceptance criterion
+# ---------------------------------------------------------------------------
+
+def _history_via_session(cfg, params, target):
+    clear_tuning_caches()
+    res = _session(cfg, params, target=target).prune(strategy="cprune")
+    return res.history_digest()
+
+
+def test_same_loop_different_targets_different_architectures():
+    """tpu_v5e reproduces the pre-registry CPrune history bit-identically;
+    edge yields a different accepted prune history on the same (quickstart)
+    workload — the paper's Fig. 7/8 target-specificity claim."""
+    cfg = _quickstart_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    clear_tuning_caches()
+    raw = CPrune(cfg, prune_sites(cfg), Workload(tokens_global=16384),
+                 _stub_hooks(), _fast_pcfg()).run(params)
+    raw_digest = [(h.task_kind, h.prune_units, h.dim_before, h.dim_after,
+                   h.accepted) for h in raw.history]
+
+    v5e = _history_via_session(cfg, params, "tpu_v5e")
+    edge = _history_via_session(cfg, params, "edge")
+    assert v5e == raw_digest                     # registry == seed model
+    assert edge != v5e                           # target changes the result
+    assert any(h.accepted for h in raw.history)  # non-degenerate comparison
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry through the session
+# ---------------------------------------------------------------------------
+
+def test_all_strategies_return_common_prune_result():
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n0 = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    for strategy, kw in (("cprune", {}), ("uniform_l1", dict(ratio=0.25)),
+                         ("fpgm", dict(ratio=0.25)),
+                         ("netadapt", dict(max_iterations=1))):
+        res = _session(cfg, params, max_iterations=2).prune(
+            strategy=strategy, **kw)
+        assert isinstance(res, PruneResult)
+        assert res.strategy == strategy
+        assert res.target == "tpu_v5e"
+        n1 = sum(int(np.prod(np.asarray(x).shape))
+                 for x in jax.tree.leaves(res.params))
+        assert n1 < n0                           # something was pruned
+        assert res.final_latency.total_s <= res.original_latency.total_s
+        assert res.fps_increase >= 1.0
+
+
+def test_custom_strategy_registration():
+    @register_strategy("identity_test", overwrite=True)
+    def _identity(session, **_):
+        rep = session.latency_report()
+        return PruneResult(
+            strategy="identity_test", target=session.target.name,
+            params=session.params, sites=session.sites, final_latency=rep,
+            original_latency=rep, final_acc=1.0, candidates_evaluated=0)
+
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, vocab_size=128)
+    res = _session(cfg, None).prune(strategy="identity_test")
+    assert res.fps_increase == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Session checkpointing
+# ---------------------------------------------------------------------------
+
+def test_session_save_resume_roundtrip(tmp_path):
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    session = _session(cfg, None, max_iterations=2)
+    res = session.prune(strategy="cprune")
+    assert any(h.accepted for h in res.history)
+    session.save(str(tmp_path / "ckpt"))
+
+    resumed = PruningSession.resume(str(tmp_path / "ckpt"),
+                                    hooks=_stub_hooks())
+    assert resumed.cfg == cfg
+    assert resumed.target.name == session.target.name
+    assert resumed.workload == session.workload
+    assert {s.site_id: s.dim for s in resumed.sites} \
+        == {s.site_id: s.dim for s in session.sites}
+    assert len(resumed.history) == len(session.history)
+    for a, b in zip(jax.tree.leaves(jax.tree.map(np.asarray, session.params)),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(a, b)
+    # the prune loop can continue from the checkpoint
+    res2 = resumed.prune(strategy="cprune")
+    assert min(s.dim for s in res2.sites) \
+        <= min(s.dim for s in session.sites)
+    # unknown checkpoint versions are refused, not misread
+    import json
+    meta = json.loads((tmp_path / "ckpt" / "session.json").read_text())
+    meta["version"] = 999
+    (tmp_path / "ckpt" / "session.json").write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="version"):
+        PruningSession.resume(str(tmp_path / "ckpt"))
+
+
+def test_resume_preserves_target_and_can_override(tmp_path):
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, vocab_size=128)
+    session = PruningSession(cfg, target="edge",
+                             workload=Workload(tokens_global=8192))
+    session.save(str(tmp_path / "ckpt"))
+    assert PruningSession.resume(str(tmp_path / "ckpt")).target.name == "edge"
+    assert PruningSession.resume(str(tmp_path / "ckpt"),
+                                 target="tpu_v4").target.name == "tpu_v4"
+    # a custom (unregistered) spec round-trips through its saved fields
+    custom = dataclasses.replace(get_target("edge"), name="my_chip",
+                                 hbm_bw=123e9)
+    PruningSession(cfg, target=custom,
+                   workload=Workload(tokens_global=8192)
+                   ).save(str(tmp_path / "ckpt2"))
+    resumed = PruningSession.resume(str(tmp_path / "ckpt2"))
+    assert resumed.target == custom
+    # a customized spec that *shadows* a registry name must not be
+    # silently replaced by the stock profile on resume
+    shadow = dataclasses.replace(get_target("edge"), hbm_bw=999e9)
+    PruningSession(cfg, target=shadow,
+                   workload=Workload(tokens_global=8192)
+                   ).save(str(tmp_path / "ckpt3"))
+    assert PruningSession.resume(str(tmp_path / "ckpt3")).target == shadow
+
+
+def test_prune_keeps_untouched_sites_in_session_state(tmp_path):
+    """Strategies return only their filtered site subset; the session must
+    merge it back so tune/latency_report/save still see every site."""
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    session = PruningSession(
+        cfg, workload=Workload(tokens_global=8192), hooks=_stub_hooks(),
+        pcfg=_fast_pcfg(max_iterations=2, prunable_kinds=("ffn",)))
+    kinds_before = sorted(s.kind for s in session.sites)
+    assert "heads" in kinds_before
+    res = session.prune(strategy="cprune")
+    assert sorted(s.kind for s in res.sites) == ["ffn"]   # strategy subset
+    assert sorted(s.kind for s in session.sites) == kinds_before
+    ffn = next(s for s in session.sites if s.kind == "ffn")
+    assert ffn.dim < cfg.d_ff                             # pruned site merged
+    # save/resume agree with the live session, heads site included
+    session.save(str(tmp_path / "ckpt"))
+    resumed = PruningSession.resume(str(tmp_path / "ckpt"))
+    assert {s.site_id: s.dim for s in resumed.sites} \
+        == {s.site_id: s.dim for s in session.sites}
+
+
+def test_prune_with_default_hooks_warns():
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    session = PruningSession(cfg, workload=Workload(tokens_global=8192),
+                             pcfg=_fast_pcfg(max_iterations=1))
+    with pytest.warns(UserWarning, match="no-op"):
+        session.prune(strategy="uniform_l1", ratio=0.25)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_core_shims_forward_to_api():
+    import repro.core as core
+    with pytest.warns(DeprecationWarning):
+        assert core.PruningSession is PruningSession
+    with pytest.raises(AttributeError):
+        core.definitely_not_a_symbol

@@ -80,3 +80,44 @@ def test_engine_mixed_length_prompts_wave_correctly(setup):
     stats = eng.run()
     assert stats["requests"] == 5
     assert stats["waves"] >= 2          # length groups cannot share a wave
+
+
+def test_engine_serves_real_pruned_params_end_to_end():
+    """Prune via the session front door, then serve the *pruned* params:
+    decode outputs keep their shapes and the batch accounting adds up."""
+    from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
+
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    session = PruningSession(
+        cfg, workload=Workload(tokens_global=8192),
+        hooks=TrainHooks(short_term_train=lambda p, s: p,
+                         eval_acc=lambda p, s: 0.9),
+        pcfg=CPruneConfig(a_g=0.5, alpha=0.5, beta=0.9999,
+                          max_iterations=2, seq_len=64))
+    res = session.prune(strategy="cprune")
+    assert any(h.accepted for h in res.history)
+    ffn = next(s for s in res.sites if s.kind == "ffn")
+    assert ffn.dim < cfg.d_ff                     # params really shrank
+    assert res.params["stack"]["pos0"]["ffn"]["w_up"].shape[-1] == ffn.dim
+
+    eng = session.serve(max_batch=4, max_seq=24)
+    rng = np.random.default_rng(3)
+    n_req, n_new = 6, 4
+    for i in range(n_req):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=8).astype(np.int32),
+            max_new_tokens=n_new))
+    stats = eng.run()
+    # batch accounting: every request finished with exactly its token budget
+    assert stats["requests"] == n_req
+    assert stats["waves"] == 2                    # 4 + 2 with max_batch=4
+    assert stats["total_new_tokens"] == n_req * n_new
+    for r in eng.done:
+        assert r.done and len(r.output) == n_new
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+    # pruned-model decode must match its own full-forward reference
+    r0 = next(r for r in eng.done if r.rid == 0)
+    expect = _greedy_reference(cfg, res.params, r0.prompt, n_new)
+    assert r0.output == expect

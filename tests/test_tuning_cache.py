@@ -117,6 +117,40 @@ def test_vmem_override_constrains_search():
 
 
 # ---------------------------------------------------------------------------
+# Engine-mode guard rails + public grid-cache reset
+# ---------------------------------------------------------------------------
+
+def test_engine_mode_rejects_unknown_and_restores_on_exception():
+    before = tuner.engine()
+    with pytest.raises(ValueError, match="unknown tuning engine mode"):
+        with tuner.engine_mode("no_such_engine"):
+            pass                                  # pragma: no cover
+    assert tuner.engine() == before               # rejected before mutation
+    with pytest.raises(RuntimeError):
+        with tuner.engine_mode("reference"):
+            assert tuner.engine() == "reference"
+            raise RuntimeError("body blew up")
+    assert tuner.engine() == before               # restored on exception
+    # nested modes unwind in order
+    with tuner.engine_mode("reference"):
+        with tuner.engine_mode("vectorized"):
+            assert tuner.engine() == "vectorized"
+        assert tuner.engine() == "reference"
+    assert tuner.engine() == before
+
+
+def test_clear_grid_cache_public_api():
+    tuner.candidate_grid(512, 512, 512)
+    assert len(tuner._GRID_CACHE) > 0
+    tuner.clear_grid_cache()
+    assert len(tuner._GRID_CACHE) == 0
+    # clear_tuning_caches goes through the public entry point too
+    tuner.candidate_grid(512, 512, 512)
+    clear_tuning_caches()
+    assert len(tuner._GRID_CACHE) == 0
+
+
+# ---------------------------------------------------------------------------
 # Incremental TaskTable retuning
 # ---------------------------------------------------------------------------
 
