@@ -1,0 +1,72 @@
+"""Measured-oracle smoke: a full CPrune run scored by *executing* the
+repo's Pallas kernels (interpret mode on CPU), recorded to a replay log,
+then replayed to prove the log reproduces the identical prune history.
+
+This is the CI `measured-smoke` job: it must finish a small config
+end-to-end inside a 10-minute budget and leaves the recorded log at
+``MEASURED_SMOKE_LOG`` (default ``measured_replay.json``) as the build
+artifact — the same calibrate -> replay workflow a user runs against a
+real TPU.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks import common
+from repro.api import (MeasuredOracle, MeasurementConfig, MeasurementLog,
+                       PruningSession, ReplayOracle)
+from repro.core import CPruneConfig, Workload, clear_tuning_caches
+
+# CPU-interpret-friendly measurement protocol: tiny shortlist, one
+# measured grid step per dim, median of 3 unwarmed repeats
+MEASURE = MeasurementConfig(warmup=0, repeats=3, trim=0, measure_top_k=2,
+                            max_grid_steps=1)
+
+
+def _session(setup, oracle):
+    return PruningSession(setup.cfg, params=setup.params, target="tpu_v5e",
+                          oracle=oracle, workload=setup.wl,
+                          hooks=setup.hooks, pcfg=setup.pcfg)
+
+
+def run():
+    t = common.Timer()
+    log_path = os.environ.get("MEASURED_SMOKE_LOG", "measured_replay.json")
+    setup = common.make_setup(n_layers=2, d_model=64, d_ff=256, n_heads=4,
+                              n_kv_heads=2, head_dim=16, vocab_size=128,
+                              max_iterations=3, alpha=0.5, beta=0.999)
+    setup.wl = Workload(tokens_global=1024)
+    common.pretrain(setup, steps=10)
+
+    # measured run, recording every kernel timing
+    log = MeasurementLog(MEASURE)
+    clear_tuning_caches()
+    res_m = _session(setup, MeasuredOracle(MEASURE, record=log)) \
+        .prune(strategy="cprune")
+    n_saved = log.save(log_path)
+    stats = res_m.tuner_stats
+
+    # replay run from the saved artifact: identical history required
+    clear_tuning_caches()
+    res_r = _session(setup, ReplayOracle.from_file(log_path)) \
+        .prune(strategy="cprune")
+    identical = res_r.history_digest(include_latency=True) \
+        == res_m.history_digest(include_latency=True)
+    clear_tuning_caches()
+
+    derived = (f"identical_history={identical}"
+               f";accepted={sum(h.accepted for h in res_m.history)}"
+               f";measured_programs={stats.measured_programs}"
+               f";measure_wall_s={stats.measure_wall_s:.1f}"
+               f";replay_hits={res_r.tuner_stats.replay_hits}"
+               f";log_entries={n_saved}")
+    common.emit("measured_smoke", t.us(), derived)
+    if not identical:
+        # RuntimeError (not SystemExit) so benchmarks/run.py's harness can
+        # record the failure row and keep running the remaining figures
+        raise RuntimeError("replay history diverged from the measured run")
+    return {"log_path": log_path, "identical": identical}
+
+
+if __name__ == "__main__":
+    run()

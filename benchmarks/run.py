@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig11_search_cost  paper Fig. 11 (selective vs exhaustive search)
   session_targets    PruningSession target registry: tpu_v5e bit-identical
                      to the seed model, edge yields a different history
+  measured_smoke     measured-execution oracle: CPrune scored by timing
+                     the Pallas kernels, replay-log determinism check
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -22,8 +24,9 @@ import traceback
 def main() -> None:
     from benchmarks import (fig1_correlation, fig6_iterations,
                             fig8_cross_target, fig11_search_cost,
-                            kernels_bench, roofline, session_targets,
-                            table1_methods, table2_ablations, tuner_bench)
+                            kernels_bench, measured_smoke, roofline,
+                            session_targets, table1_methods,
+                            table2_ablations, tuner_bench)
     from benchmarks import common
 
     print("name,us_per_call,derived")
@@ -34,6 +37,7 @@ def main() -> None:
         ("table2_ablations", table2_ablations.run),
         ("fig8_cross_target", fig8_cross_target.run),
         ("session_targets", session_targets.run),
+        ("measured_smoke", measured_smoke.run),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

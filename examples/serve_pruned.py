@@ -42,6 +42,14 @@ def main():
         print(f"{label:10s} {stats['requests']} reqs in "
               f"{stats['wall_s']:.2f}s -> {stats['tokens_per_s']:.1f} tok/s "
               f"(TTFT {stats['mean_ttft_s']*1e3:.0f} ms)")
+        if stats.get("oracle_rel_error") is not None:
+            # the latency oracle predicts a v5e shard; this CPU run makes
+            # the prediction error observable (the gap the measured
+            # backend closes on real hardware)
+            print(f"{'':10s} decode step: predicted "
+                  f"{stats['predicted_step_s']*1e3:.3f} ms vs measured "
+                  f"{stats['measured_step_s']*1e3:.1f} ms "
+                  f"(rel err {stats['oracle_rel_error']:+.1%})")
         return stats
 
     print("serving dense vs 50%-FFN-pruned model (same engine):")

@@ -14,6 +14,13 @@ Targets (`targets.py`): registry of :class:`TargetSpec` device profiles —
 threaded through the tuner, the tuning-cache fingerprints, the latency
 model, and CPrune, so one prune loop produces per-target architectures.
 
+Oracles (`repro.core.oracle`, re-exported here): pluggable scoring
+backends — ``analytic`` (the closed-form model, default), ``measured``
+(times the repo's Pallas kernels), ``replay`` (deterministic playback of
+a recorded measurement log) — selected per session
+(``PruningSession(oracle=...)``), per run (``session.prune(oracle=...)``),
+and recorded with ``session.calibrate()``.
+
 Strategies (`strategies.py`): registry unifying Algorithm 1 and the
 baselines behind one call with a common :class:`PruneResult`.
 
@@ -26,11 +33,16 @@ from repro.api.strategies import (PruneResult, get_strategy, list_strategies,
 from repro.api.targets import (Target, TargetSpec, get_target, list_targets,
                                register_target)
 from repro.core.cprune import CPruneConfig, TrainHooks
+from repro.core.oracle import (AnalyticOracle, LatencyOracle, MeasuredOracle,
+                               MeasurementConfig, MeasurementLog,
+                               ReplayOracle, get_oracle, use_oracle)
 from repro.core.tasks import Workload
 
 __all__ = [
     "PruningSession", "PruneResult", "get_strategy", "list_strategies",
     "register_strategy", "Target", "TargetSpec", "get_target",
     "list_targets", "register_target", "CPruneConfig", "TrainHooks",
-    "Workload",
+    "Workload", "AnalyticOracle", "LatencyOracle", "MeasuredOracle",
+    "MeasurementConfig", "MeasurementLog", "ReplayOracle", "get_oracle",
+    "use_oracle",
 ]

@@ -3,23 +3,29 @@
 One object owns the pieces users previously hand-wired across every
 example and benchmark (Model + params + PruneSite list + Workload +
 TrainHooks + CPruneConfig + tuner + ServeEngine) and threads the selected
-:class:`~repro.api.targets.TargetSpec` through all of them:
+:class:`~repro.api.targets.TargetSpec` *and* the selected
+:class:`~repro.core.oracle.LatencyOracle` backend through all of them:
 
-    session = PruningSession(cfg, target="edge",
+    session = PruningSession(cfg, target="edge", oracle="analytic",
                              workload=Workload(tokens_global=65536),
                              hooks=my_hooks, pcfg=CPruneConfig(a_g=0.5))
     result = session.prune(strategy="cprune")     # or netadapt/uniform_l1/...
     engine = session.serve(max_batch=8)           # serves the pruned params
+    log = session.calibrate("replay.json")        # record measured timings
     session.save("ckpt/")                         # prune-loop checkpoint
     session = PruningSession.resume("ckpt/", hooks=my_hooks)
 
-``prune`` runs entirely under ``target.activate()``, so the tuner, the
-tuning-cache fingerprints, and the latency model all see the session's
-target — the same loop provably produces different pruned architectures
-per target (tests/test_api.py, benchmarks/session_targets.py).
+``prune`` runs entirely under ``target.activate()`` and
+``use_oracle(session.oracle)``, so the tuner, the tuning-cache
+fingerprints, and the latency model all see the session's target and
+scoring backend — the same loop provably produces different pruned
+architectures per target (tests/test_api.py, benchmarks/session_targets.py)
+and a ``replay`` oracle reproduces a ``measured`` run's history exactly
+(tests/test_oracle.py, benchmarks/measured_smoke.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -32,7 +38,10 @@ from repro.api.strategies import PruneResult, get_strategy, list_strategies
 from repro.api.targets import TargetSpec, get_target
 from repro.configs.base import ModelConfig
 from repro.core import latency, tuner
+from repro.core import oracle as oracle_mod
 from repro.core.cprune import CPruneConfig, IterationRecord, TrainHooks
+from repro.core.oracle import (LatencyOracle, MeasuredOracle,
+                               MeasurementConfig, MeasurementLog)
 from repro.core.tasks import TaskTable, Workload
 from repro.models.model import Model, init_params, prune_sites
 from repro.serve.engine import ServeEngine
@@ -81,12 +90,18 @@ class PruningSession:
     def __init__(self, cfg: ModelConfig, *,
                  params: Optional[Dict[str, Any]] = None,
                  target: Union[str, TargetSpec, None] = "tpu_v5e",
+                 oracle: Union[str, LatencyOracle, None] = None,
                  workload: Optional[Workload] = None,
                  hooks: Optional[TrainHooks] = None,
                  pcfg: Optional[CPruneConfig] = None,
                  seed: int = 0):
         self.cfg = cfg
         self.target = get_target(target)
+        # None -> the target's declared default backend (analytic for all
+        # built-in profiles); a name or LatencyOracle instance overrides
+        self.oracle = oracle_mod.get_oracle(
+            oracle if oracle is not None
+            else getattr(self.target, "default_oracle", "analytic"))
         self.model = Model(cfg)
         self.params = params if params is not None \
             else init_params(jax.random.PRNGKey(seed), cfg)
@@ -100,11 +115,26 @@ class PruningSession:
         self.final_acc: Optional[float] = None
         self.last_strategy: Optional[str] = None
 
+    # -- target + oracle activation ----------------------------------------
+
+    @contextlib.contextmanager
+    def _active(self, oracle: Union[str, LatencyOracle, None] = None):
+        """Everything the session runs happens in here: the target's
+        constants installed AND the session's (or an override) oracle
+        active, so tuner, cache fingerprints, and latency agree on both."""
+        orc = self.oracle if oracle is None else oracle_mod.get_oracle(oracle)
+        with self.target.activate(), oracle_mod.use_oracle(orc):
+            yield orc
+
     # -- prune --------------------------------------------------------------
 
-    def prune(self, strategy: str = "cprune", **kwargs) -> PruneResult:
+    def prune(self, strategy: str = "cprune",
+              oracle: Union[str, LatencyOracle, None] = None,
+              **kwargs) -> PruneResult:
         """Run a registered pruning strategy under the session's target and
-        adopt the pruned model as the session state."""
+        adopt the pruned model as the session state. ``oracle`` overrides
+        the session's scoring backend for this run only (e.g.
+        ``session.prune(oracle="measured")``)."""
         fn = get_strategy(strategy)
         if getattr(self.hooks, "_is_null", False):
             import warnings
@@ -113,7 +143,7 @@ class PruningSession:
                 "1.0, so every candidate passes the accuracy gate and "
                 "final_acc is meaningless — pass hooks=TrainHooks(...) for "
                 "real accuracy-gated pruning", stacklevel=2)
-        with self.target.activate():
+        with self._active(oracle):
             result = fn(self, **kwargs)
         self.params = result.params
         # strategies filter to pcfg.prunable_kinds and return only that
@@ -134,33 +164,93 @@ class PruningSession:
     # -- tune / measure -----------------------------------------------------
 
     def tune(self, *, use_tuning: bool = True,
-             stats: Optional[tuner.TunerStats] = None) -> TaskTable:
+             stats: Optional[tuner.TunerStats] = None,
+             oracle: Union[str, LatencyOracle, None] = None) -> TaskTable:
         """Tuned task table (the paper's C) for the current sites under the
-        session's target."""
-        with self.target.activate():
+        session's target and oracle."""
+        with self._active(oracle):
             return tuner.build_tuned_table(
                 self.sites, self.workload, use_tuning=use_tuning, stats=stats)
 
-    def latency_report(self, *, use_tuning: bool = True
+    def latency_report(self, *, use_tuning: bool = True,
+                       oracle: Union[str, LatencyOracle, None] = None
                        ) -> latency.LatencyReport:
         """Whole-model latency of the current (possibly pruned) model on the
-        session's target."""
-        with self.target.activate():
+        session's target, costed by the session's (or an override) oracle."""
+        with self._active(oracle):
             table = tuner.build_tuned_table(self.sites, self.workload,
                                             use_tuning=use_tuning)
             return latency.model_latency(
                 self.cfg, self.sites, table, seq_len=self.pcfg.seq_len,
                 use_tuning=use_tuning)
 
+    def calibrate(self, path: Optional[str] = None, *,
+                  config: Optional[MeasurementConfig] = None
+                  ) -> MeasurementLog:
+        """Record a measured-execution replay log for the current model.
+
+        Tunes the current task table and the fixed ops with the measured
+        backend while recording every kernel timing; the returned
+        :class:`MeasurementLog` (also written to ``path`` when given)
+        drives a deterministic ``ReplayOracle`` later. If the session's
+        own oracle is already a recording :class:`MeasuredOracle`, its log
+        is extended/reused — so calling ``calibrate`` after a measured
+        ``prune`` snapshots everything that run measured.
+        """
+        if isinstance(self.oracle, MeasuredOracle) \
+                and self.oracle.record is not None \
+                and (config is None or config == self.oracle.config):
+            orc = self.oracle
+        else:
+            # inherit a measured session's protocol so the recorded log
+            # matches the backend the session actually scores with
+            cfg_m = config or (self.oracle.config
+                               if isinstance(self.oracle, MeasuredOracle)
+                               else MeasurementConfig())
+            orc = MeasuredOracle(cfg_m, record=MeasurementLog(cfg_m))
+        with self._active(orc):
+            table = tuner.build_tuned_table(self.sites, self.workload)
+            latency.model_latency(self.cfg, self.sites, table,
+                                  seq_len=self.pcfg.seq_len)
+        if path is not None:
+            orc.record.save(path)
+        return orc.record
+
     # -- serve --------------------------------------------------------------
 
     def serve(self, *, params: Optional[Dict[str, Any]] = None,
               max_batch: int = 8, max_seq: int = 512,
-              seed: int = 0) -> ServeEngine:
+              seed: int = 0, predict_step: bool = True) -> ServeEngine:
         """A :class:`ServeEngine` over the current (pruned) params — or an
-        explicit ``params`` override, e.g. the dense baseline."""
+        explicit ``params`` override, e.g. the dense baseline.
+
+        With ``predict_step`` (default), the engine is handed the oracle's
+        predicted per-decode-step latency for this model at ``max_batch``
+        (per-token GEMMs for ``max_batch`` tokens, attention against a
+        ``max_seq``-deep KV cache), and its ``run()`` stats report
+        predicted vs measured step time — the observable oracle error the
+        paper's compiler feedback loop closes. The prediction describes
+        the *session's* model, so serving a ``params`` override (e.g. the
+        dense baseline) gets no prediction.
+        """
+        predicted = None
+        if predict_step and params is None:
+            wl = Workload(tokens_global=max_batch, dp=1, tp=1,
+                          dtype_bytes=self.workload.dtype_bytes)
+            try:
+                with self._active():
+                    table = tuner.build_tuned_table(self.sites, wl)
+                    predicted = latency.model_latency(
+                        self.cfg, self.sites, table, seq_len=1,
+                        decode_kv_len=max_seq).total_s
+            except KeyError:
+                # a replay log recorded for the training workload cannot
+                # score the decode-step shapes; serve without a prediction
+                # rather than refusing to serve
+                predicted = None
         return ServeEngine(self.cfg, self.params if params is None else params,
-                           max_batch=max_batch, max_seq=max_seq, seed=seed)
+                           max_batch=max_batch, max_seq=max_seq, seed=seed,
+                           predicted_step_s=predicted)
 
     # -- checkpointing ------------------------------------------------------
 
@@ -179,6 +269,7 @@ class PruningSession:
             # full spec fields so custom/unregistered targets round-trip
             "target_spec": dataclasses.asdict(self.target),
             "workload": dataclasses.asdict(self.workload),
+            "oracle": self.oracle.name,
             "pcfg": dataclasses.asdict(self.pcfg),
             "site_dims": {s.site_id: s.dim for s in self.sites},
             "strategy": self.last_strategy,
@@ -226,8 +317,16 @@ class PruningSession:
             spec_d = meta.get("target_spec")
             target = TargetSpec(**spec_d) if spec_d \
                 else get_target(meta["target"])
+        # replay logs are external artifacts and measurement state is not
+        # serialized, so only the stateless backends round-trip by name;
+        # a measured/replay session resumes with a fresh backend of the
+        # same kind (replay falls back to the target default — reattach
+        # the log via PruningSession(oracle=ReplayOracle(path)) instead)
+        oracle = meta.get("oracle")
+        if oracle not in ("analytic", "measured"):
+            oracle = None
         session = cls(
-            cfg, params=params, target=target,
+            cfg, params=params, target=target, oracle=oracle,
             workload=workload or Workload(**meta["workload"]),
             hooks=hooks, pcfg=pcfg or CPruneConfig(**meta["pcfg"]))
         dims = meta["site_dims"]

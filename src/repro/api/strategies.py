@@ -41,10 +41,15 @@ class PruneResult:
     def fps_increase(self) -> float:
         return self.original_latency.total_s / self.final_latency.total_s
 
-    def history_digest(self) -> List[Tuple]:
+    def history_digest(self, *, include_latency: bool = False) -> List[Tuple]:
         """Hashable digest of the *accepted* prune trajectory — the quantity
         that differs between targets (paper Fig. 7/8) and must not differ
-        between tuning engines (tuner_bench)."""
+        between tuning engines (tuner_bench). ``include_latency`` adds the
+        measured l_m per record for exact-value identity checks (the
+        measured-vs-replay acceptance in measured_smoke)."""
+        if include_latency:
+            return [(h.task_kind, h.prune_units, h.dim_before, h.dim_after,
+                     h.l_m, h.accepted) for h in self.history]
         return [(h.task_kind, h.prune_units, h.dim_before, h.dim_after,
                  h.accepted) for h in self.history]
 

@@ -85,6 +85,12 @@ class TargetSpec:
     call_overhead_s: float = 2e-6
     vpu_throughput: float = 4e12
     description: str = ""
+    # which latency-oracle backend a PruningSession on this target uses
+    # when the caller does not pass one ("analytic" | "measured"); the
+    # analytic profiles (tpu_v5e/tpu_v4/edge) all stay analytic — their
+    # constants ARE the device. Not part of fingerprint(): the oracle
+    # identity is keyed separately by the active backend itself.
+    default_oracle: str = "analytic"
 
     def fingerprint(self) -> Tuple:
         """Constants a tuned program depends on, in the exact order of

@@ -1,6 +1,7 @@
 """CPrune core: compiler-informed model pruning (the paper's contribution).
 
 cost_model  — analytic latency model of the *active* target device
+oracle      — pluggable latency backends: analytic | measured | replay
 program     — tuned Pallas block configs + iterator factorizations
 tuner       — per-task program search (the AutoTVM/Ansor role)
 tasks       — subgraph/task decomposition + relationship table C
@@ -19,6 +20,10 @@ strategy registries) — see the README's "Public API" migration table.
 from repro.core.cost_model import Block, matmul_cost, matmul_cost_grid
 from repro.core.cprune import (CPrune, CPruneConfig, CPruneResult,
                                TrainHooks)
+from repro.core.oracle import (AnalyticOracle, LatencyOracle, MeasuredOracle,
+                               MeasurementConfig, MeasurementLog,
+                               ReplayOracle, active_oracle, get_oracle,
+                               use_oracle)
 from repro.core.program import Iterator, Program
 from repro.core.prune_step import lcm_prune_step, program_prune_step
 from repro.core.tasks import Task, TaskTable, Workload
@@ -61,5 +66,7 @@ __all__ = [
     "CPruneResult", "TrainHooks", "Iterator", "Program", "lcm_prune_step",
     "program_prune_step", "Task", "TaskTable", "Workload", "TunerStats",
     "build_tuned_table", "tune_gemm", "ProgramCache", "global_cache",
-    "reset_global_cache", "clear_tuning_caches",
+    "reset_global_cache", "clear_tuning_caches", "AnalyticOracle",
+    "LatencyOracle", "MeasuredOracle", "MeasurementConfig", "MeasurementLog",
+    "ReplayOracle", "active_oracle", "get_oracle", "use_oracle",
 ]

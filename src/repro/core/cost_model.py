@@ -43,6 +43,14 @@ def _round_up(a: int, b: int) -> int:
     return _ceil(a, b) * b
 
 
+def epilogue_cost(batch, epilogue_ops, gm, bm_h, gn, bn_h):
+    """Fused-epilogue (activation/bias/norm on the output tile) term.
+    Elementwise over arrays — the single source of truth for the scalar
+    cost, the vectorized grid, and the measured oracle's analytic
+    epilogue correction."""
+    return batch * epilogue_ops * (gm * bm_h) * (gn * bn_h) / VPU_THROUGHPUT
+
+
 def block_vmem_bytes(bm, bk, bn, dtype_bytes):
     """Working-set bytes of a (bm, bk, bn) block: double-buffered A/B input
     tiles + fp32 accumulator. Elementwise over arrays — the single source
@@ -89,7 +97,7 @@ def matmul_cost(m: int, k: int, n: int, block: Block, *,
     bytes_c = (gm * bm_h) * (gn * bn_h) * dtype_bytes
     t_mem = batch * (bytes_a + bytes_b + bytes_c) / HBM_BW
     # epilogue (activation / bias / norm fused on output tile)
-    t_epi = batch * epilogue_ops * (gm * bm_h) * (gn * bn_h) / VPU_THROUGHPUT
+    t_epi = epilogue_cost(batch, epilogue_ops, gm, bm_h, gn, bn_h)
     return max(t_compute, t_mem) + t_epi + n_blocks * BLOCK_OVERHEAD_S \
         + CALL_OVERHEAD_S
 
@@ -133,8 +141,7 @@ def matmul_cost_grid(m: int, k: int, n: int,
     bytes_c = (gm * bm_h) * (gn * bn_h) * dtype_bytes
     t_mem = batch * (bytes_a + bytes_b + bytes_c) / HBM_BW
     if epilogue_ops:
-        t_epi = batch * epilogue_ops * (gm * bm_h) * (gn * bn_h) \
-            / VPU_THROUGHPUT
+        t_epi = epilogue_cost(batch, epilogue_ops, gm, bm_h, gn, bn_h)
     else:
         t_epi = 0.0     # identical to the scalar path's exact-zero term
     return np.maximum(t_compute, t_mem) + t_epi \

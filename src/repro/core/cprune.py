@@ -95,12 +95,13 @@ class CPrune:
 
     def __init__(self, cfg: ModelConfig, sites: Sequence[PruneSite],
                  wl: Workload, hooks: TrainHooks, pcfg: CPruneConfig,
-                 *, target=None):
+                 *, target=None, oracle=None):
         self.cfg = cfg
         self.wl = wl
         self.hooks = hooks
         self.pcfg = pcfg
         self.target = target      # TargetSpec (or None = active constants)
+        self.oracle = oracle      # LatencyOracle (or None = active backend)
         self.stats = tuner.TunerStats()
         self.sites = [s for s in sites if s.kind in pcfg.prunable_kinds]
 
@@ -153,9 +154,12 @@ class CPrune:
     # -- Algorithm 1 ----------------------------------------------------------
 
     def run(self, params, *, verbose: bool = False) -> CPruneResult:
-        """Run Algorithm 1 under the instance's target (tuner, cache
-        fingerprints, and latency all see it for the whole loop)."""
-        with tuner.target_activation(self.target):
+        """Run Algorithm 1 under the instance's target and latency oracle
+        (tuner, cache fingerprints, and latency all see both for the
+        whole loop)."""
+        from repro.core import oracle as oracle_mod
+        with tuner.target_activation(self.target), \
+                oracle_mod.use_oracle(self.oracle):
             return self._run(params, verbose=verbose)
 
     def _run(self, params, *, verbose: bool = False) -> CPruneResult:

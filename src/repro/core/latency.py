@@ -10,11 +10,13 @@ FPS = global_batch / step_latency on the target mesh shard.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
-from repro.core import cost_model, tuner, tuning_cache
+from repro.core import tuner, tuning_cache
+from repro.core import oracle as oracle_mod
 from repro.core.tasks import TaskTable, Workload
 from repro.models.model import PruneSite
 
@@ -41,19 +43,52 @@ def _head_dim_of(cfg, sites: Sequence[PruneSite], block_path: str) -> int:
 
 # Memo for the whole fixed-op computation. The only site-dependent inputs
 # are the (rarely changing) per-block q-head counts, so candidate models
-# that prune FFN/MoE dims re-read the fixed half for free.
-_FIXED_CACHE: Dict[Tuple, Tuple[float, Dict[str, float]]] = {}
+# that prune FFN/MoE dims re-read the fixed half for free. LRU-bounded:
+# long multi-target/multi-oracle sessions churn the key space (every
+# target swap and every oracle is a fresh key family), and the memo must
+# not grow without limit.
+_FIXED_CACHE: "collections.OrderedDict[Tuple, Tuple[float, Dict[str, float]]]" \
+    = collections.OrderedDict()
+_FIXED_CACHE_MAX = 2048
+_FIXED_CACHE_EVICTIONS = 0
 
 
 def clear_fixed_latency_cache() -> None:
+    global _FIXED_CACHE_EVICTIONS
     _FIXED_CACHE.clear()
+    _FIXED_CACHE_EVICTIONS = 0
 
 
-def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning) -> Optional[Tuple]:
+def fixed_latency_cache_info() -> Dict[str, int]:
+    """Observability for the fixed-op memo: current size, the size cap,
+    and how many entries the cap has evicted since the last clear."""
+    return {"size": len(_FIXED_CACHE), "max": _FIXED_CACHE_MAX,
+            "evictions": _FIXED_CACHE_EVICTIONS}
+
+
+def set_fixed_latency_cache_limit(n: int) -> None:
+    """Resize the fixed-op memo bound (evicting oldest entries if needed)."""
+    global _FIXED_CACHE_MAX
+    if n < 1:
+        raise ValueError(f"fixed-latency cache limit must be >= 1, got {n}")
+    _FIXED_CACHE_MAX = n
+    _fixed_cache_trim()
+
+
+def _fixed_cache_trim() -> None:
+    global _FIXED_CACHE_EVICTIONS
+    while len(_FIXED_CACHE) > _FIXED_CACHE_MAX:
+        _FIXED_CACHE.popitem(last=False)
+        _FIXED_CACHE_EVICTIONS += 1
+
+
+def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning,
+                     decode_kv_len) -> Optional[Tuple]:
     heads = tuple(sorted((s.block_path, s.dim)
                          for s in sites if s.kind == "heads"))
-    key = (cfg, heads, wl, seq_len, use_tuning) \
-        + tuning_cache.target_fingerprint()
+    key = (cfg, heads, wl, seq_len, use_tuning, decode_kv_len) \
+        + tuning_cache.target_fingerprint() \
+        + oracle_mod.active_oracle().fingerprint()
     try:
         hash(key)
     except TypeError:        # non-hashable config variant: skip memoization
@@ -63,20 +98,34 @@ def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning) -> Optional[Tuple]:
 
 def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                   *, seq_len: int, use_tuning: bool = True,
-                  stats: Optional[tuner.TunerStats] = None, target=None
+                  stats: Optional[tuner.TunerStats] = None, target=None,
+                  oracle=None, decode_kv_len: Optional[int] = None
                   ) -> Tuple[float, Dict[str, float]]:
     """Latency of the non-prunable ops, per step, per shard. ``target``
-    evaluates under a registered target (the memo keys per target through
-    the fingerprint)."""
+    evaluates under a registered target, ``oracle`` under a scoring
+    backend (the memo keys per target and per oracle through the
+    fingerprints). ``decode_kv_len`` prices attention against a KV cache
+    of that many keys instead of ``seq_len`` — with ``seq_len=1`` this
+    turns the estimate into one *decode step* (per-token GEMMs + cached-
+    key attention) rather than a prefill."""
     if target is not None:
         with target.activate():
             return fixed_latency(cfg, sites, wl, seq_len=seq_len,
-                                 use_tuning=use_tuning, stats=stats)
+                                 use_tuning=use_tuning, stats=stats,
+                                 oracle=oracle, decode_kv_len=decode_kv_len)
+    if oracle is not None:
+        with oracle_mod.use_oracle(oracle):
+            return fixed_latency(cfg, sites, wl, seq_len=seq_len,
+                                 use_tuning=use_tuning, stats=stats,
+                                 decode_kv_len=decode_kv_len)
+    orc = oracle_mod.active_oracle()
     memo_key = None
     if tuner.engine() != "reference":
-        memo_key = _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning)
+        memo_key = _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning,
+                                    decode_kv_len)
         if memo_key is not None and memo_key in _FIXED_CACHE:
             total, bd = _FIXED_CACHE[memo_key]
+            _FIXED_CACHE.move_to_end(memo_key)
             return total, dict(bd)
     d = cfg.d_model
     m = wl.tokens_local
@@ -115,8 +164,10 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                 add("qo_proj", (qp.latency + op.latency) * mult)
             window = cfg.sliding_window if (kind == LOCAL_ATTN or
                                             cfg.sliding_window > 0) else 0
-            att = cost_model.attention_cost(
-                batch_local, seq_len, seq_len, max(1, hq // tp), hd,
+            att = orc.attention_cost(
+                batch_local, seq_len,
+                decode_kv_len if decode_kv_len is not None else seq_len,
+                max(1, hq // tp), hd,
                 window=window, dtype_bytes=wl.dtype_bytes)
             add("attention", att * mult)
         elif kind == RGLRU:
@@ -130,38 +181,47 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
             wb = max(1, w // nb)
             gate = tune(m, wb, wb, batch=nb, dtype_bytes=wl.dtype_bytes)
             add("rg_gates", 2 * gate.latency * mult)
-            add("rg_scan", cost_model.scan_cost(
+            add("rg_scan", orc.scan_cost(
                 batch_local, seq_len, w // tp, 4 * w // tp) * mult)
         elif kind == RWKV:
             for _ in range(5):
                 p = tune(m, d, max(1, d // tp), dtype_bytes=wl.dtype_bytes)
                 add("rwkv_proj", p.latency * mult)
             H = max(1, d // cfg.rwkv_head_dim)
-            add("rwkv_scan", cost_model.scan_cost(
+            add("rwkv_scan", orc.scan_cost(
                 batch_local, seq_len, d // tp,
                 4 * (H // tp + 1) * cfg.rwkv_head_dim ** 2) * mult)
 
     # embedding gather + unembed GEMM (vocab TP-sharded)
-    add("embed", m * d * wl.dtype_bytes / cost_model.HBM_BW)
+    add("embed", orc.hbm_bytes_cost(m * d * wl.dtype_bytes))
     un = tune(m, d, max(1, cfg.vocab_size // tp), dtype_bytes=wl.dtype_bytes)
     add("unembed", un.latency)
     total = sum(bd.values())
     if memo_key is not None:
         _FIXED_CACHE[memo_key] = (total, dict(bd))
+        _fixed_cache_trim()
     return total, bd
 
 
 def model_latency(cfg: ModelConfig, sites: Sequence[PruneSite],
                   table: TaskTable, *, seq_len: int, use_tuning: bool = True,
                   stats: Optional[tuner.TunerStats] = None,
-                  target=None) -> LatencyReport:
+                  target=None, oracle=None,
+                  decode_kv_len: Optional[int] = None) -> LatencyReport:
     if target is not None:
         with target.activate():
             return model_latency(cfg, sites, table, seq_len=seq_len,
-                                 use_tuning=use_tuning, stats=stats)
+                                 use_tuning=use_tuning, stats=stats,
+                                 oracle=oracle, decode_kv_len=decode_kv_len)
+    if oracle is not None:
+        with oracle_mod.use_oracle(oracle):
+            return model_latency(cfg, sites, table, seq_len=seq_len,
+                                 use_tuning=use_tuning, stats=stats,
+                                 decode_kv_len=decode_kv_len)
     task_s = table.total_task_latency()
     fixed_s, bd = fixed_latency(cfg, sites, table.wl, seq_len=seq_len,
-                                use_tuning=use_tuning, stats=stats)
+                                use_tuning=use_tuning, stats=stats,
+                                decode_kv_len=decode_kv_len)
     bd = dict(bd)
     for t in table.tasks:
         key = f"task_{t.sites[0].kind}"

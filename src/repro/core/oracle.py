@@ -1,0 +1,455 @@
+"""Pluggable latency oracles — the one answer site for "what does a
+program cost".
+
+CPrune's defining claim is that pruning decisions are informed by the
+*compiler's measured execution* of candidate programs (the paper builds
+and times every candidate with TVM on the target phone), not an analytic
+proxy. This module makes that a swappable backend behind one protocol:
+
+``analytic``
+    The closed-form roofline model in :mod:`repro.core.cost_model`,
+    evaluated over the whole candidate grid in one NumPy pass. The
+    default — bit-identical to the pre-oracle scoring path.
+
+``measured``
+    Compiles and times the repo's own Pallas kernels
+    (:mod:`repro.kernels.matmul` for plain GEMMs,
+    :mod:`repro.kernels.moe_gmm` for batched/expert GEMMs) —
+    ``pl.pallas_call`` in interpret mode on CPU, real compiled timings
+    when a TPU backend is present. Measurements use warmup runs, k
+    timed repeats with the extremes trimmed, and a median; large
+    problems are measured on a clipped grid (a few grid steps per dim)
+    and extrapolated by the exact grid-step ratio, the way per-block
+    timings extrapolate in a tiled kernel. The analytic model pre-ranks
+    the grid and only the shortlist is ever built and timed — the
+    classic cost-model-guided measurement loop of AutoTVM/Ansor.
+
+``replay``
+    Deterministic record/playback of a ``measured`` run's log as a JSON
+    artifact, so tests and CI exercise the measured code path — same
+    shortlisting, same winner selection — without hardware variance.
+
+Every consumer (tuner grid search, untuned programs, fixed-op latency,
+attention/scan estimates) asks the *active* oracle; the tuning caches key
+on :meth:`LatencyOracle.fingerprint`, so winners never cross backends.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+import time
+from typing import Dict, Iterator, Optional, Protocol, Tuple, Union, \
+    runtime_checkable
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.cost_model import Block
+
+_LOG_VERSION = 1
+
+
+@runtime_checkable
+class LatencyOracle(Protocol):
+    """What the tuner/latency stack needs to cost a program.
+
+    ``score_grid`` is the tuner's inner loop (whole candidate grid at
+    once); ``score_one`` costs a single fixed block config (untuned
+    programs); the remaining methods cost the non-GEMM fixed ops so the
+    latency model never reads :mod:`cost_model` directly.
+    """
+
+    name: str
+
+    def fingerprint(self) -> Tuple: ...
+
+    def score_grid(self, m: int, k: int, n: int,
+                   bm: np.ndarray, bk: np.ndarray, bn: np.ndarray, *,
+                   dtype_bytes: int, batch: int, epilogue_ops: int,
+                   hw: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+                   stats=None) -> np.ndarray: ...
+
+    def score_one(self, m: int, k: int, n: int, block: Block, *,
+                  dtype_bytes: int, batch: int, epilogue_ops: int,
+                  stats=None) -> float: ...
+
+    def attention_cost(self, batch: int, sq: int, sk: int, n_heads: int,
+                       head_dim: int, *, window: int = 0,
+                       dtype_bytes: int = 2) -> float: ...
+
+    def scan_cost(self, batch: int, seq: int, width: int,
+                  state_bytes: int) -> float: ...
+
+    def hbm_bytes_cost(self, n_bytes: int) -> float: ...
+
+
+class AnalyticOracle:
+    """The closed-form cost model of the *active* target constants —
+    exactly the pre-oracle scoring path (enforced bit-identical by
+    tests/test_oracle.py and the table1/fig8 golden checks)."""
+
+    name = "analytic"
+
+    def fingerprint(self) -> Tuple:
+        return ("analytic",)
+
+    def score_grid(self, m, k, n, bm, bk, bn, *, dtype_bytes, batch,
+                   epilogue_ops, hw, stats=None) -> np.ndarray:
+        return cost_model.matmul_cost_grid(
+            m, k, n, bm, bk, bn, dtype_bytes=dtype_bytes, batch=batch,
+            epilogue_ops=epilogue_ops, hw=hw)
+
+    def score_one(self, m, k, n, block, *, dtype_bytes, batch,
+                  epilogue_ops, stats=None) -> float:
+        return cost_model.matmul_cost(m, k, n, block,
+                                      dtype_bytes=dtype_bytes, batch=batch,
+                                      epilogue_ops=epilogue_ops)
+
+    def attention_cost(self, batch, sq, sk, n_heads, head_dim, *,
+                       window=0, dtype_bytes=2) -> float:
+        return cost_model.attention_cost(batch, sq, sk, n_heads, head_dim,
+                                         window=window,
+                                         dtype_bytes=dtype_bytes)
+
+    def scan_cost(self, batch, seq, width, state_bytes) -> float:
+        return cost_model.scan_cost(batch, seq, width, state_bytes)
+
+    def hbm_bytes_cost(self, n_bytes) -> float:
+        return n_bytes / cost_model.HBM_BW
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasurementConfig:
+    """How the measured backend times a candidate program."""
+
+    warmup: int = 1          # untimed runs before the clock starts
+    repeats: int = 5         # timed runs per candidate
+    trim: int = 1            # drop this many fastest+slowest before median
+    measure_top_k: int = 4   # analytic-shortlisted candidates actually built
+    max_grid_steps: int = 2  # grid steps measured per dim (then extrapolated)
+    interpret: Optional[bool] = None   # None = interpret unless on a TPU
+
+    def fingerprint(self) -> Tuple:
+        return (self.warmup, self.repeats, self.trim, self.measure_top_k,
+                self.max_grid_steps, self.interpret)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class MeasurementLog:
+    """A map from measurement key to seconds, with JSON persistence —
+    the replay artifact (and the measured backend's in-run memo)."""
+
+    def __init__(self, config: Optional[MeasurementConfig] = None):
+        self.config = config or MeasurementConfig()
+        self.entries: Dict[str, float] = {}
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @staticmethod
+    def gemm_key(m: int, k: int, n: int, batch: int, dtype_bytes: int,
+                 block: Block) -> str:
+        return (f"gemm:{m}:{k}:{n}:{batch}:{dtype_bytes}:"
+                f"{block.bm}:{block.bk}:{block.bn}")
+
+    def record(self, key: str, seconds: float) -> None:
+        self.entries[key] = float(seconds)
+
+    def lookup(self, key: str) -> Optional[float]:
+        return self.entries.get(key)
+
+    def digest(self) -> str:
+        blob = json.dumps([self.config.to_dict(),
+                           sorted(self.entries.items())], sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def save(self, path: str) -> int:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": _LOG_VERSION,
+                       "config": self.config.to_dict(),
+                       "entries": self.entries}, f, indent=1)
+        os.replace(tmp, path)
+        return len(self.entries)
+
+    @classmethod
+    def load(cls, path: str) -> "MeasurementLog":
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("version") != _LOG_VERSION:
+            raise ValueError(f"unsupported measurement log version "
+                             f"{blob.get('version')!r} in {path}")
+        log = cls(MeasurementConfig(**blob["config"]))
+        log.entries = {k: float(v) for k, v in blob["entries"].items()}
+        return log
+
+
+def _trimmed_median(times, trim: int) -> float:
+    ts = sorted(times)
+    if trim > 0 and len(ts) > 2 * trim:
+        ts = ts[trim:-trim]
+    mid = len(ts) // 2
+    if len(ts) % 2:
+        return ts[mid]
+    return 0.5 * (ts[mid - 1] + ts[mid])
+
+
+class _MeasurementOracle:
+    """Shared scoring logic for the measured and replay backends: analytic
+    pre-ranking shortlists the grid, then each shortlisted candidate's
+    kernel seconds come from ``_gemm_seconds`` (a real timer or the log).
+    Non-GEMM fixed ops (attention, scans, HBM gathers) and the fused
+    epilogue term stay analytic in both — deterministic, so a replay of a
+    measured run reproduces the exact same scores.
+    """
+
+    def __init__(self, config: MeasurementConfig):
+        self.config = config
+        self._analytic = AnalyticOracle()
+
+    # subclasses: obtain kernel seconds for one (possibly clipped) problem
+    def _gemm_seconds(self, m, k, n, batch, dtype_bytes, block,
+                      stats=None) -> float:
+        raise NotImplementedError
+
+    def _epilogue_s(self, m, n, batch, epilogue_ops, block) -> float:
+        if not epilogue_ops:
+            return 0.0
+        gm, gn = -(-m // block.bm), -(-n // block.bn)
+        bm_h = -(-block.bm // cost_model.SUBLANE) * cost_model.SUBLANE
+        bn_h = -(-block.bn // cost_model.LANE) * cost_model.LANE
+        return cost_model.epilogue_cost(batch, epilogue_ops, gm, bm_h,
+                                        gn, bn_h)
+
+    def score_grid(self, m, k, n, bm, bk, bn, *, dtype_bytes, batch,
+                   epilogue_ops, hw, stats=None) -> np.ndarray:
+        base = self._analytic.score_grid(
+            m, k, n, bm, bk, bn, dtype_bytes=dtype_bytes, batch=batch,
+            epilogue_ops=epilogue_ops, hw=hw)
+        k_top = max(1, self.config.measure_top_k)
+        shortlist = np.argsort(base, kind="stable")[:k_top]
+        out = np.full(base.shape, np.inf)
+        for i in shortlist:
+            blk = Block(int(bm[i]), int(bk[i]), int(bn[i]))
+            out[i] = self._gemm_seconds(m, k, n, batch, dtype_bytes, blk,
+                                        stats=stats) \
+                + self._epilogue_s(m, n, batch, epilogue_ops, blk)
+        return out
+
+    def score_one(self, m, k, n, block, *, dtype_bytes, batch,
+                  epilogue_ops, stats=None) -> float:
+        return self._gemm_seconds(m, k, n, batch, dtype_bytes, block,
+                                  stats=stats) \
+            + self._epilogue_s(m, n, batch, epilogue_ops, block)
+
+    # non-GEMM fixed ops: analytic in every backend (the repo has no
+    # measured path for gathers/scans yet; keeping them analytic keeps
+    # measured vs replay deterministic-by-construction)
+    def attention_cost(self, *a, **kw) -> float:
+        return self._analytic.attention_cost(*a, **kw)
+
+    def scan_cost(self, *a, **kw) -> float:
+        return self._analytic.scan_cost(*a, **kw)
+
+    def hbm_bytes_cost(self, n_bytes) -> float:
+        return self._analytic.hbm_bytes_cost(n_bytes)
+
+
+# distinguishes each *recording* MeasuredOracle in cache fingerprints:
+# a recorder must observe every tuning problem itself (warm ProgramCache /
+# fixed-latency entries from an earlier measured run would otherwise
+# starve the log and ship an incomplete replay artifact)
+_RECORDING_IDS = itertools.count(1)
+
+
+class MeasuredOracle(_MeasurementOracle):
+    """Times the repo's own Pallas kernels for every shortlisted candidate.
+
+    On this CPU container the kernels run with ``interpret=True`` (the
+    same code path a TPU compiles); on a TPU backend they are real
+    compiled timings. Pass ``record=MeasurementLog()`` to capture every
+    measurement for later :class:`ReplayOracle` playback — the log also
+    memoizes within the run, so a problem is never timed twice.
+    """
+
+    name = "measured"
+
+    def __init__(self, config: Optional[MeasurementConfig] = None, *,
+                 record: Optional[MeasurementLog] = None):
+        super().__init__(config or MeasurementConfig())
+        if record is not None and record.config != self.config:
+            raise ValueError("record log's MeasurementConfig does not match "
+                             "the oracle's")
+        self.record = record
+        self._recording_id = next(_RECORDING_IDS) if record is not None \
+            else None
+
+    def fingerprint(self) -> Tuple:
+        fp = ("measured",) + self.config.fingerprint()
+        if self._recording_id is not None:
+            # each recorder is its own cache identity — see _RECORDING_IDS
+            fp += ("recording", self._recording_id)
+        return fp
+
+    def _interpret(self) -> bool:
+        if self.config.interpret is not None:
+            return self.config.interpret
+        import jax
+        return jax.default_backend() != "tpu"
+
+    def _clipped(self, m, k, n, batch, block):
+        """Measured problem dims: at most ``max_grid_steps`` grid steps per
+        dim (and 2 experts), plus the exact step-count ratio to scale the
+        measured time back up — per-block extrapolation, not a model."""
+        cap = max(1, self.config.max_grid_steps)
+        gm, gk, gn = -(-m // block.bm), -(-k // block.bk), -(-n // block.bn)
+        gm_c, gk_c, gn_c = min(gm, cap), min(gk, cap), min(gn, cap)
+        b_c = min(batch, 2)
+        scale = (gm * gk * gn * batch) / (gm_c * gk_c * gn_c * b_c)
+        return (gm_c * block.bm, gk_c * block.bk, gn_c * block.bn, b_c,
+                scale)
+
+    def _time_kernel(self, m, k, n, batch, dtype_bytes, block) -> float:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import matmul as _mm
+        from repro.kernels import moe_gmm as _gmm
+
+        dtype = jnp.bfloat16 if dtype_bytes <= 2 else jnp.float32
+        interpret = self._interpret()
+        key = jax.random.PRNGKey(0)
+        if batch == 1:
+            a = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+            b = jnp.ones((k, n), dtype)
+            fn = jax.jit(lambda x, y: _mm.matmul(
+                x, y, block=block, interpret=interpret))
+        else:
+            a = jax.random.normal(key, (batch, m, k),
+                                  jnp.float32).astype(dtype)
+            b = jnp.ones((batch, k, n), dtype)
+            fn = jax.jit(lambda x, y: _gmm.moe_gmm(
+                x, y, block=block, interpret=interpret))
+        for _ in range(max(0, self.config.warmup)):
+            jax.block_until_ready(fn(a, b))
+        times = []
+        for _ in range(max(1, self.config.repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(a, b))
+            times.append(time.perf_counter() - t0)
+        return _trimmed_median(times, self.config.trim)
+
+    def _gemm_seconds(self, m, k, n, batch, dtype_bytes, block,
+                      stats=None) -> float:
+        key = MeasurementLog.gemm_key(m, k, n, batch, dtype_bytes, block)
+        if self.record is not None:
+            hit = self.record.lookup(key)
+            if hit is not None:
+                return hit
+        m_c, k_c, n_c, b_c, scale = self._clipped(m, k, n, batch, block)
+        t0 = time.perf_counter()
+        secs = self._time_kernel(m_c, k_c, n_c, b_c, dtype_bytes, block) \
+            * scale
+        if stats is not None:
+            stats.measured_programs += 1
+            stats.measure_wall_s += time.perf_counter() - t0
+        if self.record is not None:
+            self.record.record(key, secs)
+        return secs
+
+
+class ReplayOracle(_MeasurementOracle):
+    """Plays a recorded :class:`MeasurementLog` back deterministically:
+    same analytic shortlist (the log pins the MeasurementConfig), same
+    per-candidate seconds, hence the same winners and the same CPrune
+    history as the run that recorded it — without hardware variance."""
+
+    name = "replay"
+
+    def __init__(self, log: Union[MeasurementLog, str]):
+        if isinstance(log, str):
+            log = MeasurementLog.load(log)
+        super().__init__(log.config)
+        self.log = log
+        self._digest = log.digest()
+
+    @classmethod
+    def from_file(cls, path: str) -> "ReplayOracle":
+        return cls(path)
+
+    def fingerprint(self) -> Tuple:
+        return ("replay", self._digest) + self.config.fingerprint()
+
+    def _gemm_seconds(self, m, k, n, batch, dtype_bytes, block,
+                      stats=None) -> float:
+        key = MeasurementLog.gemm_key(m, k, n, batch, dtype_bytes, block)
+        secs = self.log.lookup(key)
+        if secs is None:
+            raise KeyError(
+                f"measurement {key!r} not in the replay log ({len(self.log)} "
+                f"entries) — the log was recorded for a different model/"
+                f"workload/target; re-record with MeasuredOracle(record=...) "
+                f"or session.calibrate()")
+        if stats is not None:
+            stats.replay_hits += 1
+        return secs
+
+
+# ---------------------------------------------------------------------------
+# Active-oracle plumbing (mirrors the target_activation contract)
+# ---------------------------------------------------------------------------
+
+ANALYTIC = AnalyticOracle()
+
+_ACTIVE: LatencyOracle = ANALYTIC
+
+
+def active_oracle() -> LatencyOracle:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_oracle(oracle: Union[str, LatencyOracle, None]
+               ) -> Iterator[LatencyOracle]:
+    """Install ``oracle`` as the process-wide scoring backend for the
+    body; restores the previous one on exit, exceptions included."""
+    global _ACTIVE
+    old, _ACTIVE = _ACTIVE, get_oracle(oracle)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = old
+
+
+def get_oracle(spec: Union[str, LatencyOracle, None], *,
+               log: Union[MeasurementLog, str, None] = None,
+               config: Optional[MeasurementConfig] = None) -> LatencyOracle:
+    """Resolve an oracle: ``None`` -> the active one, a name
+    (``analytic``/``measured``/``replay``) -> a backend instance, or any
+    :class:`LatencyOracle` implementation passed through. ``replay``
+    requires ``log`` (a :class:`MeasurementLog` or a JSON path)."""
+    if spec is None:
+        return _ACTIVE
+    if not isinstance(spec, str):
+        if isinstance(spec, LatencyOracle):
+            return spec
+        raise TypeError(f"oracle must be a backend name or implement the "
+                        f"LatencyOracle protocol, got {type(spec).__name__}")
+    if spec == "analytic":
+        return ANALYTIC
+    if spec == "measured":
+        return MeasuredOracle(config)
+    if spec == "replay":
+        if log is None:
+            raise ValueError("oracle='replay' needs log=<MeasurementLog or "
+                             "path> (record one with session.calibrate() or "
+                             "MeasuredOracle(record=MeasurementLog()))")
+        return ReplayOracle(log)
+    raise KeyError(f"unknown oracle {spec!r}; "
+                   f"backends: ['analytic', 'measured', 'replay']")

@@ -15,10 +15,8 @@ v5e shard of the production mesh.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core import cost_model
 from repro.core.program import Program
 from repro.models.model import GemmSpec, PruneSite
 
@@ -47,15 +45,17 @@ def site_signature(site: PruneSite, wl: Workload) -> Tuple:
 
 def local_gemm_dims(site: PruneSite, g: GemmSpec, wl: Workload
                     ) -> Tuple[int, int, int, int]:
-    """(m, k, n, batch) for one shard. The prunable dim is TP-sharded."""
+    """(m, k, n, batch) for one shard. The prunable dim is TP-sharded —
+    except the experts router, a tiny GEMM replicated on every TP shard
+    (matching ``prune_step``'s shard_multiple=1 for experts sites)."""
     m = max(1, int(wl.tokens_local * g.m_scale))
     k, n, b = g.k, g.n, g.batch
+    if site.kind == "experts":
+        return m, k, n, b
     if g.prunable == "n":
         n = max(1, n // wl.tp)
     elif g.prunable == "k":
         k = max(1, k // wl.tp)
-    if site.kind == "experts":     # router: tiny GEMM, replicated
-        pass
     return m, k, n, b
 
 

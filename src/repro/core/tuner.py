@@ -1,10 +1,13 @@
 """Per-task program tuner (the AutoTVM/Ansor role, §2.2 of the paper).
 
 For each task the tuner enumerates Pallas block configurations that fit the
-VMEM budget, scores them with the analytic v5e cost model, and records the
-fastest ``Program`` per constituent GEMM. The search is exhaustive over a
-hardware-aligned candidate grid (a few hundred candidates) — deterministic,
-so CPrune iterations are reproducible.
+VMEM budget, scores them with the *active latency oracle*
+(:mod:`repro.core.oracle` — the analytic cost model by default, measured
+Pallas-kernel timings or a deterministic replay log on request), and
+records the fastest ``Program`` per constituent GEMM. The search is
+exhaustive over a hardware-aligned candidate grid (a few hundred
+candidates) — deterministic under the analytic and replay backends, so
+CPrune iterations are reproducible.
 
 Two engines produce bit-identical programs:
 
@@ -29,7 +32,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import cost_model, tuning_cache
+from repro.core import cost_model, oracle as oracle_mod, tuning_cache
 from repro.core.cost_model import Block
 from repro.core.program import Program
 from repro.core.tasks import Task, TaskTable, Workload, local_gemm_dims
@@ -44,6 +47,10 @@ class TunerStats:
     cache_hits: int = 0        # program served from the ProgramCache
     cache_misses: int = 0      # full grid searches actually run
     tasks_reused: int = 0      # tasks carried over by incremental retuning
+    # per-backend oracle counters (all zero under the analytic backend)
+    measured_programs: int = 0  # Pallas kernels actually built and timed
+    measure_wall_s: float = 0.0  # wall-clock spent inside kernel timing
+    replay_hits: int = 0        # measurements served from a replay log
 
 
 # Lane-aligned candidate grid. bn/bk cover every multiple of 128 (not just
@@ -186,11 +193,13 @@ def tune_gemm(m: int, k: int, n: int, *, batch: int = 1,
               vmem: Optional[int] = None,
               stats: Optional[TunerStats] = None,
               cache: Optional[tuning_cache.ProgramCache] = None,
-              target=None) -> Program:
+              target=None, oracle=None) -> Program:
     """Exhaustive search for the fastest block config of one GEMM.
 
     ``target`` tunes under a :class:`~repro.api.targets.TargetSpec` (or any
     object with ``.activate()``) instead of the currently active constants;
+    ``oracle`` scores under a :class:`~repro.core.oracle.LatencyOracle`
+    (name or instance) instead of the currently active backend;
     ``vmem`` overrides the target VMEM budget for this search;
     ``cache`` overrides the process-wide ProgramCache.
     """
@@ -198,8 +207,18 @@ def tune_gemm(m: int, k: int, n: int, *, batch: int = 1,
         with target.activate():
             return tune_gemm(m, k, n, batch=batch, dtype_bytes=dtype_bytes,
                              epilogue_ops=epilogue_ops, vmem=vmem,
+                             stats=stats, cache=cache, oracle=oracle)
+    if oracle is not None:
+        with oracle_mod.use_oracle(oracle):
+            return tune_gemm(m, k, n, batch=batch, dtype_bytes=dtype_bytes,
+                             epilogue_ops=epilogue_ops, vmem=vmem,
                              stats=stats, cache=cache)
+    orc = oracle_mod.active_oracle()
     if _ENGINE == "reference":
+        if orc.name != "analytic":
+            raise RuntimeError(
+                f"engine_mode('reference') is the pre-oracle analytic "
+                f"baseline and cannot score with the {orc.name!r} backend")
         return _tune_gemm_reference(m, k, n, batch=batch,
                                     dtype_bytes=dtype_bytes,
                                     epilogue_ops=epilogue_ops, vmem=vmem,
@@ -215,10 +234,10 @@ def tune_gemm(m: int, k: int, n: int, *, batch: int = 1,
             stats.cache_hits += 1
         return prog
     bm, bk, bn, bm_h, bk_h, bn_h = _grid_with_hw(m, k, n, dtype_bytes, vmem)
-    lats = cost_model.matmul_cost_grid(m, k, n, bm, bk, bn,
-                                       dtype_bytes=dtype_bytes, batch=batch,
-                                       epilogue_ops=epilogue_ops,
-                                       hw=(bm_h, bk_h, bn_h))
+    lats = orc.score_grid(m, k, n, bm, bk, bn,
+                          dtype_bytes=dtype_bytes, batch=batch,
+                          epilogue_ops=epilogue_ops,
+                          hw=(bm_h, bk_h, bn_h), stats=stats)
     i = int(np.argmin(lats))
     if stats is not None:
         stats.candidates_evaluated += int(lats.size)
@@ -233,10 +252,12 @@ def tune_gemm(m: int, k: int, n: int, *, batch: int = 1,
 
 def untuned_gemm(m: int, k: int, n: int, *, batch: int = 1,
                  dtype_bytes: int = 2, epilogue_ops: int = 0) -> Program:
-    """The 'without tuning' program (paper Fig. 10 ablation)."""
+    """The 'without tuning' program (paper Fig. 10 ablation), costed by
+    the active oracle."""
     blk = cost_model.default_block(m, k, n)
-    lat = cost_model.matmul_cost(m, k, n, blk, dtype_bytes=dtype_bytes,
-                                 batch=batch, epilogue_ops=epilogue_ops)
+    lat = oracle_mod.active_oracle().score_one(
+        m, k, n, blk, dtype_bytes=dtype_bytes, batch=batch,
+        epilogue_ops=epilogue_ops)
     return Program(m=m, k=k, n=n, block=blk, latency=lat,
                    dtype_bytes=dtype_bytes, batch=batch)
 
@@ -250,10 +271,15 @@ def _epilogue_ops_for(op_kind: str) -> int:
 
 def tune_task(task: Task, wl: Workload, *, use_tuning: bool = True,
               vmem: Optional[int] = None,
-              stats: Optional[TunerStats] = None, target=None) -> None:
+              stats: Optional[TunerStats] = None, target=None,
+              oracle=None) -> None:
     """Tune every constituent GEMM of a task; records fastest programs."""
     if target is not None:
         with target.activate():
+            return tune_task(task, wl, use_tuning=use_tuning, vmem=vmem,
+                             stats=stats, oracle=oracle)
+    if oracle is not None:
+        with oracle_mod.use_oracle(oracle):
             return tune_task(task, wl, use_tuning=use_tuning, vmem=vmem,
                              stats=stats)
     site = task.sites[0]
@@ -276,27 +302,35 @@ def tune_task(task: Task, wl: Workload, *, use_tuning: bool = True,
 def tune_table(table: TaskTable, *, use_tuning: bool = True,
                vmem: Optional[int] = None,
                stats: Optional[TunerStats] = None,
-               prev: Optional[TaskTable] = None, target=None) -> TaskTable:
+               prev: Optional[TaskTable] = None, target=None,
+               oracle=None) -> TaskTable:
     """Tune all tasks; ``prev`` enables incremental retuning.
 
     When a previous table is given, any task whose signature is unchanged
     carries its tuned programs over verbatim — only the signatures the last
     prune step actually touched are re-searched (and those usually hit the
     ProgramCache for their untouched GEMMs anyway). Carry-over is refused
-    when ``prev`` was tuned under a different target fingerprint, VMEM
-    override, or workload: a signature match alone does not make its
-    programs valid (the signature ignores sharding and target constants).
+    when ``prev`` was tuned under a different target fingerprint, oracle
+    backend, VMEM override, or workload: a signature match alone does not
+    make its programs valid (the signature ignores sharding, target
+    constants, and the scoring backend).
 
     ``target`` activates a registered target for the whole table tune —
     the fingerprint is computed under it, so a prev table from another
-    target is refused and the ProgramCache keys per target.
+    target is refused and the ProgramCache keys per target. ``oracle``
+    likewise activates a scoring backend for the whole tune.
     """
     if target is not None:
         with target.activate():
             return tune_table(table, use_tuning=use_tuning, vmem=vmem,
+                              stats=stats, prev=prev, oracle=oracle)
+    if oracle is not None:
+        with oracle_mod.use_oracle(oracle):
+            return tune_table(table, use_tuning=use_tuning, vmem=vmem,
                               stats=stats, prev=prev)
     mode = "tuned" if use_tuning else "untuned"
-    fingerprint = tuning_cache.target_fingerprint() + (vmem,)
+    fingerprint = tuning_cache.target_fingerprint() + (vmem,) \
+        + oracle_mod.active_oracle().fingerprint()
     incremental = (prev is not None and _ENGINE != "reference"
                    and getattr(prev, "tuned_fingerprint", None) == fingerprint
                    and prev.wl == table.wl)
@@ -319,7 +353,7 @@ def build_tuned_table(sites: Sequence[PruneSite], wl: Workload, *,
                       vmem: Optional[int] = None,
                       stats: Optional[TunerStats] = None,
                       prev: Optional[TaskTable] = None,
-                      target=None) -> TaskTable:
+                      target=None, oracle=None) -> TaskTable:
     table = TaskTable(sites, wl)
     return tune_table(table, use_tuning=use_tuning, vmem=vmem, stats=stats,
-                      prev=prev, target=target)
+                      prev=prev, target=target, oracle=oracle)

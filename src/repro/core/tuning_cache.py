@@ -8,13 +8,17 @@ shapes change. The ``ProgramCache`` keys a tuned :class:`Program` by the
 full tuning problem:
 
     (m, k, n, batch, dtype_bytes, epilogue_ops, vmem_budget,
-     <target constants>)
+     <target constants>, <oracle fingerprint>)
 
 The target constants (peak FLOP/s, HBM bandwidth, VMEM budget, overheads)
 are read from :mod:`repro.core.cost_model` at lookup time, so swapping the
 emulated target (benchmarks/fig8_cross_target.py mutates those module
 globals) transparently invalidates every entry — a different target is a
-different key, never a stale hit.
+different key, never a stale hit. The oracle fingerprint (backend name +
+measurement config + replay-log digest) is read from the active
+:mod:`repro.core.oracle` backend the same way, so winners scored by the
+analytic model can never be served to a measured/replay tune and vice
+versa.
 
 An optional JSON persistence layer serializes the cache so separate runs
 (or separate configs in a sweep) reuse each other's tuning logs, the way
@@ -28,12 +32,14 @@ import threading
 from typing import Dict, Optional, Tuple
 
 from repro.core import cost_model
+from repro.core import oracle as oracle_mod
 from repro.core.cost_model import Block
 from repro.core.program import Program
 
 Key = Tuple
 
-_FORMAT_VERSION = 1
+# v2: keys grew the active-oracle fingerprint; v1 logs no longer load
+_FORMAT_VERSION = 2
 
 
 def target_fingerprint() -> Tuple:
@@ -52,10 +58,12 @@ def target_fingerprint() -> Tuple:
 def program_key(m: int, k: int, n: int, *, batch: int = 1,
                 dtype_bytes: int = 2, epilogue_ops: int = 0,
                 vmem: Optional[int] = None) -> Key:
-    """Cache key for one GEMM tuning problem under the current target."""
+    """Cache key for one GEMM tuning problem under the current target and
+    the active scoring backend."""
     eff_vmem = cost_model.VMEM_BYTES if vmem is None else vmem
     return (m, k, n, batch, dtype_bytes, epilogue_ops,
-            eff_vmem) + target_fingerprint()
+            eff_vmem) + target_fingerprint() \
+        + oracle_mod.active_oracle().fingerprint()
 
 
 class ProgramCache:

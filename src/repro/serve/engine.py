@@ -44,7 +44,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_seq: int = 512, seed: int = 0):
+                 max_seq: int = 512, seed: int = 0,
+                 predicted_step_s: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.model = Model(cfg)
@@ -53,6 +54,13 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self.queue: deque[Request] = deque()
         self.done: List[Request] = []
+        # the latency oracle's prediction for one decode step of this
+        # model at max_batch (PruningSession.serve computes it); run()
+        # reports it against the measured wall-clock per step so the
+        # oracle's error on the *real* executing model is observable
+        self.predicted_step_s = predicted_step_s
+        self._decode_steps = 0
+        self._decode_wall_s = 0.0
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
         self._decode = jax.jit(self.model.decode_step)
@@ -95,7 +103,11 @@ class ServeEngine:
         for i, r in enumerate(wave):
             r.output.append(int(cur[i, 0]))
         for step in range(1, max_new):
+            t0 = time.perf_counter()
             logits, caches = self._decode(self.params, cur, caches)
+            jax.block_until_ready(logits)
+            self._decode_wall_s += time.perf_counter() - t0
+            self._decode_steps += 1
             cur = self._sample(logits, wave)
             now = time.time()
             for i, r in enumerate(wave):
@@ -126,7 +138,7 @@ class ServeEngine:
             waves += 1
         wall = time.time() - t0
         total_tokens = sum(len(r.output) for r in self.done)
-        return {
+        stats = {
             "requests": len(self.done),
             "waves": waves,
             "total_new_tokens": total_tokens,
@@ -135,4 +147,15 @@ class ServeEngine:
             "mean_ttft_s": float(np.mean(
                 [r.t_first_token - r.t_submit for r in self.done]))
             if self.done else 0.0,
+            # predicted-vs-measured step latency: how wrong the latency
+            # oracle is on the model that is actually executing
+            "decode_steps": self._decode_steps,
+            "measured_step_s": self._decode_wall_s / self._decode_steps
+            if self._decode_steps else 0.0,
+            "predicted_step_s": self.predicted_step_s,
         }
+        if self.predicted_step_s is not None and self._decode_steps:
+            meas = stats["measured_step_s"]
+            stats["oracle_rel_error"] = \
+                (self.predicted_step_s - meas) / max(meas, 1e-12)
+        return stats

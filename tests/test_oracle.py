@@ -1,0 +1,309 @@
+"""Latency-oracle backends: analytic bit-identity, measured execution of
+the repo's Pallas kernels, deterministic replay, and cross-backend cache
+isolation."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import (CPrune, CPruneConfig, TrainHooks, Workload,
+                        clear_tuning_caches)
+from repro.core import latency, oracle, tuner, tuning_cache
+from repro.core.cost_model import Block
+from repro.core.oracle import (AnalyticOracle, MeasuredOracle,
+                               MeasurementConfig, MeasurementLog,
+                               ReplayOracle)
+from repro.core.tasks import local_gemm_dims
+from repro.models.model import init_params, prune_sites
+
+# fast measurement settings for CPU interpret mode: no warmup, two
+# repeats, single-candidate shortlist, one measured grid step per dim
+FAST = MeasurementConfig(warmup=0, repeats=2, trim=0, measure_top_k=1,
+                         max_grid_steps=1)
+
+
+def _tiny_setup(**over):
+    base = dict(n_layers=2, d_model=64, d_ff=128, n_heads=4, n_kv_heads=2,
+                head_dim=16, vocab_size=128)
+    base.update(over)
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(**base)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params, prune_sites(cfg)
+
+
+def _fake_hooks():
+    return TrainHooks(short_term_train=lambda p, s: p,
+                      eval_acc=lambda p, s: 0.9)
+
+
+# ---------------------------------------------------------------------------
+# Analytic backend: bit-identical to the pre-oracle scoring path
+# ---------------------------------------------------------------------------
+
+def test_analytic_oracle_is_default_and_bit_identical():
+    assert oracle.active_oracle().name == "analytic"
+    p_default = tuner.tune_gemm(512, 256, 1024)
+    p_explicit = tuner.tune_gemm(512, 256, 1024, oracle=AnalyticOracle())
+    with tuner.engine_mode("reference"):
+        p_reference = tuner.tune_gemm(512, 256, 1024)
+    assert p_default == p_explicit == p_reference
+
+
+def test_analytic_cprune_history_identical_with_and_without_oracle_arg():
+    cfg, params, sites = _tiny_setup()
+    wl = Workload(tokens_global=2048)
+    pcfg = CPruneConfig(a_g=0.1, alpha=0.5, beta=0.99, max_iterations=3,
+                        seq_len=32)
+    clear_tuning_caches()
+    res_plain = CPrune(cfg, sites, wl, _fake_hooks(), pcfg).run(params)
+    clear_tuning_caches()
+    res_oracle = CPrune(cfg, prune_sites(cfg), wl, _fake_hooks(), pcfg,
+                        oracle=AnalyticOracle()).run(params)
+    digest = lambda r: [(h.task_kind, h.prune_units, h.dim_before,
+                         h.dim_after, h.l_m, h.accepted) for h in r.history]
+    assert digest(res_plain) == digest(res_oracle)
+
+
+def test_reference_engine_rejects_non_analytic_oracle():
+    with tuner.engine_mode("reference"):
+        with pytest.raises(RuntimeError, match="analytic"):
+            tuner.tune_gemm(64, 128, 128, oracle=MeasuredOracle(FAST))
+
+
+# ---------------------------------------------------------------------------
+# Measured backend: times the repo's Pallas kernels
+# ---------------------------------------------------------------------------
+
+def test_measured_oracle_times_kernels_and_records():
+    log = MeasurementLog(FAST)
+    stats = tuner.TunerStats()
+    prog = tuner.tune_gemm(64, 128, 128, stats=stats,
+                           oracle=MeasuredOracle(FAST, record=log),
+                           cache=tuning_cache.ProgramCache())
+    assert prog.latency > 0.0
+    assert stats.measured_programs == FAST.measure_top_k
+    assert stats.measure_wall_s > 0.0
+    assert len(log) == FAST.measure_top_k
+
+
+def test_measured_oracle_times_grouped_gemm_for_batched_problems():
+    log = MeasurementLog(FAST)
+    prog = tuner.tune_gemm(32, 128, 128, batch=4,
+                           oracle=MeasuredOracle(FAST, record=log),
+                           cache=tuning_cache.ProgramCache())
+    assert prog.latency > 0.0
+    (key,) = log.entries
+    assert key.startswith("gemm:32:128:128:4:")
+
+
+def test_measurement_extrapolation_scales_by_grid_steps():
+    mo = MeasuredOracle(FAST)
+    m, k, n, b, scale = mo._clipped(512, 256, 256, 1, Block(128, 128, 128))
+    assert (m, k, n, b) == (128, 128, 128, 1)
+    assert scale == 4 * 2 * 2
+
+
+# ---------------------------------------------------------------------------
+# Replay backend: deterministic playback
+# ---------------------------------------------------------------------------
+
+def test_replay_log_round_trips_exactly(tmp_path):
+    log = MeasurementLog(FAST)
+    log.record(MeasurementLog.gemm_key(64, 128, 128, 1, 2, Block(64, 128, 128)),
+               1.25e-4)
+    log.record(MeasurementLog.gemm_key(64, 128, 256, 1, 2, Block(8, 128, 128)),
+               3.5e-6)
+    path = str(tmp_path / "replay.json")
+    log.save(path)
+    loaded = MeasurementLog.load(path)
+    assert loaded.entries == log.entries
+    assert loaded.config == log.config
+    assert loaded.digest() == log.digest()
+
+
+def test_replay_reproduces_measured_program_and_rejects_unknown(tmp_path):
+    log = MeasurementLog(FAST)
+    measured = tuner.tune_gemm(64, 128, 128,
+                               oracle=MeasuredOracle(FAST, record=log),
+                               cache=tuning_cache.ProgramCache())
+    path = str(tmp_path / "replay.json")
+    log.save(path)
+    replayed = tuner.tune_gemm(64, 128, 128,
+                               oracle=ReplayOracle.from_file(path),
+                               cache=tuning_cache.ProgramCache())
+    assert replayed == measured
+    with pytest.raises(KeyError, match="replay log"):
+        tuner.tune_gemm(64, 128, 384, oracle=ReplayOracle(log),
+                        cache=tuning_cache.ProgramCache())
+
+
+def test_measured_cprune_history_replays_identically(tmp_path):
+    """The acceptance loop: a measured-execution CPrune run records a log,
+    and a replay run over that log accepts the exact same history."""
+    cfg, params, sites = _tiny_setup()
+    wl = Workload(tokens_global=256)
+    pcfg = CPruneConfig(a_g=0.1, alpha=0.5, beta=0.999, max_iterations=2,
+                        seq_len=32)
+    log = MeasurementLog(FAST)
+    clear_tuning_caches()
+    res_m = CPrune(cfg, sites, wl, _fake_hooks(), pcfg,
+                   oracle=MeasuredOracle(FAST, record=log)).run(params)
+    assert len(log) > 0 and res_m.tuner_stats.measured_programs > 0
+    path = str(tmp_path / "replay.json")
+    log.save(path)
+    clear_tuning_caches()
+    res_r = CPrune(cfg, prune_sites(cfg), wl, _fake_hooks(), pcfg,
+                   oracle=ReplayOracle.from_file(path)).run(params)
+    assert res_r.tuner_stats.replay_hits > 0
+    assert res_r.tuner_stats.measured_programs == 0
+    digest = lambda r: [(h.task_kind, h.prune_units, h.dim_before,
+                         h.dim_after, h.l_m, h.accepted) for h in r.history]
+    assert digest(res_r) == digest(res_m)
+    assert res_r.final_latency.total_s == res_m.final_latency.total_s
+    clear_tuning_caches()
+
+
+# ---------------------------------------------------------------------------
+# Cache isolation: winners never cross backends
+# ---------------------------------------------------------------------------
+
+def test_program_keys_and_table_fingerprints_differ_per_backend():
+    k_analytic = tuning_cache.program_key(64, 128, 128)
+    with oracle.use_oracle(MeasuredOracle(FAST)):
+        k_measured = tuning_cache.program_key(64, 128, 128)
+    log = MeasurementLog(FAST)
+    with oracle.use_oracle(ReplayOracle(log)):
+        k_replay = tuning_cache.program_key(64, 128, 128)
+    assert len({k_analytic, k_measured, k_replay}) == 3
+    # measurement config is part of the identity too
+    other = dataclasses.replace(FAST, repeats=FAST.repeats + 1)
+    with oracle.use_oracle(MeasuredOracle(other)):
+        assert tuning_cache.program_key(64, 128, 128) != k_measured
+
+
+def test_incremental_retune_refuses_cross_oracle_prev():
+    cfg, params, sites = _tiny_setup()
+    wl = Workload(tokens_global=2048)
+    table = tuner.build_tuned_table(sites, wl)
+    log = MeasurementLog(FAST)
+    stats = tuner.TunerStats()
+    tuner.build_tuned_table(sites, wl, stats=stats, prev=table,
+                            oracle=MeasuredOracle(FAST, record=log))
+    assert stats.tasks_reused == 0
+
+
+# ---------------------------------------------------------------------------
+# Session front door
+# ---------------------------------------------------------------------------
+
+def test_session_oracle_defaults_and_overrides():
+    from repro.api import PruningSession, get_target
+    cfg, params, sites = _tiny_setup()
+    s = PruningSession(cfg, params=params)
+    assert s.oracle.name == "analytic"
+    assert get_target("tpu_v5e").default_oracle == "analytic"
+    s2 = PruningSession(cfg, params=params, oracle="measured")
+    assert isinstance(s2.oracle, MeasuredOracle)
+    with pytest.raises(ValueError, match="replay"):
+        PruningSession(cfg, params=params, oracle="replay")
+    with pytest.raises(KeyError, match="unknown oracle"):
+        PruningSession(cfg, params=params, oracle="psychic")
+
+
+def test_recording_oracle_not_starved_by_warm_measured_caches(tmp_path):
+    """A recorder is its own cache identity: warm ProgramCache/memo entries
+    from an earlier (non-recording) measured run must not starve the log,
+    or calibrate() would ship an incomplete replay artifact."""
+    from repro.api import PruningSession
+    assert MeasuredOracle(FAST, record=MeasurementLog(FAST)).fingerprint() \
+        != MeasuredOracle(FAST, record=MeasurementLog(FAST)).fingerprint()
+    assert MeasuredOracle(FAST).fingerprint() \
+        == MeasuredOracle(FAST).fingerprint()
+    cfg, params, sites = _tiny_setup()
+    s = PruningSession(cfg, params=params, oracle=MeasuredOracle(FAST),
+                       workload=Workload(tokens_global=256),
+                       pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    s.latency_report()                     # warms the caches, no recording
+    log = s.calibrate(str(tmp_path / "calib.json"), config=FAST)
+    assert len(log) > 0
+    # the artifact really replays the whole report
+    assert s.latency_report(oracle=ReplayOracle(log)).total_s > 0.0
+    clear_tuning_caches()
+
+
+def test_serve_predict_step_falls_back_when_replay_log_cannot_score():
+    from repro.api import PruningSession
+    cfg, params, sites = _tiny_setup()
+    empty = ReplayOracle(MeasurementLog(FAST))
+    s = PruningSession(cfg, params=params, oracle=empty,
+                       workload=Workload(tokens_global=256),
+                       pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    engine = s.serve(max_batch=2, max_seq=16)   # must not raise KeyError
+    assert engine.predicted_step_s is None
+    clear_tuning_caches()
+
+
+def test_session_calibrate_records_replayable_log(tmp_path):
+    from repro.api import PruningSession
+    cfg, params, sites = _tiny_setup()
+    wl = Workload(tokens_global=256)
+    s = PruningSession(cfg, params=params, workload=wl,
+                       pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    path = str(tmp_path / "calib.json")
+    log = s.calibrate(path, config=FAST)
+    assert len(log) > 0
+    # the replayed latency report equals the measured one exactly
+    clear_tuning_caches()
+    rep_replay = s.latency_report(oracle=ReplayOracle.from_file(path))
+    clear_tuning_caches()
+    rep_measured = s.latency_report(
+        oracle=MeasuredOracle(FAST, record=MeasurementLog.load(path)))
+    assert rep_replay.total_s == rep_measured.total_s
+    clear_tuning_caches()
+
+
+# ---------------------------------------------------------------------------
+# Satellites: router replication + bounded fixed-latency memo
+# ---------------------------------------------------------------------------
+
+def test_router_gemm_replicated_across_tp_shards():
+    """The experts-site router GEMM runs replicated on every TP shard
+    (prune_step already treats experts as unsharded); the moe_ffn expert
+    GEMMs are TP-sharded as usual."""
+    cfg, params, sites = _tiny_setup(d_ff=0, n_experts=8, top_k=2,
+                                     moe_d_ff=128)
+    experts = next(s for s in sites if s.kind == "experts")
+    moe = next(s for s in sites if s.kind == "moe_ffn")
+    wl1, wl4 = Workload(tokens_global=1024), Workload(tokens_global=1024,
+                                                     tp=4)
+    router = experts.gemms[0]
+    assert local_gemm_dims(experts, router, wl4) \
+        == local_gemm_dims(experts, router, wl1)
+    assert local_gemm_dims(experts, router, wl4)[2] == cfg.n_experts
+    up = next(g for g in moe.gemms if g.prunable == "n")
+    assert local_gemm_dims(moe, up, wl4)[2] \
+        == local_gemm_dims(moe, up, wl1)[2] // 4
+
+
+def test_fixed_latency_cache_is_bounded_with_eviction_counter():
+    latency.clear_fixed_latency_cache()
+    old = latency.fixed_latency_cache_info()["max"]
+    try:
+        latency.set_fixed_latency_cache_limit(2)
+        cfg, params, sites = _tiny_setup()
+        for seq in (16, 32, 64, 128):
+            latency.fixed_latency(cfg, sites, Workload(tokens_global=512),
+                                  seq_len=seq)
+        info = latency.fixed_latency_cache_info()
+        assert info["size"] <= 2
+        assert info["evictions"] == 2
+        # clear_tuning_caches resets the memo and its counter
+        from repro.core import clear_tuning_caches
+        clear_tuning_caches()
+        info = latency.fixed_latency_cache_info()
+        assert info["size"] == 0 and info["evictions"] == 0
+    finally:
+        latency.set_fixed_latency_cache_limit(old)
+    with pytest.raises(ValueError):
+        latency.set_fixed_latency_cache_limit(0)

@@ -50,6 +50,28 @@ def test_engine_greedy_matches_reference(setup):
     assert got == expect
 
 
+def test_engine_reports_predicted_vs_measured_step(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=16,
+                      predicted_step_s=1.5e-3)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=4))
+    stats = eng.run()
+    assert stats["decode_steps"] == 3          # 4 tokens = 1 sampled + 3 steps
+    assert stats["measured_step_s"] > 0.0
+    assert stats["predicted_step_s"] == 1.5e-3
+    expect = (1.5e-3 - stats["measured_step_s"]) / stats["measured_step_s"]
+    assert stats["oracle_rel_error"] == pytest.approx(expect)
+    # without a prediction the error key is absent, not None/garbage
+    eng2 = ServeEngine(cfg, params, max_batch=2, max_seq=16)
+    eng2.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=2))
+    stats2 = eng2.run()
+    assert stats2["predicted_step_s"] is None
+    assert "oracle_rel_error" not in stats2
+
+
 def test_engine_batches_multiple_requests(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)
