@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      to the seed model, edge yields a different history
   measured_smoke     measured-execution oracle: CPrune scored by timing
                      the Pallas kernels, replay-log determinism check
+  artifact_smoke     deployment artifact: export in this process, serve
+                     from a second interpreter, fingerprints must match
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -22,11 +24,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig1_correlation, fig6_iterations,
-                            fig8_cross_target, fig11_search_cost,
-                            kernels_bench, measured_smoke, roofline,
-                            session_targets, table1_methods,
-                            table2_ablations, tuner_bench)
+    from benchmarks import (artifact_smoke, fig1_correlation,
+                            fig6_iterations, fig8_cross_target,
+                            fig11_search_cost, kernels_bench,
+                            measured_smoke, roofline, session_targets,
+                            table1_methods, table2_ablations, tuner_bench)
     from benchmarks import common
 
     print("name,us_per_call,derived")
@@ -38,6 +40,7 @@ def main() -> None:
         ("fig8_cross_target", fig8_cross_target.run),
         ("session_targets", session_targets.run),
         ("measured_smoke", measured_smoke.run),
+        ("artifact_smoke", artifact_smoke.run),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

@@ -1,0 +1,120 @@
+"""Constraint-driven deployment: "accuracy floor, latency budget" as the
+front door, per the paper's framing ("support an application with a
+required target accuracy").
+
+    PYTHONPATH=src python examples/plan_deploy.py [--fast]
+
+`plan()` sweeps strategy x target (the sweep rides the shared tuning
+caches, so extra arms are cheap), prints the Pareto frontier, exports the
+best constraint-satisfying candidate as a deployment artifact, and then
+serves that artifact from disk — the prune/tune machinery is out of the
+loop by the time requests arrive.
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.api import CPruneConfig, TrainHooks, Workload, plan
+from repro.configs import get_reduced_config
+from repro.data.pipeline import DataPipeline
+from repro.models.model import Model, init_params
+from repro.optim.optimizers import sgd_init, sgd_update
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced iteration counts for smoke runs")
+    ap.add_argument("--accuracy-floor", type=float, default=None,
+                    help="required eval accuracy (default: 90%% of the "
+                         "pretrained accuracy)")
+    args = ap.parse_args()
+
+    # 1. model + data + real training hooks (as in quickstart)
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=128, d_ff=1024, n_heads=8, n_kv_heads=2,
+        head_dim=16, vocab_size=256)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pipe = DataPipeline(cfg, global_batch=8, seq_len=64)
+    val = pipe.batch(10 ** 6)
+    jloss = jax.jit(model.loss_fn)
+
+    @jax.jit
+    def jstep(p, o, b):
+        (_, m), g = jax.value_and_grad(
+            lambda pp: model.loss_fn(pp, b), has_aux=True)(p)
+        return (*sgd_update(p, g, o, lr=0.05, momentum=0.9), m)
+
+    state = {"i": 0}
+
+    def train(p, _sites, n):
+        o = sgd_init(p)
+        for _ in range(n):
+            state["i"] += 1
+            p, o, _ = jstep(p, o, pipe.batch(state["i"]))
+        return p
+
+    def eval_acc(p, _sites):
+        _, m = jloss(p, val)
+        return float(m["acc"])
+
+    print("pretraining on the synthetic Markov task ...")
+    params = train(params, None, 16 if args.fast else 48)
+    acc0 = eval_acc(params, None)
+    floor = args.accuracy_floor if args.accuracy_floor is not None \
+        else round(0.9 * acc0, 3)
+    print(f"  pretrained accuracy: {acc0:.3f} -> accuracy floor {floor}")
+
+    # 2. the constraint front door: sweep strategies across two targets
+    pl = plan(
+        cfg, accuracy_floor=floor,
+        targets=["tpu_v5e", "edge"],
+        strategies=["cprune", "uniform_l1"],
+        workload=Workload(tokens_global=65536),
+        hooks=TrainHooks(
+            short_term_train=lambda p, s: train(p, s, 2 if args.fast else 4),
+            eval_acc=eval_acc),
+        pcfg=CPruneConfig(a_g=floor, alpha=0.7 if args.fast else 0.9,
+                          beta=0.98, max_iterations=2 if args.fast else 6,
+                          seq_len=256),
+        params=params,
+        strategy_kwargs={"uniform_l1": {"ratio": 0.25}},
+        verbose=True)
+
+    print("\nPareto frontier (accuracy up, latency down):")
+    for c in pl.frontier:
+        print(f"  {c.describe()}")
+    best = pl.best
+    if best is None:
+        print("no candidate satisfies the constraints — relax the floor")
+        return
+    print(f"\nbest: {best.describe()}")
+
+    # 3. export the winner, then serve it from disk alone
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "artifact")
+        art = pl.export(path, max_batch=4, max_seq=48)
+        print(f"exported {path}: tuned_digest={art.tuned_digest}, "
+              f"planned latency {art.metadata['latency_total_s']*1e3:.3f} ms")
+        engine = ServeEngine.from_artifact(path)
+        rng = np.random.default_rng(0)
+        for i in range(4):
+            engine.submit(Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                max_new_tokens=8))
+        stats = engine.run()
+        print(f"served {stats['requests']} reqs: "
+              f"{stats['tokens_per_s']:.1f} tok/s, "
+              f"TTFT p50/p95 {stats['p50_ttft_s']*1e3:.0f}/"
+              f"{stats['p95_ttft_s']*1e3:.0f} ms, "
+              f"step p95 {stats['p95_step_s']*1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,19 @@
 """Serving demo: batched decode of a pruned vs unpruned model through the
-continuous-batching engine (prefill + per-token decode with KV caches),
-wired through `PruningSession.prune -> serve`.
+continuous-batching engine, wired through the deployment-artifact flow —
+prune once, `session.export()` the artifact, then serve it from disk via
+`ServeEngine.from_artifact` exactly as a fresh serving process would
+(the session is not needed on the serve path).
 
     PYTHONPATH=src python examples/serve_pruned.py
 """
+import os
+import tempfile
+
 import numpy as np
 
 from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
 from repro.configs import get_reduced_config
-from repro.serve.engine import Request
+from repro.serve.engine import Request, ServeEngine
 
 
 def main():
@@ -18,9 +23,10 @@ def main():
 
     # one session: 50% structured L1 prune of the FFN sites only
     # (prunable_kinds keeps the demo's "50%-FFN-pruned" comparison honest),
-    # then serve both models. This demo measures *serving throughput*, not
-    # model quality, so the hooks deliberately skip training — explicit
-    # stubs rather than the defaults, which would warn about it.
+    # then export the pruned model as a deployment artifact. This demo
+    # measures *serving throughput*, not model quality, so the hooks
+    # deliberately skip training — explicit stubs rather than the
+    # defaults, which would warn about it.
     session = PruningSession(
         cfg, workload=Workload(tokens_global=65536),
         hooks=TrainHooks(short_term_train=lambda p, s: p,
@@ -41,7 +47,9 @@ def main():
         stats = engine.run()
         print(f"{label:10s} {stats['requests']} reqs in "
               f"{stats['wall_s']:.2f}s -> {stats['tokens_per_s']:.1f} tok/s "
-              f"(TTFT {stats['mean_ttft_s']*1e3:.0f} ms)")
+              f"(TTFT p50 {stats['p50_ttft_s']*1e3:.0f} ms / "
+              f"p95 {stats['p95_ttft_s']*1e3:.0f} ms, "
+              f"step p95 {stats['p95_step_s']*1e3:.1f} ms)")
         if stats.get("oracle_rel_error") is not None:
             # the latency oracle predicts a v5e shard; this CPU run makes
             # the prediction error observable (the gap the measured
@@ -52,10 +60,18 @@ def main():
                   f"(rel err {stats['oracle_rel_error']:+.1%})")
         return stats
 
-    print("serving dense vs 50%-FFN-pruned model (same engine):")
-    bench(session.serve(params=dense_params, max_batch=8, max_seq=64),
-          "dense")
-    bench(session.serve(max_batch=8, max_seq=64), "pruned")
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "artifact")
+        art = session.export(path, max_batch=8, max_seq=64)
+        print(f"exported artifact: target={art.target.name} "
+              f"strategy={art.metadata['strategy']} "
+              f"tuned_digest={art.tuned_digest}")
+        print("serving dense (in-session) vs 50%-FFN-pruned (artifact):")
+        bench(session.serve(params=dense_params, max_batch=8, max_seq=64),
+              "dense")
+        # the pruned model serves from the artifact directory alone — the
+        # same call a freshly restarted serving process would make
+        bench(ServeEngine.from_artifact(path), "pruned")
 
 
 if __name__ == "__main__":

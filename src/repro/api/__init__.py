@@ -24,9 +24,23 @@ and recorded with ``session.calibrate()``.
 Strategies (`strategies.py`): registry unifying Algorithm 1 and the
 baselines behind one call with a common :class:`PruneResult`.
 
+Artifacts (`artifact.py`): the pipeline's exit — ``session.export(path)``
+emits a versioned, self-contained :class:`DeploymentArtifact` (params,
+config, target constants, tuned program table, oracle/replay log,
+metadata, fingerprints) that ``DeploymentArtifact.load`` validates and
+``ServeEngine.from_artifact`` serves with no session and no warm caches.
+
+Planning (`planner.py`): the constraint front door —
+``plan(cfg, accuracy_floor=..., latency_budget_s=..., targets=[...],
+strategies=[...])`` sweeps strategy x target, returns a :class:`Plan`
+with the Pareto frontier and a constraint-satisfying ``best``, and
+``Plan.export(path)`` emits the winning artifact.
+
 The `repro.core` modules remain importable as before; this package only
 composes them.
 """
+from repro.api.artifact import ArtifactError, DeploymentArtifact
+from repro.api.planner import Plan, PlanCandidate, PlanError, plan
 from repro.api.session import PruningSession
 from repro.api.strategies import (PruneResult, get_strategy, list_strategies,
                                   register_strategy)
@@ -44,5 +58,6 @@ __all__ = [
     "list_targets", "register_target", "CPruneConfig", "TrainHooks",
     "Workload", "AnalyticOracle", "LatencyOracle", "MeasuredOracle",
     "MeasurementConfig", "MeasurementLog", "ReplayOracle", "get_oracle",
-    "use_oracle",
+    "use_oracle", "ArtifactError", "DeploymentArtifact", "Plan",
+    "PlanCandidate", "PlanError", "plan",
 ]

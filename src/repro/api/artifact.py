@@ -1,0 +1,461 @@
+"""Deployment artifacts — the pipeline's exit, decoupled from the session.
+
+CPrune's expensive half is the prune -> tune search; the cheap half is
+serving the result. NPAS and PatDNN both ship compiler-aware pruning as a
+*deployable artifact* pipeline, and this module does the same for the
+repro: :class:`DeploymentArtifact` is a versioned, self-contained
+directory holding everything the serve path needs —
+
+    artifact/
+      artifact.json     schema version, model config, TargetSpec fields,
+                        workload, site dims, the tuned program table, the
+                        oracle identity, fingerprints, and accuracy/latency
+                        metadata (the commit record — written last)
+      params.npz        the pruned parameter pytree, flattened
+      replay_log.json   the oracle calibration log (replay-backed
+                        artifacts only)
+
+Produced by :meth:`PruningSession.export`, loaded by
+:meth:`DeploymentArtifact.load`, served by
+:meth:`repro.serve.engine.ServeEngine.from_artifact` — no live
+``PruningSession`` (and no warm process caches) required. ``load``
+validates the schema version and every fingerprint: the params digest,
+the target constants, the oracle identity, and the tuned table's
+``tuned_fingerprint`` must all agree, so a table tuned for a different
+target or scored by a different oracle is refused with a clear
+:class:`ArtifactError` instead of silently served.
+
+A session whose oracle is a *recording* :class:`MeasuredOracle` exports a
+``replay`` artifact: the export measures everything the artifact needs,
+snapshots the log, and re-expresses the table under a deterministic
+:class:`ReplayOracle` — the artifact then replays identically on any
+machine, which is how measured tunings ship from the device that timed
+them to the fleet that serves them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.targets import TargetSpec
+from repro.configs.base import ModelConfig
+from repro.core import latency, tuner, tuning_cache
+from repro.core import oracle as oracle_mod
+from repro.core.oracle import (AnalyticOracle, LatencyOracle, MeasuredOracle,
+                               MeasurementConfig, MeasurementLog, ReplayOracle)
+from repro.core.tasks import TaskTable, Workload
+from repro.models.model import PruneSite, prune_sites
+
+SCHEMA_VERSION = 1
+_LOG_NAME = "replay_log.json"
+
+
+class ArtifactError(ValueError):
+    """A deployment artifact is missing, malformed, or fails validation."""
+
+
+# -- param pytree <-> flat npz (shared with the session checkpoint) ---------
+
+def _flatten_params(tree: Dict[str, Any], prefix: str = ""
+                    ) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flatten_params(v, path))
+        else:
+            out[path] = np.asarray(v)
+    return out
+
+
+def _unflatten_params(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    tree: Dict[str, Any] = {}
+    for path, arr in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def _params_digest(flat: Dict[str, np.ndarray]) -> str:
+    """Order-independent content hash of a flattened param tree."""
+    h = hashlib.sha256()
+    for k in sorted(flat):
+        a = np.ascontiguousarray(flat[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+# -- fingerprint (de)serialization ------------------------------------------
+# Fingerprints are nested tuples of ints/floats/strings/None. JSON turns
+# tuples into lists; these two helpers make the round trip exact (Python's
+# json writes floats via repr, which round-trips binary64 losslessly).
+
+def _listify(x):
+    if isinstance(x, (list, tuple)):
+        return [_listify(v) for v in x]
+    return x
+
+
+def _canon(x):
+    if isinstance(x, (list, tuple)):
+        return tuple(_canon(v) for v in x)
+    return x
+
+
+def _decode_step_s(cfg: ModelConfig, sites, wl: Workload,
+                   max_batch: int, max_seq: int) -> float:
+    """One decode step of this model at ``max_batch``: per-token GEMMs for
+    ``max_batch`` tokens plus attention against a ``max_seq``-deep KV
+    cache — under the *already active* target and oracle."""
+    wl_d = Workload(tokens_global=max_batch, dp=1, tp=1,
+                    dtype_bytes=wl.dtype_bytes)
+    table = tuner.build_tuned_table(sites, wl_d)
+    return latency.model_latency(cfg, sites, table, seq_len=1,
+                                 decode_kv_len=max_seq).total_s
+
+
+@dataclasses.dataclass
+class DeploymentArtifact:
+    """A self-contained, restartable serve package for one pruned model on
+    one target, scored by one oracle. See the module docstring for the
+    on-disk layout; in memory the tuned table is a live :class:`TaskTable`
+    and ``oracle`` is the reconstructed backend instance."""
+
+    cfg: ModelConfig
+    params: Dict[str, Any]
+    sites: List[PruneSite]
+    target: TargetSpec
+    oracle: LatencyOracle
+    workload: Workload
+    seq_len: int
+    table: Optional[TaskTable]
+    metadata: Dict[str, Any]
+    path: Optional[str] = None
+    schema_version: int = SCHEMA_VERSION
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def tuned_fingerprint(self) -> Optional[Tuple]:
+        """The tuned table's full identity: target constants + VMEM
+        override + oracle fingerprint, exactly as the tuner stamped it."""
+        return getattr(self.table, "tuned_fingerprint", None) \
+            if self.table is not None else None
+
+    @property
+    def tuned_digest(self) -> Optional[str]:
+        """Short stable hash of :attr:`tuned_fingerprint` — the value two
+        processes compare to prove they hold the same tuning."""
+        fp = self.tuned_fingerprint
+        if fp is None:
+            return None
+        blob = json.dumps(_listify(fp))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_session(cls, session, *, max_batch: int = 8, max_seq: int = 512,
+                     predict_step: bool = True,
+                     include_table: bool = True) -> "DeploymentArtifact":
+        """Snapshot a session's current (pruned) model as an artifact.
+
+        With ``include_table`` (the deployable form), the tuned program
+        table and the latency report are computed under the session's
+        target + oracle and embedded; a recording measured oracle is
+        first drained into a replay log so the artifact is deterministic.
+        ``include_table=False`` builds a lightweight serving snapshot
+        (params + decode-step prediction only) that cannot be saved —
+        it is what :meth:`PruningSession.serve` rides on.
+        """
+        target, orc = session.target, session.oracle
+        export_oracle = orc
+        if include_table:
+            if not dataclasses.is_dataclass(target):
+                raise ArtifactError(
+                    f"cannot export a session whose target is not a "
+                    f"TargetSpec-style dataclass: {type(target).__name__}")
+            if isinstance(orc, MeasuredOracle) and orc.record is not None:
+                # phase 1: measure (into the record) everything the
+                # artifact will need, then re-express deterministically
+                with target.activate(), oracle_mod.use_oracle(orc):
+                    t0 = tuner.build_tuned_table(session.sites,
+                                                 session.workload)
+                    latency.model_latency(session.cfg, session.sites, t0,
+                                          seq_len=session.pcfg.seq_len)
+                    if predict_step:
+                        _decode_step_s(session.cfg, session.sites,
+                                       session.workload, max_batch, max_seq)
+                export_oracle = ReplayOracle(orc.record.copy())
+            elif not isinstance(orc, (AnalyticOracle, MeasuredOracle,
+                                      ReplayOracle)):
+                raise ArtifactError(
+                    f"cannot export a session whose oracle "
+                    f"({type(orc).__name__}) is not one of the serializable "
+                    f"backends (analytic/measured/replay)")
+        table = report = None
+        predicted = None
+        with tuner.target_activation(target), \
+                oracle_mod.use_oracle(export_oracle):
+            if include_table:
+                table = tuner.build_tuned_table(session.sites,
+                                                session.workload)
+                report = latency.model_latency(session.cfg, session.sites,
+                                               table,
+                                               seq_len=session.pcfg.seq_len)
+            if predict_step:
+                try:
+                    predicted = _decode_step_s(session.cfg, session.sites,
+                                               session.workload, max_batch,
+                                               max_seq)
+                except KeyError:
+                    # a replay log recorded for another workload cannot
+                    # score the decode shapes; ship without a prediction
+                    predicted = None
+        metadata = {
+            "strategy": session.last_strategy,
+            "final_acc": session.final_acc,
+            "latency_total_s": report.total_s if report else None,
+            "latency_task_s": report.task_s if report else None,
+            "latency_fixed_s": report.fixed_s if report else None,
+            "fps": report.fps if report else None,
+            "predicted_step_s": predicted,
+            "serve_defaults": {"max_batch": max_batch, "max_seq": max_seq},
+        }
+        return cls(cfg=session.cfg, params=session.params,
+                   sites=list(session.sites), target=target,
+                   oracle=export_oracle, workload=session.workload,
+                   seq_len=session.pcfg.seq_len, table=table,
+                   metadata=metadata)
+
+    # -- persistence --------------------------------------------------------
+
+    def _oracle_blob(self) -> Tuple[Dict, Optional[MeasurementLog]]:
+        if isinstance(self.oracle, ReplayOracle):
+            return ({"backend": "replay",
+                     "config": self.oracle.config.to_dict(),
+                     "digest": self.oracle.log.digest(),
+                     "log": _LOG_NAME}, self.oracle.log)
+        if isinstance(self.oracle, MeasuredOracle):
+            if self.oracle.record is not None:
+                raise ArtifactError(
+                    "a live recording MeasuredOracle cannot be serialized; "
+                    "export via DeploymentArtifact.from_session, which "
+                    "snapshots the record into a replay artifact")
+            return ({"backend": "measured",
+                     "config": self.oracle.config.to_dict()}, None)
+        if isinstance(self.oracle, AnalyticOracle):
+            return ({"backend": "analytic"}, None)
+        raise ArtifactError(
+            f"cannot serialize oracle backend {type(self.oracle).__name__}")
+
+    def save(self, path: str) -> str:
+        """Write the artifact directory. Ordering is crash-safe: params
+        (and the bundled log) land first, ``artifact.json`` — the commit
+        record — last, each via tmp + atomic rename."""
+        if self.table is None:
+            raise ArtifactError(
+                "this artifact is an in-memory serving snapshot (no tuned "
+                "table); create deployable artifacts with "
+                "PruningSession.export(path)")
+        if not dataclasses.is_dataclass(self.target):
+            raise ArtifactError(
+                f"cannot save an artifact whose target is not a "
+                f"TargetSpec-style dataclass: {type(self.target).__name__}")
+        oracle_blob, log = self._oracle_blob()
+        os.makedirs(path, exist_ok=True)
+        flat = _flatten_params(self.params)
+        tmp = os.path.join(path, "params.npz.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, os.path.join(path, "params.npz"))
+        if log is not None:
+            log.save(os.path.join(path, _LOG_NAME))
+        blob = {
+            "schema_version": SCHEMA_VERSION,
+            "config": dataclasses.asdict(self.cfg),
+            "target_spec": dataclasses.asdict(self.target),
+            "workload": dataclasses.asdict(self.workload),
+            "seq_len": self.seq_len,
+            "site_dims": {s.site_id: s.dim for s in self.sites},
+            "oracle": oracle_blob,
+            "table": {
+                "tuned_fingerprint": _listify(self.table.tuned_fingerprint),
+                "tasks": [
+                    {"task_id": t.task_id,
+                     "signature": _listify(t.signature),
+                     "tuned_mode": t.tuned_mode,
+                     "programs": {name: tuning_cache.program_to_dict(p)
+                                  for name, p in t.programs.items()}}
+                    for t in self.table.tasks],
+            },
+            "fingerprints": {
+                "target": _listify(self.target.fingerprint()),
+                "oracle": _listify(self.oracle.fingerprint()),
+                "params": _params_digest(flat),
+            },
+            "metadata": self.metadata,
+        }
+        tmp = os.path.join(path, "artifact.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1)
+        os.replace(tmp, os.path.join(path, "artifact.json"))
+        self.path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "DeploymentArtifact":
+        """Read + validate an artifact directory. Refuses (with a clear
+        :class:`ArtifactError`) any artifact that is missing, malformed,
+        or whose schema version is unknown or whose params/target/oracle/
+        table fingerprints do not agree — a table tuned for a different
+        target or oracle is never served."""
+        try:
+            return cls._load(path)
+        except ArtifactError:
+            raise
+        except (OSError, json.JSONDecodeError, KeyError, IndexError,
+                TypeError, ValueError) as e:
+            raise ArtifactError(
+                f"malformed deployment artifact at {path!r}: "
+                f"{type(e).__name__}: {e}") from e
+
+    @classmethod
+    def _load(cls, path: str) -> "DeploymentArtifact":
+        meta_path = os.path.join(path, "artifact.json")
+        if not os.path.exists(meta_path):
+            raise ArtifactError(f"no deployment artifact at {path!r} "
+                                f"(missing artifact.json)")
+        with open(meta_path) as f:
+            blob = json.load(f)
+        ver = blob.get("schema_version")
+        if ver != SCHEMA_VERSION:
+            raise ArtifactError(
+                f"unsupported artifact schema version {ver!r} "
+                f"(this build reads version {SCHEMA_VERSION})")
+        cfg_d = dict(blob["config"])
+        cfg_d["block_pattern"] = tuple(cfg_d["block_pattern"])
+        cfg = ModelConfig(**cfg_d)
+        target = TargetSpec(**blob["target_spec"])
+        workload = Workload(**blob["workload"])
+        fps = blob["fingerprints"]
+
+        with np.load(os.path.join(path, "params.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        if _params_digest(flat) != fps["params"]:
+            raise ArtifactError(
+                f"params.npz does not match the artifact's params "
+                f"fingerprint ({fps['params']}) — the artifact was modified "
+                f"after export")
+        params = _unflatten_params(flat)
+
+        ob = blob["oracle"]
+        backend = ob.get("backend")
+        if backend == "analytic":
+            orc: LatencyOracle = oracle_mod.ANALYTIC
+        elif backend == "measured":
+            orc = MeasuredOracle(MeasurementConfig(**ob["config"]))
+        elif backend == "replay":
+            log = MeasurementLog.load(os.path.join(path, ob["log"]))
+            if log.digest() != ob["digest"]:
+                raise ArtifactError(
+                    f"bundled replay log {ob['log']!r} does not match its "
+                    f"recorded digest ({ob['digest']}) — the log was "
+                    f"modified after export")
+            orc = ReplayOracle(log)
+        else:
+            raise ArtifactError(f"unknown oracle backend {backend!r}")
+
+        if _canon(fps["oracle"]) != orc.fingerprint():
+            raise ArtifactError(
+                f"oracle fingerprint mismatch: artifact records "
+                f"{_canon(fps['oracle'])!r} but the reconstructed "
+                f"{backend!r} backend fingerprints as {orc.fingerprint()!r}")
+        if _canon(fps["target"]) != target.fingerprint():
+            raise ArtifactError(
+                "target fingerprint mismatch: artifact.json's target_spec "
+                "was modified after export")
+        stored_fp = _canon(blob["table"]["tuned_fingerprint"])
+        with target.activate():
+            expected = tuning_cache.target_fingerprint() + (None,) \
+                + orc.fingerprint()
+        if stored_fp != expected:
+            raise ArtifactError(
+                f"refusing to serve: the tuned program table was produced "
+                f"under a different target/oracle (table fingerprint "
+                f"{stored_fp!r} != this artifact's target+oracle "
+                f"{expected!r})")
+
+        dims = blob["site_dims"]
+        sites = [s.with_dim(dims[s.site_id]) if s.site_id in dims else s
+                 for s in prune_sites(cfg)]
+        table = TaskTable(sites, workload)
+        stored_tasks = blob["table"]["tasks"]
+        if len(stored_tasks) != len(table.tasks):
+            raise ArtifactError(
+                f"task decomposition mismatch: artifact has "
+                f"{len(stored_tasks)} tasks, the reconstructed model has "
+                f"{len(table.tasks)}")
+        for tb in stored_tasks:
+            t = table.tasks[tb["task_id"]]
+            if _canon(tb["signature"]) != t.signature:
+                raise ArtifactError(
+                    f"task {tb['task_id']} signature mismatch: the "
+                    f"reconstructed model does not reproduce the artifact's "
+                    f"task decomposition")
+            t.programs = {name: tuning_cache.program_from_dict(d)
+                          for name, d in tb["programs"].items()}
+            t.tuned_mode = tb.get("tuned_mode", "tuned")
+        table.tuned_fingerprint = stored_fp
+
+        return cls(cfg=cfg, params=params, sites=sites, target=target,
+                   oracle=orc, workload=workload,
+                   seq_len=blob.get("seq_len", 128), table=table,
+                   metadata=blob.get("metadata", {}), path=path,
+                   schema_version=ver)
+
+    # -- serving / inspection ----------------------------------------------
+
+    def predict_step_s(self, max_batch: int, max_seq: int) -> Optional[float]:
+        """Oracle-predicted seconds per decode step at ``max_batch`` with a
+        ``max_seq``-deep KV cache (None when a replay log cannot score the
+        decode shapes)."""
+        with tuner.target_activation(self.target), \
+                oracle_mod.use_oracle(self.oracle):
+            try:
+                return _decode_step_s(self.cfg, self.sites, self.workload,
+                                      max_batch, max_seq)
+            except KeyError:
+                return None
+
+    def latency_report(self) -> latency.LatencyReport:
+        """Whole-model latency recomputed from the embedded table under the
+        artifact's own target + oracle — must reproduce
+        ``metadata['latency_total_s']`` for deterministic backends."""
+        if self.table is None:
+            raise ArtifactError("serving snapshot has no tuned table")
+        with tuner.target_activation(self.target), \
+                oracle_mod.use_oracle(self.oracle):
+            return latency.model_latency(self.cfg, self.sites, self.table,
+                                         seq_len=self.seq_len)
+
+    def serve(self, *, max_batch: Optional[int] = None,
+              max_seq: Optional[int] = None, seed: int = 0,
+              predict_step: bool = True):
+        """A :class:`~repro.serve.engine.ServeEngine` over this artifact —
+        no session, no warm caches required."""
+        from repro.serve.engine import ServeEngine
+        return ServeEngine.from_artifact(self, max_batch=max_batch,
+                                         max_seq=max_seq, seed=seed,
+                                         predict_step=predict_step)

@@ -1,0 +1,188 @@
+"""Constraint-driven deployment planning — serve a *requirement*, not a
+mechanism.
+
+The paper's framing is "support an application with a required target
+accuracy"; the user-facing contract is therefore a pair of constraints
+(accuracy floor, latency budget), not a strategy name. :func:`plan`
+sweeps every registered strategy against every requested target, scores
+each candidate with the session machinery, and returns a :class:`Plan`:
+
+    pl = plan(cfg, accuracy_floor=0.6, latency_budget_s=2e-3,
+              targets=["tpu_v5e", "edge"], strategies=["cprune", "fpgm"],
+              workload=Workload(tokens_global=65536), hooks=hooks)
+    pl.frontier            # Pareto-optimal (accuracy up, latency down)
+    pl.best                # cheapest candidate satisfying the constraints
+    art = pl.export(path)  # the winning DeploymentArtifact
+
+The sweep is cheap by construction: all candidates on one target share
+the process-wide ProgramCache (keys carry the target+oracle
+fingerprints, so targets never cross-contaminate), and CPrune's own
+iterations reuse the incremental task-table carry-over — the second
+strategy on a target tunes almost nothing.
+
+Every candidate keeps its finished :class:`PruningSession`, so exporting
+any of them (not just the winner) is one call; the exported artifact's
+latency metadata is the exact number the plan ranked it by (enforced by
+tests/test_planner.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+
+from repro.api.artifact import DeploymentArtifact
+from repro.api.session import PruningSession
+from repro.api.strategies import PruneResult
+from repro.api.targets import TargetSpec, get_target
+from repro.configs.base import ModelConfig
+from repro.core.cprune import CPruneConfig, TrainHooks
+from repro.core.oracle import LatencyOracle
+from repro.core.tasks import Workload
+from repro.models.model import init_params
+
+
+class PlanError(ValueError):
+    """No plan candidate satisfies the requested constraints."""
+
+
+@dataclasses.dataclass
+class PlanCandidate:
+    """One (strategy, target) arm of the sweep, with its finished session
+    kept alive so :meth:`export` can emit the artifact directly."""
+
+    strategy: str
+    target: str
+    accuracy: float
+    latency_s: float
+    fps_increase: float
+    meets_floor: bool
+    meets_budget: bool
+    session: PruningSession
+    result: PruneResult
+
+    @property
+    def feasible(self) -> bool:
+        return self.meets_floor and self.meets_budget
+
+    def export(self, path: str, **kw) -> DeploymentArtifact:
+        """Emit this candidate's :class:`DeploymentArtifact` at ``path``."""
+        return self.session.export(path, **kw)
+
+    def describe(self) -> str:
+        flag = "ok" if self.feasible else (
+            "acc<floor" if not self.meets_floor else "lat>budget")
+        return (f"{self.strategy:>10s} @ {self.target:<8s} "
+                f"acc={self.accuracy:.3f}  latency={self.latency_s*1e3:.3f}ms"
+                f"  fps_x={self.fps_increase:.2f}  [{flag}]")
+
+
+@dataclasses.dataclass
+class Plan:
+    """The sweep's outcome: every candidate, the Pareto frontier, and the
+    best constraint-satisfying choice."""
+
+    accuracy_floor: float
+    latency_budget_s: Optional[float]
+    candidates: List[PlanCandidate]
+
+    @property
+    def frontier(self) -> List[PlanCandidate]:
+        """Pareto-optimal candidates (no other candidate is at least as
+        accurate AND at least as fast, with one strictly better), sorted
+        fastest-first."""
+        front = []
+        for c in self.candidates:
+            dominated = any(
+                o.accuracy >= c.accuracy and o.latency_s <= c.latency_s
+                and (o.accuracy > c.accuracy or o.latency_s < c.latency_s)
+                for o in self.candidates if o is not c)
+            if not dominated:
+                front.append(c)
+        return sorted(front, key=lambda c: (c.latency_s, -c.accuracy))
+
+    @property
+    def best(self) -> Optional[PlanCandidate]:
+        """Fastest candidate meeting the accuracy floor (and the latency
+        budget, when one was given); ties break toward higher accuracy.
+        None when nothing satisfies the constraints."""
+        feasible = [c for c in self.candidates if c.feasible]
+        if not feasible:
+            return None
+        return min(feasible, key=lambda c: (c.latency_s, -c.accuracy))
+
+    def export(self, path: str, candidate: Optional[PlanCandidate] = None,
+               **kw) -> DeploymentArtifact:
+        """Emit the winning artifact (or an explicit ``candidate``'s)."""
+        cand = candidate or self.best
+        if cand is None:
+            budget = ("" if self.latency_budget_s is None else
+                      f" and latency_budget_s={self.latency_budget_s!r}")
+            raise PlanError(
+                f"no candidate satisfies accuracy_floor="
+                f"{self.accuracy_floor!r}{budget}; candidates:\n"
+                + "\n".join(c.describe() for c in self.candidates))
+        return cand.export(path, **kw)
+
+    def summary(self) -> str:
+        lines = [c.describe() for c in self.candidates]
+        best = self.best
+        lines.append(f"best: {best.describe() if best else '<none feasible>'}")
+        return "\n".join(lines)
+
+
+def plan(cfg: ModelConfig, *, accuracy_floor: float,
+         latency_budget_s: Optional[float] = None,
+         targets: Sequence[Union[str, TargetSpec]] = ("tpu_v5e",),
+         strategies: Sequence[str] = ("cprune",),
+         workload: Optional[Workload] = None,
+         hooks: Optional[TrainHooks] = None,
+         pcfg: Optional[CPruneConfig] = None,
+         params: Optional[Dict] = None,
+         oracle: Union[str, LatencyOracle, None] = None,
+         strategy_kwargs: Optional[Dict[str, Dict]] = None,
+         seed: int = 0, verbose: bool = False) -> Plan:
+    """Sweep strategy x target under one set of constraints.
+
+    Every arm starts from the *same* initial params (``params``, or a
+    fresh ``seed``-keyed init), so accuracy/latency are comparable across
+    arms. ``strategy_kwargs`` maps a strategy name to extra ``prune``
+    kwargs (e.g. ``{"uniform_l1": {"ratio": 0.25}}``). Latencies are each
+    target's own cost-model estimate — comparable within a target and a
+    deploy-time budget check across targets.
+
+    The floor is threaded into the search itself, not just checked after
+    the fact: when no ``pcfg`` is given, the sessions run with
+    ``CPruneConfig(a_g=accuracy_floor)`` so CPrune's accuracy gate stops
+    at the requirement instead of pruning past it. An explicit ``pcfg``
+    wins verbatim (e.g. to deliberately let the loop prune deeper).
+    """
+    if params is None:
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+    if pcfg is None:
+        pcfg = CPruneConfig(a_g=accuracy_floor)
+    kwargs = strategy_kwargs or {}
+    candidates: List[PlanCandidate] = []
+    for target in targets:
+        tspec = get_target(target)
+        for strategy in strategies:
+            session = PruningSession(cfg, params=params, target=tspec,
+                                     oracle=oracle, workload=workload,
+                                     hooks=hooks, pcfg=pcfg)
+            result = session.prune(strategy=strategy,
+                                   **kwargs.get(strategy, {}))
+            lat = result.final_latency.total_s
+            acc = result.final_acc
+            cand = PlanCandidate(
+                strategy=strategy, target=tspec.name, accuracy=acc,
+                latency_s=lat, fps_increase=result.fps_increase,
+                meets_floor=acc >= accuracy_floor,
+                meets_budget=(latency_budget_s is None
+                              or lat <= latency_budget_s),
+                session=session, result=result)
+            candidates.append(cand)
+            if verbose:
+                print(cand.describe())
+    return Plan(accuracy_floor=accuracy_floor,
+                latency_budget_s=latency_budget_s, candidates=candidates)

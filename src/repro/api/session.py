@@ -11,6 +11,7 @@ TrainHooks + CPruneConfig + tuner + ServeEngine) and threads the selected
                              hooks=my_hooks, pcfg=CPruneConfig(a_g=0.5))
     result = session.prune(strategy="cprune")     # or netadapt/uniform_l1/...
     engine = session.serve(max_batch=8)           # serves the pruned params
+    art = session.export("artifact/")             # deployable serve package
     log = session.calibrate("replay.json")        # record measured timings
     session.save("ckpt/")                         # prune-loop checkpoint
     session = PruningSession.resume("ckpt/", hooks=my_hooks)
@@ -29,11 +30,14 @@ import contextlib
 import dataclasses
 import json
 import os
+import warnings
 from typing import Any, Dict, List, Optional, Union
 
 import jax
 import numpy as np
 
+from repro.api.artifact import (DeploymentArtifact, _flatten_params,
+                                _unflatten_params)
 from repro.api.strategies import PruneResult, get_strategy, list_strategies
 from repro.api.targets import TargetSpec, get_target
 from repro.configs.base import ModelConfig
@@ -41,7 +45,8 @@ from repro.core import latency, tuner
 from repro.core import oracle as oracle_mod
 from repro.core.cprune import CPruneConfig, IterationRecord, TrainHooks
 from repro.core.oracle import (LatencyOracle, MeasuredOracle,
-                               MeasurementConfig, MeasurementLog)
+                               MeasurementConfig, MeasurementLog,
+                               ReplayOracle)
 from repro.core.tasks import TaskTable, Workload
 from repro.models.model import Model, init_params, prune_sites
 from repro.serve.engine import ServeEngine
@@ -55,29 +60,6 @@ def _null_hooks() -> TrainHooks:
                        eval_acc=lambda p, s: 1.0)
     hooks._is_null = True      # lets prune() warn that accuracy is a stub
     return hooks
-
-
-def _flatten_params(tree: Dict[str, Any], prefix: str = ""
-                    ) -> Dict[str, np.ndarray]:
-    out: Dict[str, np.ndarray] = {}
-    for k, v in tree.items():
-        path = f"{prefix}/{k}" if prefix else k
-        if isinstance(v, dict):
-            out.update(_flatten_params(v, path))
-        else:
-            out[path] = np.asarray(v)
-    return out
-
-
-def _unflatten_params(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
-    tree: Dict[str, Any] = {}
-    for path, arr in flat.items():
-        node = tree
-        parts = path.split("/")
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = arr
-    return tree
 
 
 class PruningSession:
@@ -137,7 +119,6 @@ class PruningSession:
         ``session.prune(oracle="measured")``)."""
         fn = get_strategy(strategy)
         if getattr(self.hooks, "_is_null", False):
-            import warnings
             warnings.warn(
                 "pruning with default (no-op) hooks: accuracy is stubbed to "
                 "1.0, so every candidate passes the accuracy gate and "
@@ -216,7 +197,27 @@ class PruningSession:
             orc.record.save(path)
         return orc.record
 
-    # -- serve --------------------------------------------------------------
+    # -- export / serve -----------------------------------------------------
+
+    def export(self, path: str, *, max_batch: int = 8,
+               max_seq: int = 512) -> DeploymentArtifact:
+        """Package the current (pruned) model as a self-contained
+        :class:`~repro.api.artifact.DeploymentArtifact` at ``path``:
+        params, model config, target constants, the tuned program table,
+        the oracle identity (a recording measured session ships its
+        calibration log as a replay artifact), accuracy/latency metadata,
+        and fingerprints. The artifact serves without this session —
+        ``DeploymentArtifact.load(path).serve()`` or
+        ``ServeEngine.from_artifact(path)`` in a fresh process.
+
+        ``max_batch``/``max_seq`` become the artifact's serve defaults and
+        parameterize the recorded decode-step prediction. Returns the
+        artifact re-read from disk, so what you get is exactly what was
+        persisted (validation included).
+        """
+        DeploymentArtifact.from_session(
+            self, max_batch=max_batch, max_seq=max_seq).save(path)
+        return DeploymentArtifact.load(path)
 
     def serve(self, *, params: Optional[Dict[str, Any]] = None,
               max_batch: int = 8, max_seq: int = 512,
@@ -224,7 +225,11 @@ class PruningSession:
         """A :class:`ServeEngine` over the current (pruned) params — or an
         explicit ``params`` override, e.g. the dense baseline.
 
-        With ``predict_step`` (default), the engine is handed the oracle's
+        Built on the artifact path: the session snapshots itself as an
+        in-memory :class:`DeploymentArtifact` (no tuned table, no disk)
+        and hands it to :meth:`ServeEngine.from_artifact`, so session
+        serving and artifact serving are the same code. With
+        ``predict_step`` (default), the engine is handed the oracle's
         predicted per-decode-step latency for this model at ``max_batch``
         (per-token GEMMs for ``max_batch`` tokens, attention against a
         ``max_seq``-deep KV cache), and its ``run()`` stats report
@@ -233,24 +238,15 @@ class PruningSession:
         the *session's* model, so serving a ``params`` override (e.g. the
         dense baseline) gets no prediction.
         """
-        predicted = None
-        if predict_step and params is None:
-            wl = Workload(tokens_global=max_batch, dp=1, tp=1,
-                          dtype_bytes=self.workload.dtype_bytes)
-            try:
-                with self._active():
-                    table = tuner.build_tuned_table(self.sites, wl)
-                    predicted = latency.model_latency(
-                        self.cfg, self.sites, table, seq_len=1,
-                        decode_kv_len=max_seq).total_s
-            except KeyError:
-                # a replay log recorded for the training workload cannot
-                # score the decode-step shapes; serve without a prediction
-                # rather than refusing to serve
-                predicted = None
-        return ServeEngine(self.cfg, self.params if params is None else params,
-                           max_batch=max_batch, max_seq=max_seq, seed=seed,
-                           predicted_step_s=predicted)
+        if params is not None:
+            return ServeEngine(self.cfg, params, max_batch=max_batch,
+                               max_seq=max_seq, seed=seed)
+        art = DeploymentArtifact.from_session(
+            self, max_batch=max_batch, max_seq=max_seq,
+            predict_step=predict_step, include_table=False)
+        return ServeEngine.from_artifact(art, max_batch=max_batch,
+                                         max_seq=max_seq, seed=seed,
+                                         predict_step=predict_step)
 
     # -- checkpointing ------------------------------------------------------
 
@@ -276,6 +272,13 @@ class PruningSession:
             "final_acc": self.final_acc,
             "history": [dataclasses.asdict(h) for h in self.history],
         }
+        # a replay session records where its log lives (plus a digest) so
+        # resume() can reattach the exact artifact instead of silently
+        # falling back to the target's default backend
+        if isinstance(self.oracle, ReplayOracle) \
+                and self.oracle.log.path is not None:
+            meta["oracle_log"] = os.path.abspath(self.oracle.log.path)
+            meta["oracle_log_digest"] = self.oracle.log.digest()
         # params first, metadata last: session.json is the commit record, so
         # a crash mid-save can never pair new metadata with missing/stale
         # params (both writes are tmp + atomic rename)
@@ -317,13 +320,29 @@ class PruningSession:
             spec_d = meta.get("target_spec")
             target = TargetSpec(**spec_d) if spec_d \
                 else get_target(meta["target"])
-        # replay logs are external artifacts and measurement state is not
-        # serialized, so only the stateless backends round-trip by name;
-        # a measured/replay session resumes with a fresh backend of the
-        # same kind (replay falls back to the target default — reattach
-        # the log via PruningSession(oracle=ReplayOracle(path)) instead)
-        oracle = meta.get("oracle")
-        if oracle not in ("analytic", "measured"):
+        # stateless backends round-trip by name; a replay session
+        # round-trips through its checkpointed log path (digest-checked,
+        # so a silently edited log cannot impersonate the original run)
+        oracle: Union[str, LatencyOracle, None] = meta.get("oracle")
+        if oracle == "replay":
+            log_path = meta.get("oracle_log")
+            if log_path and os.path.exists(log_path):
+                log = MeasurementLog.load(log_path)
+                want = meta.get("oracle_log_digest")
+                if want and log.digest() != want:
+                    raise ValueError(
+                        f"replay log {log_path!r} changed since the session "
+                        f"was saved (digest {log.digest()} != {want}); "
+                        f"re-point the session at the original log via "
+                        f"PruningSession(oracle=ReplayOracle(path))")
+                oracle = ReplayOracle(log)
+            else:
+                if log_path:
+                    warnings.warn(
+                        f"replay log {log_path!r} is missing; resuming with "
+                        f"the target's default oracle", stacklevel=2)
+                oracle = None
+        elif oracle not in ("analytic", "measured"):
             oracle = None
         session = cls(
             cfg, params=params, target=target, oracle=oracle,

@@ -148,9 +148,18 @@ class MeasurementLog:
     def __init__(self, config: Optional[MeasurementConfig] = None):
         self.config = config or MeasurementConfig()
         self.entries: Dict[str, float] = {}
+        # where this log last touched disk (set by save/load) — lets a
+        # session checkpoint round-trip its replay artifact by path
+        self.path: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self.entries)
+
+    def copy(self) -> "MeasurementLog":
+        """Snapshot of the current entries (same config, no path)."""
+        new = MeasurementLog(self.config)
+        new.entries = dict(self.entries)
+        return new
 
     @staticmethod
     def gemm_key(m: int, k: int, n: int, batch: int, dtype_bytes: int,
@@ -176,6 +185,7 @@ class MeasurementLog:
                        "config": self.config.to_dict(),
                        "entries": self.entries}, f, indent=1)
         os.replace(tmp, path)
+        self.path = path
         return len(self.entries)
 
     @classmethod
@@ -187,6 +197,7 @@ class MeasurementLog:
                              f"{blob.get('version')!r} in {path}")
         log = cls(MeasurementConfig(**blob["config"]))
         log.entries = {k: float(v) for k, v in blob["entries"].items()}
+        log.path = path
         return log
 
 

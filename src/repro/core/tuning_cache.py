@@ -66,6 +66,25 @@ def program_key(m: int, k: int, n: int, *, batch: int = 1,
         + oracle_mod.active_oracle().fingerprint()
 
 
+def program_to_dict(p: Program) -> Dict:
+    """JSON-serializable form of a tuned program — the one wire format
+    shared by the ProgramCache tuning log and deployment artifacts."""
+    return {
+        "m": p.m, "k": p.k, "n": p.n,
+        "bm": p.block.bm, "bk": p.block.bk, "bn": p.block.bn,
+        "latency": p.latency, "dtype_bytes": p.dtype_bytes,
+        "batch": p.batch,
+    }
+
+
+def program_from_dict(d: Dict) -> Program:
+    """Inverse of :func:`program_to_dict`."""
+    return Program(m=d["m"], k=d["k"], n=d["n"],
+                   block=Block(d["bm"], d["bk"], d["bn"]),
+                   latency=d["latency"], dtype_bytes=d["dtype_bytes"],
+                   batch=d["batch"])
+
+
 class ProgramCache:
     """Thread-safe map from tuning problem to the fastest tuned Program."""
 
@@ -104,15 +123,8 @@ class ProgramCache:
         entries = []
         with self._lock:
             for key, p in self._store.items():
-                entries.append({
-                    "key": list(key),
-                    "program": {
-                        "m": p.m, "k": p.k, "n": p.n,
-                        "bm": p.block.bm, "bk": p.block.bk, "bn": p.block.bn,
-                        "latency": p.latency, "dtype_bytes": p.dtype_bytes,
-                        "batch": p.batch,
-                    },
-                })
+                entries.append({"key": list(key),
+                                "program": program_to_dict(p)})
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump({"version": _FORMAT_VERSION, "entries": entries}, f)
@@ -133,13 +145,7 @@ class ProgramCache:
         n = 0
         with self._lock:
             for e in blob["entries"]:
-                d = e["program"]
-                prog = Program(
-                    m=d["m"], k=d["k"], n=d["n"],
-                    block=Block(d["bm"], d["bk"], d["bn"]),
-                    latency=d["latency"], dtype_bytes=d["dtype_bytes"],
-                    batch=d["batch"])
-                self._store[tuple(e["key"])] = prog
+                self._store[tuple(e["key"])] = program_from_dict(e["program"])
                 n += 1
         return n
 

@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
       --devices 4 --dp 2 --tp 2 --requests 8
+
+Serving a deployment artifact (the export -> load -> serve flow; the
+prune/tune session that produced it need not exist in this process):
+
+  PYTHONPATH=src python -m repro.launch.serve --artifact path/to/artifact
 """
 import argparse
 import os
@@ -20,6 +25,10 @@ def _parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_1_7b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--artifact", default=None,
+                    help="serve a DeploymentArtifact directory (overrides "
+                         "--arch/--reduced; params, config, and the tuned "
+                         "decode-step prediction all come from the artifact)")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
@@ -38,12 +47,26 @@ def main():
     from repro.models.model import init_params
     from repro.serve.engine import Request, ServeEngine
 
-    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    art = None
+    if args.artifact:
+        from repro.api.artifact import DeploymentArtifact
+        art = DeploymentArtifact.load(args.artifact)
+        cfg = art.cfg
+    else:
+        cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     if cfg.is_encoder_only:
         raise SystemExit("encoder-only arch has no decode step")
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, max_batch=min(8, args.requests),
-                      max_seq=args.prompt_len + args.max_new)
+    if art is not None:
+        eng = ServeEngine.from_artifact(
+            art, max_batch=min(8, args.requests),
+            max_seq=args.prompt_len + args.max_new)
+        print(f"serving artifact {args.artifact} "
+              f"(model={cfg.name}, target={art.target.name}, "
+              f"oracle={art.oracle.name}, tuned_digest={art.tuned_digest})")
+    else:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServeEngine(cfg, params, max_batch=min(8, args.requests),
+                          max_seq=args.prompt_len + args.max_new)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(Request(

@@ -16,9 +16,10 @@ For the production mesh the same engine drives the sharded serve_step
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,9 +62,45 @@ class ServeEngine:
         self.predicted_step_s = predicted_step_s
         self._decode_steps = 0
         self._decode_wall_s = 0.0
+        self._step_times: List[float] = []
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
         self._decode = jax.jit(self.model.decode_step)
+
+    @classmethod
+    def from_artifact(cls, artifact: Union[str, "os.PathLike", Any], *,
+                      max_batch: Optional[int] = None,
+                      max_seq: Optional[int] = None, seed: int = 0,
+                      predict_step: bool = True) -> "ServeEngine":
+        """Serve a :class:`~repro.api.artifact.DeploymentArtifact` (an
+        instance or a directory path) without constructing a
+        ``PruningSession`` — the cheap, restartable half of the pipeline.
+
+        ``max_batch``/``max_seq`` default to the artifact's recorded serve
+        defaults, in which case the export-time decode-step prediction is
+        reused; other shapes re-derive the prediction from the artifact's
+        own target + oracle (None when its replay log cannot score them).
+        """
+        if isinstance(artifact, (str, os.PathLike)):
+            from repro.api.artifact import DeploymentArtifact
+            artifact = DeploymentArtifact.load(os.fspath(artifact))
+        defaults = artifact.metadata.get("serve_defaults") or {}
+        if max_batch is None:
+            max_batch = defaults.get("max_batch", 8)
+        if max_seq is None:
+            max_seq = defaults.get("max_seq", 512)
+        predicted = None
+        if predict_step:
+            if (max_batch == defaults.get("max_batch")
+                    and max_seq == defaults.get("max_seq")):
+                predicted = artifact.metadata.get("predicted_step_s")
+            if predicted is None:
+                # other dims — or an artifact exported without a
+                # prediction — re-derive from the artifact's own
+                # target + oracle (None when its log cannot score it)
+                predicted = artifact.predict_step_s(max_batch, max_seq)
+        return cls(artifact.cfg, artifact.params, max_batch=max_batch,
+                   max_seq=max_seq, seed=seed, predicted_step_s=predicted)
 
     def submit(self, req: Request):
         req.t_submit = time.time()
@@ -106,7 +143,9 @@ class ServeEngine:
             t0 = time.perf_counter()
             logits, caches = self._decode(self.params, cur, caches)
             jax.block_until_ready(logits)
-            self._decode_wall_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self._decode_wall_s += dt
+            self._step_times.append(dt)
             self._decode_steps += 1
             cur = self._sample(logits, wave)
             now = time.time()
@@ -130,6 +169,10 @@ class ServeEngine:
         tok = jnp.where(temps[:, 0] > 0, noisy, greedy)
         return tok[:, None].astype(jnp.int32)
 
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
     def run(self) -> Dict[str, Any]:
         t0 = time.time()
         waves = 0
@@ -138,15 +181,24 @@ class ServeEngine:
             waves += 1
         wall = time.time() - t0
         total_tokens = sum(len(r.output) for r in self.done)
+        ttfts = [r.t_first_token - r.t_submit for r in self.done]
+        decodes = [r.t_done - r.t_first_token for r in self.done]
         stats = {
             "requests": len(self.done),
             "waves": waves,
             "total_new_tokens": total_tokens,
             "wall_s": wall,
             "tokens_per_s": total_tokens / max(wall, 1e-9),
-            "mean_ttft_s": float(np.mean(
-                [r.t_first_token - r.t_submit for r in self.done]))
-            if self.done else 0.0,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            # tail latency: TTFT and per-request decode time across
+            # requests, plus per-decode-step percentiles — the serve-time
+            # check for the planner's per-step latency claims
+            "p50_ttft_s": self._pct(ttfts, 50),
+            "p95_ttft_s": self._pct(ttfts, 95),
+            "p50_decode_s": self._pct(decodes, 50),
+            "p95_decode_s": self._pct(decodes, 95),
+            "p50_step_s": self._pct(self._step_times, 50),
+            "p95_step_s": self._pct(self._step_times, 95),
             # predicted-vs-measured step latency: how wrong the latency
             # oracle is on the model that is actually executing
             "decode_steps": self._decode_steps,

@@ -1,0 +1,325 @@
+"""DeploymentArtifact: the export -> load -> serve exit of the pipeline.
+
+Key contracts:
+  * round-trip identity: export, cold-start every process cache, load,
+    serve — decode outputs are bit-identical to the originating session's
+    engine and the tuned fingerprint survives unchanged;
+  * the artifact serves without a PruningSession (ServeEngine.from_artifact
+    on a path alone);
+  * validation on load: unknown schema versions, tampered params, a
+    tampered target spec, and a tampered bundled replay log are all
+    refused with a clear ArtifactError;
+  * a recording measured session exports a replay artifact (its
+    calibration log ships inside the directory);
+  * session.save()/resume() round-trips a replay oracle through its log
+    path, digest-checked.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (ArtifactError, CPruneConfig, DeploymentArtifact,
+                       MeasuredOracle, MeasurementConfig, MeasurementLog,
+                       PruningSession, ReplayOracle, TrainHooks, Workload)
+from repro.configs import get_reduced_config
+from repro.core import clear_tuning_caches
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+def _cfg():
+    return get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+
+
+def _hooks(acc=0.9):
+    return TrainHooks(short_term_train=lambda p, s: p,
+                      eval_acc=lambda p, s: acc)
+
+
+def _session(cfg, **kw):
+    kw.setdefault("workload", Workload(tokens_global=8192))
+    kw.setdefault("hooks", _hooks())
+    kw.setdefault("pcfg", CPruneConfig(a_g=0.5, alpha=0.5, beta=0.9999,
+                                       max_iterations=2, seq_len=64))
+    return PruningSession(cfg, **kw)
+
+
+def _decode(engine, cfg, n_req=2, n_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    for i in range(n_req):
+        engine.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=n_new))
+    stats = engine.run()
+    return [r.output for r in engine.done], stats
+
+
+def _edit_json(path, mutate):
+    fn = os.path.join(path, "artifact.json")
+    blob = json.loads(open(fn).read())
+    mutate(blob)
+    with open(fn, "w") as f:
+        json.dump(blob, f)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip identity
+# ---------------------------------------------------------------------------
+
+def test_export_load_serve_round_trip_is_bit_identical(tmp_path):
+    cfg = _cfg()
+    session = _session(cfg)
+    res = session.prune(strategy="cprune")
+    assert any(h.accepted for h in res.history)
+
+    session_fp = session.tune().tuned_fingerprint
+    out_a, _ = _decode(session.serve(max_batch=2, max_seq=24), cfg)
+
+    art = session.export(str(tmp_path / "art"), max_batch=2, max_seq=24)
+    assert art.tuned_fingerprint == session_fp
+    assert art.metadata["final_acc"] == res.final_acc
+    assert art.metadata["strategy"] == "cprune"
+    assert art.metadata["predicted_step_s"] is not None
+
+    # a fresh interpreter state: every process-wide cache cold
+    clear_tuning_caches()
+    loaded = DeploymentArtifact.load(str(tmp_path / "art"))
+    assert loaded.tuned_fingerprint == session_fp
+    assert loaded.tuned_digest == art.tuned_digest
+
+    engine = ServeEngine.from_artifact(loaded, max_batch=2, max_seq=24)
+    assert engine.predicted_step_s == loaded.metadata["predicted_step_s"]
+    out_b, stats = _decode(engine, cfg)
+    assert out_b == out_a                       # bit-identical decode
+    assert stats["requests"] == 2
+    # pruned site dims survived the round trip
+    assert {s.site_id: s.dim for s in loaded.sites} \
+        == {s.site_id: s.dim for s in session.sites}
+
+
+def test_artifact_serves_from_path_without_a_session(tmp_path):
+    cfg = _cfg()
+    session = _session(cfg)
+    session.prune(strategy="uniform_l1", ratio=0.5)
+    metadata_lat = session.export(
+        str(tmp_path / "art")).metadata["latency_total_s"]
+    clear_tuning_caches()
+    # path in, engine out — no PruningSession anywhere in this flow
+    engine = ServeEngine.from_artifact(str(tmp_path / "art"),
+                                       max_batch=2, max_seq=24)
+    outputs, stats = _decode(engine, cfg)
+    assert stats["total_new_tokens"] == 8 and all(outputs)
+    # and the embedded table recomputes to exactly the exported metadata
+    clear_tuning_caches()
+    loaded = DeploymentArtifact.load(str(tmp_path / "art"))
+    assert loaded.latency_report().total_s == metadata_lat
+
+
+def test_serve_defaults_and_prediction_recompute(tmp_path):
+    cfg = _cfg()
+    session = _session(cfg)
+    art = session.export(str(tmp_path / "art"), max_batch=4, max_seq=32)
+    loaded = DeploymentArtifact.load(str(tmp_path / "art"))
+    # defaulted dims reuse the stored prediction
+    engine = ServeEngine.from_artifact(loaded)
+    assert engine.max_batch == 4 and engine.max_seq == 32
+    assert engine.predicted_step_s == art.metadata["predicted_step_s"]
+    # other dims re-derive a (different) prediction from the artifact
+    engine2 = ServeEngine.from_artifact(loaded, max_batch=8, max_seq=64)
+    assert engine2.predicted_step_s is not None
+    assert engine2.predicted_step_s != engine.predicted_step_s
+
+
+# ---------------------------------------------------------------------------
+# Validation on load
+# ---------------------------------------------------------------------------
+
+def test_load_rejects_unknown_schema_version(tmp_path):
+    session = _session(_cfg())
+    session.export(str(tmp_path / "art"))
+
+    _edit_json(str(tmp_path / "art"),
+               lambda b: b.update(schema_version=999))
+    with pytest.raises(ArtifactError, match="schema version"):
+        DeploymentArtifact.load(str(tmp_path / "art"))
+    with pytest.raises(ArtifactError, match="no deployment artifact"):
+        DeploymentArtifact.load(str(tmp_path / "nowhere"))
+
+
+def test_load_rejects_mismatched_target_fingerprint(tmp_path):
+    session = _session(_cfg())
+    session.export(str(tmp_path / "art"))
+
+    def retarget(blob):
+        blob["target_spec"]["hbm_bw"] = blob["target_spec"]["hbm_bw"] * 2
+
+    _edit_json(str(tmp_path / "art"), retarget)
+    with pytest.raises(ArtifactError, match="target"):
+        DeploymentArtifact.load(str(tmp_path / "art"))
+
+    # a consistent edit of spec + fingerprint still trips the tuned-table
+    # check: the table was not tuned for that target
+    session.export(str(tmp_path / "art2"))
+
+    def retarget_consistent(blob):
+        blob["target_spec"]["hbm_bw"] = blob["target_spec"]["hbm_bw"] * 2
+        blob["fingerprints"]["target"][2] = blob["target_spec"]["hbm_bw"]
+
+    _edit_json(str(tmp_path / "art2"), retarget_consistent)
+    with pytest.raises(ArtifactError, match="different target/oracle"):
+        DeploymentArtifact.load(str(tmp_path / "art2"))
+
+
+def test_load_wraps_any_malformed_content_in_artifact_error(tmp_path):
+    """The documented contract: missing/malformed/invalid all surface as
+    ArtifactError, never raw FileNotFoundError/JSONDecodeError."""
+    session = _session(_cfg())
+    session.export(str(tmp_path / "a"))
+    os.remove(str(tmp_path / "a" / "params.npz"))
+    with pytest.raises(ArtifactError, match="malformed"):
+        DeploymentArtifact.load(str(tmp_path / "a"))
+
+    session.export(str(tmp_path / "b"))
+    with open(str(tmp_path / "b" / "artifact.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(ArtifactError, match="malformed"):
+        DeploymentArtifact.load(str(tmp_path / "b"))
+
+    session.export(str(tmp_path / "c"))
+    _edit_json(str(tmp_path / "c"),
+               lambda blob: blob["table"]["tasks"][0].update(task_id=99))
+    with pytest.raises(ArtifactError, match="malformed"):
+        DeploymentArtifact.load(str(tmp_path / "c"))
+
+
+def test_from_artifact_derives_prediction_when_export_skipped_it(tmp_path):
+    """predict_step=False at export must not pin serving to 'no
+    prediction': from_artifact re-derives it from the artifact's own
+    target + oracle."""
+    session = _session(_cfg())
+    DeploymentArtifact.from_session(session, max_batch=2, max_seq=24,
+                                    predict_step=False).save(
+        str(tmp_path / "art"))
+    loaded = DeploymentArtifact.load(str(tmp_path / "art"))
+    assert loaded.metadata["predicted_step_s"] is None
+    engine = ServeEngine.from_artifact(loaded)       # default dims
+    assert engine.predicted_step_s is not None
+    assert engine.predicted_step_s \
+        == loaded.predict_step_s(2, 24)
+
+
+def test_load_rejects_tampered_params(tmp_path):
+    session = _session(_cfg())
+    art = session.export(str(tmp_path / "art"))
+    flat = dict(np.load(os.path.join(str(tmp_path / "art"), "params.npz")))
+    key = sorted(flat)[0]
+    flat[key] = flat[key] + 1.0
+    with open(os.path.join(str(tmp_path / "art"), "params.npz"), "wb") as f:
+        np.savez(f, **flat)
+    with pytest.raises(ArtifactError, match="params"):
+        DeploymentArtifact.load(str(tmp_path / "art"))
+    assert art is not None
+
+
+# ---------------------------------------------------------------------------
+# Measured/replay artifacts
+# ---------------------------------------------------------------------------
+
+_FAST = MeasurementConfig(warmup=0, repeats=1, trim=0, measure_top_k=1,
+                          max_grid_steps=1)
+
+
+def test_recording_measured_session_exports_replay_artifact(tmp_path):
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=256, n_heads=4, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    session = PruningSession(
+        cfg, oracle=MeasuredOracle(_FAST, record=MeasurementLog(_FAST)),
+        workload=Workload(tokens_global=256), hooks=_hooks(),
+        pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    art = session.export(str(tmp_path / "art"), max_batch=2, max_seq=16)
+    # the calibration log ships inside the artifact; the table replays
+    assert art.oracle.name == "replay"
+    assert os.path.exists(str(tmp_path / "art" / "replay_log.json"))
+    assert art.metadata["predicted_step_s"] is not None
+
+    clear_tuning_caches()
+    loaded = DeploymentArtifact.load(str(tmp_path / "art"))
+    assert loaded.oracle.name == "replay"
+    # deterministic replay: recomputed latency equals exported metadata
+    assert loaded.latency_report().total_s \
+        == art.metadata["latency_total_s"]
+    _, stats = _decode(loaded.serve(max_batch=2, max_seq=16), cfg)
+    assert stats["requests"] == 2
+
+    # a tampered bundled log is refused
+    log_fn = str(tmp_path / "art" / "replay_log.json")
+    blob = json.loads(open(log_fn).read())
+    k = sorted(blob["entries"])[0]
+    blob["entries"][k] = blob["entries"][k] * 2
+    with open(log_fn, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(ArtifactError, match="replay log"):
+        DeploymentArtifact.load(str(tmp_path / "art"))
+
+
+def test_in_memory_serving_snapshot_cannot_be_saved():
+    session = _session(_cfg())
+    art = DeploymentArtifact.from_session(session, include_table=False)
+    assert art.table is None
+    with pytest.raises(ArtifactError, match="serving snapshot"):
+        art.save("/tmp/should_never_exist_artifact")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: checkpoint round-trip of the replay oracle's log path
+# ---------------------------------------------------------------------------
+
+def test_session_save_resume_roundtrips_replay_log(tmp_path):
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=256, n_heads=4, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    base = PruningSession(cfg, workload=Workload(tokens_global=256),
+                          pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    log_path = str(tmp_path / "calib.json")
+    base.calibrate(log_path, config=_FAST)
+
+    session = PruningSession(cfg, oracle=ReplayOracle.from_file(log_path),
+                             workload=Workload(tokens_global=256),
+                             pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    session.save(str(tmp_path / "ckpt"))
+    meta = json.loads((tmp_path / "ckpt" / "session.json").read_text())
+    assert meta["oracle"] == "replay"
+    assert meta["oracle_log"] == os.path.abspath(log_path)
+
+    resumed = PruningSession.resume(str(tmp_path / "ckpt"))
+    assert resumed.oracle.name == "replay"
+    assert resumed.oracle.log.digest() == session.oracle.log.digest()
+    # the resumed session scores with the log, no re-pointing needed
+    assert resumed.latency_report().total_s \
+        == session.latency_report().total_s
+
+    # a log edited after save is refused on resume
+    blob = json.loads(open(log_path).read())
+    k = sorted(blob["entries"])[0]
+    blob["entries"][k] = blob["entries"][k] * 2
+    with open(log_path, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(ValueError, match="changed since"):
+        PruningSession.resume(str(tmp_path / "ckpt"))
+
+    # a missing log falls back (with a warning), not a crash
+    os.remove(log_path)
+    with pytest.warns(UserWarning, match="missing"):
+        resumed2 = PruningSession.resume(str(tmp_path / "ckpt"))
+    assert resumed2.oracle.name == "analytic"

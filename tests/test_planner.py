@@ -1,0 +1,173 @@
+"""plan(): the constraint front door (accuracy floor, latency budget).
+
+Acceptance contract (ISSUE 4): plan() on tpu_v5e + edge with an accuracy
+floor returns a frontier where every candidate's recomputed latency
+matches its exported artifact's metadata, the best candidate satisfies
+the floor, loading the exported artifact serves without constructing a
+PruningSession, and an unsatisfiable floor raises a clear error.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CPruneConfig, DeploymentArtifact, PlanError,
+                       TrainHooks, Workload, plan)
+from repro.configs import get_reduced_config
+from repro.core import clear_tuning_caches
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+def _cfg():
+    return get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+
+
+def _count(p):
+    return sum(int(np.prod(np.asarray(x).shape)) for x in jax.tree.leaves(p))
+
+
+def _setup():
+    """Params + hooks whose accuracy is the remaining-parameter fraction:
+    deterministic, and strategies that prune more score lower — so the
+    accuracy/latency trade-off the planner ranks is real."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n0 = _count(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: _count(p) / n0)
+    pcfg = CPruneConfig(a_g=0.0, alpha=0.5, beta=0.9999, max_iterations=2,
+                        seq_len=64)
+    return cfg, params, hooks, pcfg
+
+
+def _plan(cfg, params, hooks, pcfg, **kw):
+    kw.setdefault("targets", ["tpu_v5e", "edge"])
+    kw.setdefault("strategies", ["cprune", "uniform_l1"])
+    kw.setdefault("workload", Workload(tokens_global=8192))
+    kw.setdefault("strategy_kwargs", {"uniform_l1": {"ratio": 0.25}})
+    return plan(cfg, params=params, hooks=hooks, pcfg=pcfg, **kw)
+
+
+def test_plan_sweeps_strategy_x_target_with_pareto_frontier(tmp_path):
+    cfg, params, hooks, pcfg = _setup()
+    pl = _plan(cfg, params, hooks, pcfg, accuracy_floor=0.5)
+    assert len(pl.candidates) == 4
+    assert {(c.strategy, c.target) for c in pl.candidates} == {
+        ("cprune", "tpu_v5e"), ("uniform_l1", "tpu_v5e"),
+        ("cprune", "edge"), ("uniform_l1", "edge")}
+
+    frontier = pl.frontier
+    assert frontier
+    # non-domination: no frontier member is beaten on both axes
+    for c in frontier:
+        assert not any(
+            o.accuracy >= c.accuracy and o.latency_s <= c.latency_s
+            and (o.accuracy > c.accuracy or o.latency_s < c.latency_s)
+            for o in pl.candidates)
+
+    best = pl.best
+    assert best is not None and best.accuracy >= 0.5
+    feasible = [c for c in pl.candidates if c.feasible]
+    assert best.latency_s == min(c.latency_s for c in feasible)
+    assert "best" in pl.summary()
+
+
+def test_frontier_artifacts_reproduce_their_planned_latency(tmp_path):
+    """The acceptance criterion: every frontier candidate's exported
+    artifact, loaded cold, recomputes exactly the latency the plan ranked
+    it by — and serves without a PruningSession."""
+    cfg, params, hooks, pcfg = _setup()
+    pl = _plan(cfg, params, hooks, pcfg, accuracy_floor=0.5)
+    for i, cand in enumerate(pl.frontier):
+        path = str(tmp_path / f"art{i}")
+        art = cand.export(path, max_batch=2, max_seq=24)
+        assert art.metadata["latency_total_s"] == cand.latency_s
+        clear_tuning_caches()
+        loaded = DeploymentArtifact.load(path)
+        assert loaded.target.name == cand.target
+        assert loaded.metadata["strategy"] == cand.strategy
+        assert loaded.latency_report().total_s == cand.latency_s
+        assert loaded.metadata["final_acc"] == cand.accuracy
+    # serve the best one from disk alone
+    best_path = str(tmp_path / "best")
+    pl.export(best_path, max_batch=2, max_seq=24)
+    clear_tuning_caches()
+    engine = ServeEngine.from_artifact(best_path)
+    rng = np.random.default_rng(0)
+    engine.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=4))
+    stats = engine.run()
+    assert stats["total_new_tokens"] == 4
+
+
+def test_unsatisfiable_floor_has_no_best_and_export_raises(tmp_path):
+    cfg, params, hooks, pcfg = _setup()
+    pl = _plan(cfg, params, hooks, pcfg, accuracy_floor=2.0,
+               targets=["tpu_v5e"], strategies=["uniform_l1"])
+    assert pl.best is None
+    assert all(not c.meets_floor for c in pl.candidates)
+    with pytest.raises(PlanError, match="accuracy_floor"):
+        pl.export(str(tmp_path / "never"))
+
+
+def test_latency_budget_filters_best(tmp_path):
+    cfg, params, hooks, pcfg = _setup()
+    # an impossible budget: floor is met but nothing is fast enough
+    pl = _plan(cfg, params, hooks, pcfg, accuracy_floor=0.5,
+               latency_budget_s=1e-12, targets=["tpu_v5e"],
+               strategies=["uniform_l1"])
+    assert all(c.meets_floor for c in pl.candidates)
+    assert all(not c.meets_budget for c in pl.candidates)
+    assert pl.best is None
+    # a generous budget: same sweep, now feasible
+    pl2 = _plan(cfg, params, hooks, pcfg, accuracy_floor=0.5,
+                latency_budget_s=10.0, targets=["tpu_v5e"],
+                strategies=["uniform_l1"])
+    assert pl2.best is not None
+
+
+def test_plan_threads_floor_into_the_cprune_accuracy_gate():
+    """Without an explicit pcfg, the sessions run with a_g=accuracy_floor
+    — the search stops at the requirement instead of pruning past it and
+    failing the post-hoc check."""
+    cfg, params, hooks, _ = _setup()
+    pl = plan(cfg, accuracy_floor=0.9, targets=["tpu_v5e"],
+              strategies=["cprune"], workload=Workload(tokens_global=8192),
+              hooks=hooks, params=params)
+    assert all(c.session.pcfg.a_g == 0.9 for c in pl.candidates)
+    # every accepted step kept accuracy at/above the gate, so the arm
+    # satisfies the floor by construction
+    assert pl.best is not None and pl.best.accuracy >= 0.9
+    # an explicit pcfg wins verbatim
+    pl2 = plan(cfg, accuracy_floor=0.9, targets=["tpu_v5e"],
+               strategies=["cprune"], workload=Workload(tokens_global=8192),
+               hooks=hooks, params=params,
+               pcfg=CPruneConfig(a_g=0.0, max_iterations=1, seq_len=64))
+    assert all(c.session.pcfg.a_g == 0.0 for c in pl2.candidates)
+
+
+def test_plan_candidates_share_the_program_cache_per_target():
+    """The sweep must be cheap: the second strategy on a target rides the
+    first one's ProgramCache entries instead of re-searching the grid."""
+    cfg, params, hooks, pcfg = _setup()
+    pl = _plan(cfg, params, hooks, pcfg, accuracy_floor=0.0,
+               targets=["tpu_v5e"], strategies=["cprune", "uniform_l1"])
+    first, second = pl.candidates[0].result, pl.candidates[1].result
+    assert first.tuner_stats is not None
+    # uniform_l1's PruneResult carries no stats; prove reuse by a fresh
+    # tune() on the second session being served ~fully from cache
+    from repro.core import tuner
+    stats = tuner.TunerStats()
+    pl.candidates[1].session.tune(stats=stats)
+    assert stats.cache_hits > 0
+    assert stats.cache_misses == 0
+    assert second is not first

@@ -72,6 +72,31 @@ def test_engine_reports_predicted_vs_measured_step(setup):
     assert "oracle_rel_error" not in stats2
 
 
+def test_engine_reports_latency_percentiles(setup):
+    """p50/p95 TTFT, per-request decode latency, and per-step percentiles
+    — the serve-time check for the planner's latency claims."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=24)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=4))
+    stats = eng.run()
+    assert 0.0 < stats["p50_ttft_s"] <= stats["p95_ttft_s"]
+    assert 0.0 <= stats["p50_decode_s"] <= stats["p95_decode_s"]
+    assert 0.0 < stats["p50_step_s"] <= stats["p95_step_s"]
+    # percentiles summarize the same samples the aggregates come from
+    assert stats["p50_ttft_s"] <= max(
+        r.t_first_token - r.t_submit for r in eng.done)
+    assert stats["p95_step_s"] <= stats["decode_steps"] * stats[
+        "measured_step_s"] + 1e-9
+    # an idle engine reports zeroed percentiles, not NaN/crash
+    empty = ServeEngine(cfg, params, max_batch=2, max_seq=24).run()
+    for k in ("p50_ttft_s", "p95_ttft_s", "p50_decode_s", "p95_decode_s",
+              "p50_step_s", "p95_step_s"):
+        assert empty[k] == 0.0
+
+
 def test_engine_batches_multiple_requests(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)
