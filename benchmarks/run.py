@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                      the Pallas kernels, replay-log determinism check
   artifact_smoke     deployment artifact: export in this process, serve
                      from a second interpreter, fingerprints must match
+  serve_bench        scheduler-core serving vs the legacy wave engine on
+                     an interleaved workload, plus the SLO router over a
+                     two-artifact catalog (throughput gates)
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -27,8 +30,9 @@ def main() -> None:
     from benchmarks import (artifact_smoke, fig1_correlation,
                             fig6_iterations, fig8_cross_target,
                             fig11_search_cost, kernels_bench,
-                            measured_smoke, roofline, session_targets,
-                            table1_methods, table2_ablations, tuner_bench)
+                            measured_smoke, roofline, serve_bench,
+                            session_targets, table1_methods,
+                            table2_ablations, tuner_bench)
     from benchmarks import common
 
     print("name,us_per_call,derived")
@@ -41,6 +45,7 @@ def main() -> None:
         ("session_targets", session_targets.run),
         ("measured_smoke", measured_smoke.run),
         ("artifact_smoke", artifact_smoke.run),
+        ("serve_bench", serve_bench.run),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

@@ -1,0 +1,164 @@
+"""Serve bench (CI ``serve-smoke``): scheduler core vs the legacy wave
+engine, and the SLO router over a two-artifact catalog.
+
+Workload: interleaved prompt lengths (8/12) x interleaved decode budgets
+(4/24 new tokens) — exactly the mix the wave engine is worst at: every
+wave drags its finished slots through ``max(max_new_tokens)`` steps. The
+scheduler core buckets by prompt length, groups similar decode lengths,
+and compacts finished slots away, so the same workload takes ~half the
+jitted decode calls.
+
+Two arms, both warmed (a throwaway drain compiles every shape, then
+``reset_stats()`` + a timed drain):
+
+  * ``scheduler_vs_wave`` — one engine, same params, policy flipped.
+    Asserts the scheduler core sustains *strictly* higher tokens/s
+    (``SERVE_BENCH_MIN_RATIO``, default 1.0, tightened locally).
+  * ``router_vs_wave`` — ``plan()`` -> ``Plan.export_catalog`` with two
+    frontier artifacts (deep uniform prune = fast/less accurate, shallow
+    FPGM = slow/more accurate); a mixed-SLO workload (tight budgets ->
+    fast artifact, loose -> accurate) through the ``Router`` must sustain
+    >= the wave engine serving the accurate artifact alone.
+
+Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py``
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.api import CPruneConfig, TrainHooks, Workload, plan
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.router import Router
+
+N_REQUESTS = 16
+MAX_BATCH = 4
+MAX_SEQ = 40        # longest prompt (12) + longest decode budget (24) + slack
+
+
+def _bench_cfg():
+    return common.bench_config(n_layers=2, d_model=64, d_ff=512, n_heads=4,
+                               n_kv_heads=2, head_dim=16, vocab_size=128)
+
+
+def _workload(cfg, *, budgets=None):
+    """Fresh Request objects for one drain (interleaved lengths + decode
+    budgets; ``budgets`` optionally attaches per-request SLOs)."""
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(N_REQUESTS):
+        plen = 8 if i % 2 == 0 else 12
+        n_new = 4 if i % 4 < 2 else 24
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=n_new,
+            latency_budget_s=budgets(i, n_new) if budgets else None))
+    return reqs
+
+
+def _drain(submit, run, reset, cfg, *, budgets=None):
+    """Warm every compiled shape with one throwaway drain, then time a
+    second identical drain from zeroed stats."""
+    for r in _workload(cfg, budgets=budgets):
+        submit(r)
+    run()
+    reset()
+    for r in _workload(cfg, budgets=budgets):
+        submit(r)
+    return run()
+
+
+def _engine_drain(eng, cfg):
+    return _drain(eng.submit, eng.run, eng.reset_stats, cfg)
+
+
+def run():
+    min_ratio = float(os.environ.get("SERVE_BENCH_MIN_RATIO", "1.0"))
+    cfg = _bench_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    # -- arm 1: scheduler core vs legacy wave, same model -------------------
+    t = common.Timer()
+    wave = _engine_drain(
+        ServeEngine(cfg, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                    scheduler="wave"), cfg)
+    sched = _engine_drain(
+        ServeEngine(cfg, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ), cfg)
+    assert sched["total_new_tokens"] == wave["total_new_tokens"]
+    ratio = sched["tokens_per_s"] / max(wave["tokens_per_s"], 1e-9)
+    common.emit(
+        "serve_sched_vs_wave", t.us(),
+        f"tokens_per_s={sched['tokens_per_s']:.1f}"
+        f";wave_tokens_per_s={wave['tokens_per_s']:.1f}"
+        f";ratio={ratio:.2f}"
+        f";decode_steps={sched['decode_steps']}"
+        f";wave_decode_steps={wave['decode_steps']}"
+        f";slot_steps={sched['slot_steps']}"
+        f";wave_slot_steps={wave['slot_steps']}"
+        f";occupancy={sched['mean_batch_occupancy']:.2f}")
+
+    # -- arm 2: SLO router over a two-artifact catalog ----------------------
+    t = common.Timer()
+    common.reset_tuning_caches()
+    n0 = common.count_params(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: common.count_params(p) / n0)
+    pl = plan(cfg, accuracy_floor=0.0, targets=["tpu_v5e"],
+              strategies=["uniform_l1", "fpgm"],
+              workload=Workload(tokens_global=8192), hooks=hooks,
+              params=params, pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+              strategy_kwargs={"uniform_l1": {"ratio": 0.6},
+                               "fpgm": {"ratio": 0.1}})
+    with tempfile.TemporaryDirectory() as td:
+        catalog = pl.export_catalog(td, max_batch=MAX_BATCH,
+                                    max_seq=MAX_SEQ)
+        common.reset_tuning_caches()
+        fast = min(catalog, key=lambda e: e.predicted_step_s)
+        accurate = max(catalog, key=lambda e: e.accuracy)
+
+        def budgets(i, n_new):
+            # even rids: tight (only the fast artifact can promise it);
+            # odd rids: loose (the budget buys the accurate artifact)
+            mid = (fast.predicted_step_s + accurate.predicted_step_s) / 2
+            return mid * n_new if i % 2 == 0 \
+                else accurate.predicted_step_s * n_new * 100
+        router = Router(catalog)
+        routed = _drain(router.submit, router.run, router.reset_stats, cfg,
+                        budgets=budgets)
+        # the deployment the router replaces: the accurate artifact alone,
+        # behind the legacy blocking wave engine
+        solo = _engine_drain(
+            ServeEngine.from_artifact(catalog.artifact(accurate.name),
+                                      max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                                      scheduler="wave"), cfg)
+    assert routed["total_new_tokens"] == solo["total_new_tokens"]
+    assert set(routed["routing"]) == {fast.name, accurate.name}
+    r_ratio = routed["tokens_per_s"] / max(solo["tokens_per_s"], 1e-9)
+    common.emit(
+        "serve_router_vs_wave", t.us(),
+        f"tokens_per_s={routed['tokens_per_s']:.1f}"
+        f";wave_tokens_per_s={solo['tokens_per_s']:.1f}"
+        f";ratio={r_ratio:.2f}"
+        f";routing={routed['routing']}"
+        f";violation_rate={routed['budget_violation_rate']:.2f}")
+    common.reset_tuning_caches()
+
+    if ratio <= min_ratio:
+        raise RuntimeError(
+            f"scheduler core is not faster than the wave engine on the "
+            f"interleaved workload: ratio {ratio:.2f} <= {min_ratio}")
+    if r_ratio < min_ratio:
+        raise RuntimeError(
+            f"router throughput fell below the wave baseline: "
+            f"{r_ratio:.2f} < {min_ratio}")
+    return {"sched": sched, "wave": wave, "router": routed, "solo": solo}
+
+
+if __name__ == "__main__":
+    run()

@@ -8,7 +8,10 @@ required target accuracy").
 caches, so extra arms are cheap), prints the Pareto frontier, exports the
 best constraint-satisfying candidate as a deployment artifact, and then
 serves that artifact from disk — the prune/tune machinery is out of the
-loop by the time requests arrive.
+loop by the time requests arrive. To keep the constraint language alive
+per *request* instead of freezing it here, export the whole frontier with
+`pl.export_catalog(dir)` and serve it through the SLO router — see
+`examples/route_slo.py`.
 """
 import argparse
 import os

@@ -11,7 +11,8 @@ import tempfile
 
 import numpy as np
 
-from repro.api import CPruneConfig, PruningSession, TrainHooks, Workload
+from repro.api import (CPruneConfig, MeasurementLog, PruningSession,
+                       TrainHooks, Workload)
 from repro.configs import get_reduced_config
 from repro.serve.engine import Request, ServeEngine
 
@@ -70,8 +71,18 @@ def main():
         bench(session.serve(params=dense_params, max_batch=8, max_seq=64),
               "dense")
         # the pruned model serves from the artifact directory alone — the
-        # same call a freshly restarted serving process would make
-        bench(ServeEngine.from_artifact(path), "pruned")
+        # same call a freshly restarted serving process would make; the
+        # attached MeasurementLog records the observed decode step, the
+        # raw material for DeploymentArtifact.recalibrated_oracle
+        log = MeasurementLog()
+        stats = bench(ServeEngine.from_artifact(path, measurements=log),
+                      "pruned")
+        key = MeasurementLog.step_key(art.measurement_tag, 8, 64)
+        print(f"{'':10s} recorded observed decode step "
+              f"{log.lookup(key)*1e3:.1f} ms into the measurement log "
+              f"({key}) — feed it back with art.recalibrated_oracle(log) "
+              f"on a replay-backed artifact")
+        assert stats["requests"] == 8
 
 
 if __name__ == "__main__":

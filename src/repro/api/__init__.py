@@ -35,6 +35,10 @@ Planning (`planner.py`): the constraint front door —
 strategies=[...])`` sweeps strategy x target, returns a :class:`Plan`
 with the Pareto frontier and a constraint-satisfying ``best``, and
 ``Plan.export(path)`` emits the winning artifact.
+``Plan.export_catalog(path)`` emits the whole frontier as an
+``ArtifactCatalog`` that ``repro.serve.router.Router`` dispatches
+per-request SLOs over (``Request(latency_budget_s=...,
+accuracy_floor=...)``).
 
 The `repro.core` modules remain importable as before; this package only
 composes them.

@@ -38,7 +38,7 @@ import dataclasses
 import hashlib
 import json
 import os
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -113,16 +113,19 @@ def _canon(x):
     return x
 
 
-def _decode_step_s(cfg: ModelConfig, sites, wl: Workload,
-                   max_batch: int, max_seq: int) -> float:
+def _decode_step_report(cfg: ModelConfig, sites, wl: Workload,
+                        max_batch: int, max_seq: int
+                        ) -> latency.LatencyReport:
     """One decode step of this model at ``max_batch``: per-token GEMMs for
     ``max_batch`` tokens plus attention against a ``max_seq``-deep KV
-    cache — under the *already active* target and oracle."""
+    cache — under the *already active* target and oracle. Returns the
+    full report (the task/fixed split parameterizes serve-time
+    recalibration, not just the total)."""
     wl_d = Workload(tokens_global=max_batch, dp=1, tp=1,
                     dtype_bytes=wl.dtype_bytes)
     table = tuner.build_tuned_table(sites, wl_d)
     return latency.model_latency(cfg, sites, table, seq_len=1,
-                                 decode_kv_len=max_seq).total_s
+                                 decode_kv_len=max_seq)
 
 
 @dataclasses.dataclass
@@ -195,8 +198,9 @@ class DeploymentArtifact:
                     latency.model_latency(session.cfg, session.sites, t0,
                                           seq_len=session.pcfg.seq_len)
                     if predict_step:
-                        _decode_step_s(session.cfg, session.sites,
-                                       session.workload, max_batch, max_seq)
+                        _decode_step_report(session.cfg, session.sites,
+                                            session.workload, max_batch,
+                                            max_seq)
                 export_oracle = ReplayOracle(orc.record.copy())
             elif not isinstance(orc, (AnalyticOracle, MeasuredOracle,
                                       ReplayOracle)):
@@ -205,7 +209,7 @@ class DeploymentArtifact:
                     f"({type(orc).__name__}) is not one of the serializable "
                     f"backends (analytic/measured/replay)")
         table = report = None
-        predicted = None
+        step_rep: Optional[latency.LatencyReport] = None
         with tuner.target_activation(target), \
                 oracle_mod.use_oracle(export_oracle):
             if include_table:
@@ -216,13 +220,14 @@ class DeploymentArtifact:
                                                seq_len=session.pcfg.seq_len)
             if predict_step:
                 try:
-                    predicted = _decode_step_s(session.cfg, session.sites,
-                                               session.workload, max_batch,
-                                               max_seq)
+                    step_rep = _decode_step_report(session.cfg,
+                                                   session.sites,
+                                                   session.workload,
+                                                   max_batch, max_seq)
                 except KeyError:
                     # a replay log recorded for another workload cannot
                     # score the decode shapes; ship without a prediction
-                    predicted = None
+                    step_rep = None
         metadata = {
             "strategy": session.last_strategy,
             "final_acc": session.final_acc,
@@ -230,7 +235,12 @@ class DeploymentArtifact:
             "latency_task_s": report.task_s if report else None,
             "latency_fixed_s": report.fixed_s if report else None,
             "fps": report.fps if report else None,
-            "predicted_step_s": predicted,
+            "predicted_step_s": step_rep.total_s if step_rep else None,
+            # the prediction's task/fixed split: serve-time recalibration
+            # scales the measured-kernel (task) half only, so it needs to
+            # know how much of the step the fixed ops account for
+            "predicted_step_task_s": step_rep.task_s if step_rep else None,
+            "predicted_step_fixed_s": step_rep.fixed_s if step_rep else None,
             "serve_defaults": {"max_batch": max_batch, "max_seq": max_seq},
         }
         return cls(cfg=session.cfg, params=session.params,
@@ -427,17 +437,109 @@ class DeploymentArtifact:
 
     # -- serving / inspection ----------------------------------------------
 
-    def predict_step_s(self, max_batch: int, max_seq: int) -> Optional[float]:
+    @property
+    def params_digest(self) -> str:
+        """Content hash of the (pruned) params — the value ``load``
+        validates against ``params.npz``. Computed once and cached."""
+        if getattr(self, "_params_digest_cache", None) is None:
+            self._params_digest_cache = _params_digest(
+                _flatten_params(self.params))
+        return self._params_digest_cache
+
+    @property
+    def measurement_tag(self) -> str:
+        """Identity under which engines serving this artifact record their
+        observed decode steps (``MeasurementLog.step_key``): the model
+        name qualified by the params digest, so two pruned variants of
+        the same architecture never collide in one log (the tuned digest
+        hashes target+oracle identity, which frontier siblings share)."""
+        return f"{self.cfg.name}@{self.params_digest}"
+
+    def predict_step_s(self, max_batch: int, max_seq: int, *,
+                       oracle: Optional[LatencyOracle] = None
+                       ) -> Optional[float]:
         """Oracle-predicted seconds per decode step at ``max_batch`` with a
         ``max_seq``-deep KV cache (None when a replay log cannot score the
-        decode shapes)."""
+        decode shapes). ``oracle`` overrides the artifact's own backend —
+        e.g. a recalibrated replay oracle."""
         with tuner.target_activation(self.target), \
-                oracle_mod.use_oracle(self.oracle):
+                oracle_mod.use_oracle(oracle or self.oracle):
             try:
-                return _decode_step_s(self.cfg, self.sites, self.workload,
-                                      max_batch, max_seq)
+                return _decode_step_report(self.cfg, self.sites,
+                                           self.workload, max_batch,
+                                           max_seq).total_s
             except KeyError:
                 return None
+
+    def recalibrated_oracle(self, measured: Union[float, MeasurementLog], *,
+                            max_batch: Optional[int] = None,
+                            max_seq: Optional[int] = None) -> ReplayOracle:
+        """Close the plan -> serve -> replan loop: fold a serve run's
+        *measured* decode step back into the replay oracle that planned
+        this artifact.
+
+        ``measured`` is either the observed seconds per decode step or a
+        :class:`MeasurementLog` an engine recorded into
+        (``ServeEngine(..., measurements=log)``), which is looked up
+        under this artifact's :attr:`measurement_tag` at
+        ``max_batch``/``max_seq`` (default: the artifact's serve
+        defaults). Every recorded kernel seconds in the bundled log is
+        scaled by measured/predicted, so the returned
+        :class:`ReplayOracle` predicts (approximately) what serving
+        observed — hand it to ``plan(oracle=...)`` or
+        ``PruningSession(oracle=...)`` to replan against reality.
+        Replay-backed artifacts only."""
+        if not isinstance(self.oracle, ReplayOracle):
+            raise ArtifactError(
+                f"recalibration needs a replay-backed artifact (this one "
+                f"is {self.oracle.name!r}): only a recorded log can be "
+                f"rescaled deterministically")
+        defaults = self.metadata.get("serve_defaults") or {}
+        mb = max_batch if max_batch is not None \
+            else defaults.get("max_batch", 8)
+        ms = max_seq if max_seq is not None else defaults.get("max_seq", 512)
+        if isinstance(measured, MeasurementLog):
+            key = MeasurementLog.step_key(self.measurement_tag, mb, ms)
+            found = measured.lookup(key)
+            if found is None:
+                raise ArtifactError(
+                    f"measurement log has no {key!r} entry — serve this "
+                    f"artifact with ServeEngine(..., measurements=log) at "
+                    f"max_batch={mb}, max_seq={ms} first")
+            measured = found
+        if measured <= 0.0:
+            raise ArtifactError(
+                f"measured decode step must be positive, got {measured!r}")
+        if (mb, ms) == (defaults.get("max_batch"), defaults.get("max_seq")):
+            total = self.metadata.get("predicted_step_s")
+            task = self.metadata.get("predicted_step_task_s")
+            fixed = self.metadata.get("predicted_step_fixed_s")
+        else:
+            with tuner.target_activation(self.target), \
+                    oracle_mod.use_oracle(self.oracle):
+                try:
+                    rep = _decode_step_report(self.cfg, self.sites,
+                                              self.workload, mb, ms)
+                except KeyError:
+                    rep = None
+            total = rep.total_s if rep else None
+            task = rep.task_s if rep else None
+            fixed = rep.fixed_s if rep else None
+        if not total:
+            raise ArtifactError(
+                f"this artifact records no decode-step prediction at "
+                f"max_batch={mb}, max_seq={ms}; nothing to recalibrate "
+                f"against")
+        # scaling touches only the recorded kernel seconds, so solve for
+        # the factor on the task half alone: fixed + factor*task = measured
+        # (the fixed-op estimates stay analytic in a replay backend). When
+        # the hardware beats even the fixed-op estimate, fall back to the
+        # total ratio — the factor must stay positive.
+        if task and fixed is not None and measured > fixed:
+            factor = (measured - fixed) / task
+        else:
+            factor = measured / total
+        return ReplayOracle(self.oracle.log.scaled(factor))
 
     def latency_report(self) -> latency.LatencyReport:
         """Whole-model latency recomputed from the embedded table under the

@@ -13,6 +13,7 @@ each candidate with the session machinery, and returns a :class:`Plan`:
     pl.frontier            # Pareto-optimal (accuracy up, latency down)
     pl.best                # cheapest candidate satisfying the constraints
     art = pl.export(path)  # the winning DeploymentArtifact
+    cat = pl.export_catalog(path)   # the whole frontier, router-servable
 
 The sweep is cheap by construction: all candidates on one target share
 the process-wide ProgramCache (keys carry the target+oracle
@@ -28,6 +29,8 @@ tests/test_planner.py).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
@@ -124,6 +127,46 @@ class Plan:
                 f"{self.accuracy_floor!r}{budget}; candidates:\n"
                 + "\n".join(c.describe() for c in self.candidates))
         return cand.export(path, **kw)
+
+    def export_catalog(self, path: str,
+                       candidates: Optional[List[PlanCandidate]] = None, *,
+                       max_batch: int = 8, max_seq: int = 512):
+        """Emit the whole Pareto ``frontier`` (or an explicit candidate
+        list) as an :class:`~repro.serve.router.ArtifactCatalog` at
+        ``path``: one validated ``DeploymentArtifact`` directory per
+        candidate (named ``<strategy>@<target>``) plus a ``catalog.json``
+        manifest whose routing numbers — accuracy, ranked latency, and
+        the oracle's decode-step prediction at the serve defaults — are
+        exactly the artifacts' own metadata. The returned catalog is
+        re-loaded from disk, so what you get is what a serving fleet
+        (``repro.serve.router.Router``) will read."""
+        from repro.serve.router import (ArtifactCatalog, CATALOG_NAME,
+                                        CATALOG_VERSION)
+        cands = list(candidates) if candidates is not None else self.frontier
+        if not cands:
+            raise PlanError("no candidates to export as a catalog")
+        os.makedirs(path, exist_ok=True)
+        entries = []
+        for c in cands:
+            name = f"{c.strategy}@{c.target}"
+            art = c.export(os.path.join(path, name), max_batch=max_batch,
+                           max_seq=max_seq)
+            entries.append({
+                "name": name, "path": name,
+                "strategy": c.strategy, "target": c.target,
+                "accuracy": c.accuracy, "latency_s": c.latency_s,
+                "predicted_step_s": art.metadata.get("predicted_step_s"),
+                "tuned_digest": art.tuned_digest,
+            })
+        blob = {"version": CATALOG_VERSION,
+                "accuracy_floor": self.accuracy_floor,
+                "latency_budget_s": self.latency_budget_s,
+                "entries": entries}
+        tmp = os.path.join(path, CATALOG_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1)
+        os.replace(tmp, os.path.join(path, CATALOG_NAME))
+        return ArtifactCatalog.load(path)
 
     def summary(self) -> str:
         lines = [c.describe() for c in self.candidates]

@@ -221,7 +221,8 @@ class PruningSession:
 
     def serve(self, *, params: Optional[Dict[str, Any]] = None,
               max_batch: int = 8, max_seq: int = 512,
-              seed: int = 0, predict_step: bool = True) -> ServeEngine:
+              seed: int = 0, predict_step: bool = True,
+              scheduler=None, measurements=None) -> ServeEngine:
         """A :class:`ServeEngine` over the current (pruned) params — or an
         explicit ``params`` override, e.g. the dense baseline.
 
@@ -236,17 +237,24 @@ class PruningSession:
         predicted vs measured step time — the observable oracle error the
         paper's compiler feedback loop closes. The prediction describes
         the *session's* model, so serving a ``params`` override (e.g. the
-        dense baseline) gets no prediction.
+        dense baseline) gets no prediction. ``scheduler`` (a
+        ``SchedulerConfig`` or policy name) and ``measurements`` (a
+        ``MeasurementLog`` the engine records its observed decode step
+        into) pass through to the engine.
         """
         if params is not None:
             return ServeEngine(self.cfg, params, max_batch=max_batch,
-                               max_seq=max_seq, seed=seed)
+                               max_seq=max_seq, seed=seed,
+                               scheduler=scheduler,
+                               measurements=measurements)
         art = DeploymentArtifact.from_session(
             self, max_batch=max_batch, max_seq=max_seq,
             predict_step=predict_step, include_table=False)
         return ServeEngine.from_artifact(art, max_batch=max_batch,
                                          max_seq=max_seq, seed=seed,
-                                         predict_step=predict_step)
+                                         predict_step=predict_step,
+                                         scheduler=scheduler,
+                                         measurements=measurements)
 
     # -- checkpointing ------------------------------------------------------
 

@@ -167,6 +167,28 @@ class MeasurementLog:
         return (f"gemm:{m}:{k}:{n}:{batch}:{dtype_bytes}:"
                 f"{block.bm}:{block.bk}:{block.bn}")
 
+    @staticmethod
+    def step_key(tag: str, max_batch: int, max_seq: int) -> str:
+        """Key for a serve-time *observed* decode step (whole model, one
+        token, ``max_batch`` rows, ``max_seq``-deep cache). Recorded by
+        ``ServeEngine.record_measurements``; read back by
+        ``DeploymentArtifact.recalibrated_oracle`` to close the
+        plan -> serve -> replan loop. Never consulted by the replay
+        scorer itself (which looks up ``gemm:`` keys only)."""
+        return f"serve_step:{tag}:{max_batch}:{max_seq}"
+
+    def scaled(self, factor: float, *, prefix: str = "gemm:"
+               ) -> "MeasurementLog":
+        """A new log with every ``prefix``-keyed entry multiplied by
+        ``factor`` (other entries copied verbatim) — the recalibration
+        primitive: serve-time observation / plan-time prediction becomes
+        the factor, and a :class:`ReplayOracle` over the result predicts
+        what serving actually measured."""
+        new = MeasurementLog(self.config)
+        new.entries = {k: (v * factor if k.startswith(prefix) else v)
+                       for k, v in self.entries.items()}
+        return new
+
     def record(self, key: str, seconds: float) -> None:
         self.entries[key] = float(seconds)
 

@@ -7,6 +7,13 @@ Serving a deployment artifact (the export -> load -> serve flow; the
 prune/tune session that produced it need not exist in this process):
 
   PYTHONPATH=src python -m repro.launch.serve --artifact path/to/artifact
+
+Serving a whole catalog (Plan.export_catalog output) through the
+SLO-aware router — per-request latency budgets dispatch to the cheapest
+satisfying frontier artifact:
+
+  PYTHONPATH=src python -m repro.launch.serve --catalog path/to/fleet \
+      --budget-ms 5,50 --requests 16
 """
 import argparse
 import os
@@ -29,6 +36,28 @@ def _parser():
                     help="serve a DeploymentArtifact directory (overrides "
                          "--arch/--reduced; params, config, and the tuned "
                          "decode-step prediction all come from the artifact)")
+    ap.add_argument("--catalog", default=None,
+                    help="serve an ArtifactCatalog directory (a "
+                         "Plan.export_catalog output) through the SLO "
+                         "router; overrides --artifact/--arch")
+    ap.add_argument("--budget-ms", default=None,
+                    help="comma-separated per-request latency budgets in "
+                         "ms, cycled over the synthetic requests "
+                         "(catalog mode; e.g. '5,50')")
+    ap.add_argument("--floor", type=float, default=None,
+                    help="per-request accuracy floor (catalog mode)")
+    ap.add_argument("--route-policy", default="quality",
+                    choices=["quality", "cheapest"])
+    ap.add_argument("--on-unroutable", default="flag",
+                    choices=["reject", "flag"])
+    ap.add_argument("--scheduler", default="bucketed",
+                    choices=["bucketed", "fifo", "wave"],
+                    help="engine admission policy (wave = the legacy "
+                         "blocking drain, kept for comparison)")
+    ap.add_argument("--record", default=None,
+                    help="record the observed decode step into this "
+                         "MeasurementLog JSON (feeds "
+                         "DeploymentArtifact.recalibrated_oracle)")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
@@ -38,14 +67,61 @@ def _parser():
     return ap
 
 
+def _requests(args, cfg, budgets):
+    import numpy as np
+    rng = np.random.default_rng(0)
+    from repro.serve.engine import Request
+    for i in range(args.requests):
+        budget = budgets[i % len(budgets)] if budgets else None
+        yield Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new,
+            temperature=0.0 if i % 2 == 0 else 0.8,
+            latency_budget_s=budget,
+            accuracy_floor=args.floor)
+
+
+def _print_stats(stats, indent=""):
+    for k, v in stats.items():
+        if k == "per_artifact":
+            for name, sub in v.items():
+                print(f"{indent}[{name}]")
+                _print_stats(sub, indent + "  ")
+        else:
+            print(f"{indent}{k}: {v}")
+
+
 def main():
     args = _early_env()
-    import numpy as np
     import jax
 
     from repro.configs import get_config, get_reduced_config
+    from repro.core.oracle import MeasurementLog
     from repro.models.model import init_params
-    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.engine import ServeEngine
+
+    log = MeasurementLog() if args.record else None
+    budgets = [float(b) * 1e-3 for b in args.budget_ms.split(",")] \
+        if args.budget_ms else None
+
+    if args.catalog:
+        from repro.serve.router import ArtifactCatalog, Router
+        catalog = ArtifactCatalog.load(args.catalog)
+        print(f"routing over catalog {args.catalog}:\n{catalog.summary()}")
+        router = Router(catalog, policy=args.route_policy,
+                        on_unroutable=args.on_unroutable,
+                        scheduler=args.scheduler, measurements=log)
+        cfg = catalog.artifact(catalog.names[0]).cfg
+        for req in _requests(args, cfg, budgets):
+            router.submit(req)
+        stats = router.run()
+        _print_stats(stats)
+        if log is not None:
+            log.save(args.record)
+            print(f"recorded {len(log)} measurement(s) -> {args.record}")
+        return
 
     art = None
     if args.artifact:
@@ -59,25 +135,23 @@ def main():
     if art is not None:
         eng = ServeEngine.from_artifact(
             art, max_batch=min(8, args.requests),
-            max_seq=args.prompt_len + args.max_new)
+            max_seq=args.prompt_len + args.max_new,
+            scheduler=args.scheduler, measurements=log)
         print(f"serving artifact {args.artifact} "
               f"(model={cfg.name}, target={art.target.name}, "
               f"oracle={art.oracle.name}, tuned_digest={art.tuned_digest})")
     else:
         params = init_params(jax.random.PRNGKey(0), cfg)
         eng = ServeEngine(cfg, params, max_batch=min(8, args.requests),
-                          max_seq=args.prompt_len + args.max_new)
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        eng.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new,
-            temperature=0.0 if i % 2 == 0 else 0.8))
+                          max_seq=args.prompt_len + args.max_new,
+                          scheduler=args.scheduler, measurements=log)
+    for req in _requests(args, cfg, budgets):
+        eng.submit(req)
     stats = eng.run()
-    for k, v in stats.items():
-        print(f"{k}: {v}")
+    _print_stats(stats)
+    if log is not None:
+        log.save(args.record)
+        print(f"recorded {len(log)} measurement(s) -> {args.record}")
 
 
 if __name__ == "__main__":

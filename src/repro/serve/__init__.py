@@ -1,3 +1,8 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Engine, Request, ServeEngine
+from repro.serve.router import (ArtifactCatalog, CatalogEntry, RouteError,
+                                Router)
+from repro.serve.scheduler import Scheduler, SchedulerConfig, SlotGroup
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["ArtifactCatalog", "CatalogEntry", "Engine", "Request",
+           "RouteError", "Router", "Scheduler", "SchedulerConfig",
+           "ServeEngine", "SlotGroup"]

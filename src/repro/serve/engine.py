@@ -1,14 +1,26 @@
-"""Batched serving engine: prefill + decode with a static-batch scheduler.
+"""Serving engine: prefill + decode behind a stepped scheduler core.
 
 Design (vLLM-style, sized down to what a CPU example can drive):
-  * fixed decode batch of ``max_batch`` slots, each slot holding one
-    request's KV cache rows (caches are allocated once for the whole batch,
-    slots turn over as requests finish — continuous batching);
-  * prompts are prefix-padded to a common length per admission wave and run
-    through the jitted prefill; decode then proceeds one token per step for
-    the *whole batch*;
+  * a global budget of ``max_batch`` decode slots, shared by every live
+    :class:`~repro.serve.scheduler.SlotGroup` (one admitted cohort of
+    equal-length prompts mid-decode);
+  * admission, prompt-length bucketing, and slot compaction live in
+    :mod:`repro.serve.scheduler`; the engine is the execution half —
+    :meth:`step` runs exactly one scheduling quantum (admit one cohort,
+    or advance every live group one decode token) and never blocks on a
+    queue, :meth:`serve_forever` loops it under an optional deadline;
+  * finished requests release their slots mid-decode (groups compact to
+    the surviving rows), so the next cohort prefils while earlier
+    groups are still decoding — continuous batching at group
+    granularity instead of the old blocking wave drain;
   * sampling: greedy or temperature, per request;
-  * finished slots are refilled from the queue on the next wave.
+  * :meth:`run` is the legacy front door: a thin wrapper over
+    ``serve_forever()`` with bit-identical greedy outputs.
+
+Engines optionally record their measured decode-step seconds into a
+:class:`~repro.core.oracle.MeasurementLog` (``measurements=``), which is
+how a serve run feeds the latency oracle that planned it — see
+``DeploymentArtifact.recalibrated_oracle``.
 
 For the production mesh the same engine drives the sharded serve_step
 (launch/serve.py); here everything stays single-device jit.
@@ -18,7 +30,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from collections import deque
 from typing import Any, Dict, List, Optional, Union
 
 import jax
@@ -26,7 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.oracle import MeasurementLog
 from repro.models.model import Model
+from repro.serve.scheduler import Scheduler, SchedulerConfig, SlotGroup
 
 
 @dataclasses.dataclass
@@ -35,34 +48,57 @@ class Request:
     prompt: np.ndarray              # (prompt_len,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
-    # filled by the engine:
+    # per-request SLO (consumed by repro.serve.router.Router; the plain
+    # engine ignores both): route to the cheapest artifact whose recorded
+    # accuracy >= accuracy_floor and predicted latency <= latency_budget_s
+    latency_budget_s: Optional[float] = None
+    accuracy_floor: Optional[float] = None
+    # filled by the engine / router:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    routed_to: Optional[str] = None
+    slo_infeasible: bool = False
 
 
 class ServeEngine:
+    """The stepped serving engine (the ``Engine`` half of the redesign;
+    :class:`~repro.serve.scheduler.Scheduler` is the policy half)."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512, seed: int = 0,
-                 predicted_step_s: Optional[float] = None):
+                 predicted_step_s: Optional[float] = None,
+                 scheduler: Union[SchedulerConfig, str, None] = None,
+                 measurements: Optional[MeasurementLog] = None,
+                 measurement_tag: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.model = Model(cfg)
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.key = jax.random.PRNGKey(seed)
-        self.queue: deque[Request] = deque()
+        if scheduler is None:
+            scheduler = SchedulerConfig()
+        elif isinstance(scheduler, str):
+            scheduler = SchedulerConfig(policy=scheduler)
+        if scheduler.policy == "wave" and scheduler.compact != "off":
+            # the legacy baseline steps every slot to the wave's end
+            scheduler = dataclasses.replace(scheduler, compact="off")
+        self.scheduler = Scheduler(scheduler)
+        self.groups: List[SlotGroup] = []
         self.done: List[Request] = []
         # the latency oracle's prediction for one decode step of this
-        # model at max_batch (PruningSession.serve computes it); run()
-        # reports it against the measured wall-clock per step so the
+        # model at max_batch (PruningSession.serve computes it); stats()
+        # report it against the measured wall-clock per step so the
         # oracle's error on the *real* executing model is observable
         self.predicted_step_s = predicted_step_s
-        self._decode_steps = 0
-        self._decode_wall_s = 0.0
-        self._step_times: List[float] = []
+        # a serve run can record its observed decode step into a
+        # MeasurementLog and hand it back to the oracle that planned it
+        self.measurements = measurements
+        self.measurement_tag = measurement_tag or cfg.name
+        self.reset_stats()
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
         self._decode = jax.jit(self.model.decode_step)
@@ -71,7 +107,10 @@ class ServeEngine:
     def from_artifact(cls, artifact: Union[str, "os.PathLike", Any], *,
                       max_batch: Optional[int] = None,
                       max_seq: Optional[int] = None, seed: int = 0,
-                      predict_step: bool = True) -> "ServeEngine":
+                      predict_step: bool = True,
+                      scheduler: Union[SchedulerConfig, str, None] = None,
+                      measurements: Optional[MeasurementLog] = None
+                      ) -> "ServeEngine":
         """Serve a :class:`~repro.api.artifact.DeploymentArtifact` (an
         instance or a directory path) without constructing a
         ``PruningSession`` — the cheap, restartable half of the pipeline.
@@ -100,95 +139,210 @@ class ServeEngine:
                 # target + oracle (None when its log cannot score it)
                 predicted = artifact.predict_step_s(max_batch, max_seq)
         return cls(artifact.cfg, artifact.params, max_batch=max_batch,
-                   max_seq=max_seq, seed=seed, predicted_step_s=predicted)
+                   max_seq=max_seq, seed=seed, predicted_step_s=predicted,
+                   scheduler=scheduler, measurements=measurements,
+                   measurement_tag=artifact.measurement_tag)
+
+    # -- queueing -----------------------------------------------------------
 
     def submit(self, req: Request):
         req.t_submit = time.time()
-        self.queue.append(req)
+        self.scheduler.submit(req)
 
-    # -- one admission wave: take up to max_batch requests, run them --------
+    @property
+    def pending(self) -> List[Request]:
+        """Requests admitted to the scheduler but not yet prefilled."""
+        return self.scheduler.pending
 
-    def _run_wave(self) -> None:
-        # admit a batch of equal-length prompts (no pad pollution of the
-        # causal cache); unequal lengths wait for the next wave
-        wave: List[Request] = []
-        skipped: List[Request] = []
-        plen = None
-        while self.queue and len(wave) < self.max_batch:
-            r = self.queue.popleft()
-            if plen is None:
-                plen = len(r.prompt)
-            if len(r.prompt) == plen:
-                wave.append(r)
-            else:
-                skipped.append(r)
-        for r in reversed(skipped):
-            self.queue.appendleft(r)
-        if not wave:
-            return
-        B = len(wave)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(wave):
+    @property
+    def has_work(self) -> bool:
+        return bool(len(self.scheduler) or self.groups)
+
+    # -- the stepped core ---------------------------------------------------
+
+    def step(self) -> Dict[str, Any]:
+        """One non-blocking scheduling quantum.
+
+        Admits one cohort (prefill + first sampled token) when the
+        scheduler yields one for the free slots; otherwise advances every
+        live group one decode token; otherwise reports ``idle``. Returns
+        a small event record — callers interleave ``step()`` with their
+        own work (the router round-robins it across engines)."""
+        t0 = time.perf_counter()
+        try:
+            free = self.max_batch - sum(g.width for g in self.groups)
+            batch = self.scheduler.select(free,
+                                          live_groups=len(self.groups))
+            if batch:
+                self._admit(batch)
+                return {"event": "prefill", "admitted": len(batch),
+                        "prompt_len": len(batch[0].prompt),
+                        "live_groups": len(self.groups)}
+            if self.groups:
+                new_tokens = self._decode_tick()
+                return {"event": "decode",
+                        "live_groups": len(self.groups),
+                        "new_tokens": new_tokens}
+            return {"event": "idle", "pending": len(self.scheduler)}
+        finally:
+            # wall time accrues per quantum, so an engine driven by an
+            # external loop (the router round-robin) still reports a
+            # meaningful tokens_per_s
+            self._wall_s += time.perf_counter() - t0
+
+    def serve_forever(self, deadline_s: Optional[float] = None
+                      ) -> Dict[str, Any]:
+        """Step until drained, or until ``deadline_s`` wall seconds pass.
+
+        Returns :meth:`stats`. The engine is resumable: a deadline exit
+        leaves pending requests and live groups intact, and a later call
+        (or :meth:`step`) picks up exactly where it stopped."""
+        t0 = time.time()
+        while True:
+            if deadline_s is not None and time.time() - t0 >= deadline_s:
+                break
+            if self.step()["event"] == "idle":
+                break
+        if self.measurements is not None and self._step_times:
+            self.record_measurements()
+        return self.stats()
+
+    def run(self) -> Dict[str, Any]:
+        """Legacy blocking drain — a thin wrapper over
+        :meth:`serve_forever` with identical greedy outputs."""
+        return self.serve_forever()
+
+    # -- internal: admission + decode ---------------------------------------
+
+    def _admit(self, reqs: List[Request]) -> SlotGroup:
+        plen = len(reqs[0].prompt)
+        toks = np.zeros((len(reqs), plen), np.int32)
+        for i, r in enumerate(reqs):
             toks[i] = r.prompt
-        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)})
         t_first = time.time()
-        for r in wave:
+        for r in reqs:
             r.t_first_token = t_first
-
-        max_new = max(r.max_new_tokens for r in wave)
-        cur = self._sample(logits, wave)
-        for i, r in enumerate(wave):
+        cur = self._sample(logits, reqs)
+        for i, r in enumerate(reqs):
             r.output.append(int(cur[i, 0]))
-        for step in range(1, max_new):
+        self._prefills += 1
+        group = SlotGroup(reqs, caches, cur, plen)
+        self.groups.append(group)
+        self._retire(group)
+        return group
+
+    def _decode_tick(self) -> int:
+        new_tokens = 0
+        self._ticks += 1
+        for group in list(self.groups):
             t0 = time.perf_counter()
-            logits, caches = self._decode(self.params, cur, caches)
+            logits, group.caches = self._decode(self.params, group.cur,
+                                                group.caches)
             jax.block_until_ready(logits)
             dt = time.perf_counter() - t0
             self._decode_wall_s += dt
             self._step_times.append(dt)
+            self._step_widths.append(group.width)
             self._decode_steps += 1
-            cur = self._sample(logits, wave)
-            now = time.time()
-            for i, r in enumerate(wave):
-                if len(r.output) < r.max_new_tokens:
-                    r.output.append(int(cur[i, 0]))
-                    if len(r.output) == r.max_new_tokens:
-                        r.done, r.t_done = True, now
-        now = time.time()
-        for r in wave:
-            r.done = True
-            r.t_done = r.t_done or now
-            self.done.append(r)
+            self._slot_steps += group.width
+            self._active_slot_steps += sum(
+                1 for r in group.requests if r is not None)
+            group.cur = self._sample(logits, group.requests)
+            for i, r in enumerate(group.requests):
+                if r is not None and len(r.output) < r.max_new_tokens:
+                    r.output.append(int(group.cur[i, 0]))
+                    new_tokens += 1
+            self._retire(group)
+        return new_tokens
 
-    def _sample(self, logits: jax.Array, wave: List[Request]) -> jax.Array:
+    def _retire(self, group: SlotGroup) -> None:
+        """Move finished requests out of their rows, drop the group when
+        empty, and compact the surviving rows (freed slots return to the
+        global budget, so the next cohort can be admitted mid-decode)."""
+        now = time.time()
+        for i, r in enumerate(group.requests):
+            if r is not None and len(r.output) >= r.max_new_tokens:
+                r.done, r.t_done = True, now
+                self.done.append(r)
+                group.requests[i] = None
+        if all(r is None for r in group.requests):
+            self.groups.remove(group)
+            return
+        group.compact(self.scheduler.config.compact)
+
+    def _sample(self, logits: jax.Array,
+                rows: List[Optional[Request]]) -> jax.Array:
         self.key, sub = jax.random.split(self.key)
         greedy = jnp.argmax(logits[:, 0], axis=-1)
-        temps = jnp.asarray([r.temperature for r in wave])[:, None]
+        temps = jnp.asarray([r.temperature if r is not None else 0.0
+                             for r in rows])[:, None]
         noisy = jax.random.categorical(
             sub, logits[:, 0] / jnp.maximum(temps, 1e-6))
         tok = jnp.where(temps[:, 0] > 0, noisy, greedy)
         return tok[:, None].astype(jnp.int32)
 
+    # -- stats + measurement feedback ---------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero every counter and forget retired requests (their Request
+        objects keep their outputs). Benchmarks use this to exclude a
+        warmup drain from a timed one."""
+        self.done = []
+        self._prefills = 0
+        self._ticks = 0
+        self._decode_steps = 0
+        self._decode_wall_s = 0.0
+        self._slot_steps = 0
+        self._active_slot_steps = 0
+        self._step_times: List[float] = []
+        self._step_widths: List[int] = []
+        self._wall_s = 0.0
+
+    def record_measurements(self, log: Optional[MeasurementLog] = None
+                            ) -> Optional[str]:
+        """Record the observed decode step (median over this engine's
+        timed steps) into ``log`` (default: the attached ``measurements``
+        log) under :meth:`MeasurementLog.step_key`; returns the key, or
+        None when no step has run yet.
+
+        The key claims a step at this engine's batch shape, but
+        compaction runs many steps at narrower widths (which are cheaper)
+        — so only the samples taken at the *widest* width observed (the
+        full ``max_batch`` whenever it ever filled) enter the median."""
+        log = self.measurements if log is None else log
+        if log is None:
+            raise ValueError("no MeasurementLog to record into; construct "
+                             "the engine with measurements=MeasurementLog() "
+                             "or pass one explicitly")
+        if not self._step_times:
+            return None
+        widest = max(self._step_widths)
+        samples = [t for t, w in zip(self._step_times, self._step_widths)
+                   if w == widest]
+        key = MeasurementLog.step_key(self.measurement_tag, self.max_batch,
+                                      self.max_seq)
+        log.record(key, float(np.median(np.asarray(samples))))
+        return key
+
     @staticmethod
     def _pct(xs: List[float], q: float) -> float:
+        """Percentile with an empty-sample guard: an idle engine reports
+        zeros, never NaN."""
         return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
-    def run(self) -> Dict[str, Any]:
-        t0 = time.time()
-        waves = 0
-        while self.queue:
-            self._run_wave()
-            waves += 1
-        wall = time.time() - t0
+    def stats(self) -> Dict[str, Any]:
         total_tokens = sum(len(r.output) for r in self.done)
         ttfts = [r.t_first_token - r.t_submit for r in self.done]
         decodes = [r.t_done - r.t_first_token for r in self.done]
         stats = {
             "requests": len(self.done),
-            "waves": waves,
+            "waves": self._prefills,          # legacy name for prefills
+            "prefills": self._prefills,
             "total_new_tokens": total_tokens,
-            "wall_s": wall,
-            "tokens_per_s": total_tokens / max(wall, 1e-9),
+            "wall_s": self._wall_s,
+            "tokens_per_s": total_tokens / max(self._wall_s, 1e-9),
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
             # tail latency: TTFT and per-request decode time across
             # requests, plus per-decode-step percentiles — the serve-time
@@ -199,9 +353,19 @@ class ServeEngine:
             "p95_decode_s": self._pct(decodes, 95),
             "p50_step_s": self._pct(self._step_times, 50),
             "p95_step_s": self._pct(self._step_times, 95),
+            # scheduler-core accounting: decode_steps counts jitted decode
+            # calls (one per live group per tick), slot_steps the batch
+            # rows they carried, active_slot_steps the rows doing useful
+            # work; occupancy is useful rows over the global slot budget
+            "decode_steps": self._decode_steps,
+            "decode_ticks": self._ticks,
+            "slot_steps": self._slot_steps,
+            "active_slot_steps": self._active_slot_steps,
+            "mean_batch_occupancy": (
+                self._active_slot_steps / (self._ticks * self.max_batch)
+                if self._ticks else 0.0),
             # predicted-vs-measured step latency: how wrong the latency
             # oracle is on the model that is actually executing
-            "decode_steps": self._decode_steps,
             "measured_step_s": self._decode_wall_s / self._decode_steps
             if self._decode_steps else 0.0,
             "predicted_step_s": self.predicted_step_s,
@@ -211,3 +375,8 @@ class ServeEngine:
             stats["oracle_rel_error"] = \
                 (self.predicted_step_s - meas) / max(meas, 1e-12)
         return stats
+
+
+#: The redesign's name for the execution half; ``ServeEngine`` is kept as
+#: the primary name because every artifact/session entry point returns it.
+Engine = ServeEngine

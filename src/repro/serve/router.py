@@ -1,0 +1,343 @@
+"""SLO-aware artifact router: per-request constraints at serve time.
+
+The planner's front door is a pair of constraints (accuracy floor,
+latency budget) — this module keeps that language alive *per request*
+instead of freezing it at deploy time. ``Plan.export_catalog(dir)``
+writes the whole Pareto frontier as an :class:`ArtifactCatalog` (one
+validated :class:`DeploymentArtifact` per frontier candidate plus a
+``catalog.json`` manifest), and a :class:`Router` admits
+:class:`~repro.serve.engine.Request`\\ s carrying ``latency_budget_s`` /
+``accuracy_floor`` and dispatches each to the catalog entry that
+satisfies them:
+
+    catalog = plan(...).export_catalog("fleet/")      # or ArtifactCatalog.load
+    router = Router(catalog)
+    router.submit(Request(rid=0, prompt=p, max_new_tokens=16,
+                          latency_budget_s=5e-3))     # -> fast artifact
+    router.submit(Request(rid=1, prompt=p, max_new_tokens=16,
+                          latency_budget_s=1.0,
+                          accuracy_floor=0.9))        # -> accurate artifact
+    stats = router.run()
+
+Routing uses the *oracle-predicted* step latency recorded in each
+artifact (``predicted_step_s`` × ``max_new_tokens`` approximates the
+request's decode time) and the recorded accuracy. The default policy
+spends the budget on quality: among feasible entries, highest accuracy
+wins and ties break toward the cheaper entry; ``policy="cheapest"``
+implements the strict lowest-latency-that-satisfies reading. Requests no
+entry can satisfy are rejected with :class:`RouteError` (or best-effort
+dispatched and flagged with ``on_unroutable="flag"``).
+
+Per-artifact engines spin up lazily on first dispatch and share the
+router's stats: per-artifact token/s, a routing histogram, and the
+measured budget-violation rate — the serve-time check that the planner's
+constraint math survived contact with the hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Iterator, List, Optional, Union
+
+from repro.api.artifact import ArtifactError, DeploymentArtifact
+from repro.core.oracle import MeasurementLog
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import SchedulerConfig
+
+CATALOG_VERSION = 1
+CATALOG_NAME = "catalog.json"
+
+POLICIES = ("quality", "cheapest")
+ON_UNROUTABLE = ("reject", "flag")
+
+
+class RouteError(ValueError):
+    """No catalog entry satisfies a request's SLO (or the catalog is
+    unusable for routing)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogEntry:
+    """One frontier artifact in the manifest — the numbers the router
+    routes by, pinned at export time and cross-checked against the
+    artifact's own metadata on load."""
+
+    name: str                       # "<strategy>@<target>"
+    path: str                       # directory, relative to catalog root
+    strategy: str
+    target: str
+    accuracy: float
+    latency_s: float                # the plan's ranked whole-model latency
+    predicted_step_s: Optional[float]   # oracle decode step @ serve defaults
+    tuned_digest: Optional[str]
+
+    def describe(self) -> str:
+        step = ("?" if self.predicted_step_s is None
+                else f"{self.predicted_step_s * 1e3:.3f}ms")
+        return (f"{self.name:>20s}  acc={self.accuracy:.3f}  "
+                f"step={step}")
+
+
+class ArtifactCatalog:
+    """A directory of frontier :class:`DeploymentArtifact`\\ s plus the
+    ``catalog.json`` manifest. :meth:`load` validates every member
+    through ``DeploymentArtifact.load`` (a tampered member raises the
+    usual :class:`ArtifactError`) and refuses a manifest whose routing
+    numbers disagree with its artifacts' own metadata."""
+
+    def __init__(self, root: str, entries: List[CatalogEntry],
+                 artifacts: Dict[str, DeploymentArtifact]):
+        self.root = root
+        self.entries = list(entries)
+        self._artifacts = dict(artifacts)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self) -> Iterator[CatalogEntry]:
+        return iter(self.entries)
+
+    @property
+    def names(self) -> List[str]:
+        return [e.name for e in self.entries]
+
+    def get(self, name: str) -> CatalogEntry:
+        for e in self.entries:
+            if e.name == name:
+                return e
+        raise KeyError(f"no catalog entry {name!r}; entries: {self.names}")
+
+    def artifact(self, name: str) -> DeploymentArtifact:
+        self.get(name)
+        return self._artifacts[name]
+
+    def summary(self) -> str:
+        return "\n".join(e.describe() for e in self.entries)
+
+    @classmethod
+    def load(cls, root: str) -> "ArtifactCatalog":
+        manifest = os.path.join(root, CATALOG_NAME)
+        if not os.path.exists(manifest):
+            raise ArtifactError(f"no artifact catalog at {root!r} "
+                                f"(missing {CATALOG_NAME})")
+        try:
+            with open(manifest) as f:
+                blob = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ArtifactError(f"malformed catalog manifest at {root!r}: "
+                                f"{type(e).__name__}: {e}") from e
+        ver = blob.get("version")
+        if ver != CATALOG_VERSION:
+            raise ArtifactError(
+                f"unsupported catalog version {ver!r} (this build reads "
+                f"version {CATALOG_VERSION})")
+        entries, artifacts = [], {}
+        for d in blob.get("entries", []):
+            try:
+                entry = CatalogEntry(**d)
+            except TypeError as e:
+                raise ArtifactError(
+                    f"malformed catalog entry in {manifest!r}: {e}") from e
+            # a tampered member fails DeploymentArtifact.load's own
+            # fingerprint validation — the catalog adds no second scheme
+            art = DeploymentArtifact.load(os.path.join(root, entry.path))
+            meta = art.metadata
+            recorded = (meta.get("final_acc"), meta.get("latency_total_s"),
+                        meta.get("predicted_step_s"), art.tuned_digest)
+            claimed = (entry.accuracy, entry.latency_s,
+                       entry.predicted_step_s, entry.tuned_digest)
+            if recorded != claimed:
+                raise ArtifactError(
+                    f"catalog entry {entry.name!r} does not match its "
+                    f"artifact's metadata (manifest claims {claimed!r}, "
+                    f"artifact records {recorded!r}) — the manifest or the "
+                    f"artifact was modified after export")
+            entries.append(entry)
+            artifacts[entry.name] = art
+        if not entries:
+            raise ArtifactError(f"catalog at {root!r} lists no artifacts")
+        return cls(root, entries, artifacts)
+
+
+def _step_or_inf(e: CatalogEntry) -> float:
+    """Sort key: an entry without a prediction never wins a latency
+    comparison."""
+    return e.predicted_step_s if e.predicted_step_s is not None \
+        else float("inf")
+
+
+class Router:
+    """Dispatch requests to the catalog entry that satisfies their SLO,
+    over lazily-constructed per-artifact engines."""
+
+    def __init__(self, catalog: ArtifactCatalog, *,
+                 policy: str = "quality",
+                 on_unroutable: str = "reject",
+                 max_batch: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 seed: int = 0,
+                 scheduler: Union[SchedulerConfig, str, None] = None,
+                 measurements: Optional[MeasurementLog] = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown routing policy {policy!r}; "
+                             f"policies: {list(POLICIES)}")
+        if on_unroutable not in ON_UNROUTABLE:
+            raise ValueError(f"unknown on_unroutable mode "
+                             f"{on_unroutable!r}; modes: "
+                             f"{list(ON_UNROUTABLE)}")
+        self.catalog = catalog
+        self.policy = policy
+        self.on_unroutable = on_unroutable
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.seed = seed
+        self.scheduler = scheduler
+        self.measurements = measurements
+        self._engines: Dict[str, ServeEngine] = {}
+        self._histogram: Dict[str, int] = {}
+        self._flagged = 0
+        self._rejected = 0
+        self._wall_s = 0.0
+
+    # -- the routing decision ----------------------------------------------
+
+    @staticmethod
+    def estimate_request_s(entry: CatalogEntry,
+                           req: Request) -> Optional[float]:
+        """Oracle-predicted serve time for ``req`` on ``entry``: the
+        decode-step prediction times the token budget (the first token
+        is prefill-priced as one step). None when the entry carries no
+        prediction — such an entry can never promise a budget."""
+        if entry.predicted_step_s is None:
+            return None
+        return entry.predicted_step_s * max(1, req.max_new_tokens)
+
+    def route(self, req: Request) -> CatalogEntry:
+        """Pure routing decision (no enqueue). Raises :class:`RouteError`
+        when nothing satisfies the request and the router rejects; in
+        ``flag`` mode returns the fastest entry best-effort and marks
+        ``req.slo_infeasible``."""
+        feasible = []
+        for e in self.catalog:
+            if req.accuracy_floor is not None \
+                    and e.accuracy < req.accuracy_floor:
+                continue
+            if req.latency_budget_s is not None:
+                est = self.estimate_request_s(e, req)
+                if est is None or est > req.latency_budget_s:
+                    continue
+            feasible.append(e)
+        if feasible:
+            if self.policy == "quality":
+                # the budget buys accuracy; equal accuracy -> cheaper wins
+                return min(feasible, key=lambda e: (-e.accuracy,
+                                                    _step_or_inf(e)))
+            # cheapest satisfying entry
+            return min(feasible, key=lambda e: (_step_or_inf(e),
+                                                -e.accuracy))
+        if self.on_unroutable == "reject":
+            self._rejected += 1
+            raise RouteError(
+                f"no catalog entry satisfies request {req.rid} "
+                f"(accuracy_floor={req.accuracy_floor!r}, "
+                f"latency_budget_s={req.latency_budget_s!r}, "
+                f"max_new_tokens={req.max_new_tokens}); catalog:\n"
+                + self.catalog.summary())
+        # flag: best-effort on the fastest entry, visibly marked
+        req.slo_infeasible = True
+        self._flagged += 1
+        return min(self.catalog, key=lambda e: (_step_or_inf(e),
+                                                -e.accuracy))
+
+    # -- dispatch + drive ---------------------------------------------------
+
+    def engine(self, name: str) -> ServeEngine:
+        """The (lazily constructed) engine serving catalog entry
+        ``name``."""
+        if name not in self._engines:
+            art = self.catalog.artifact(name)
+            self._engines[name] = ServeEngine.from_artifact(
+                art, max_batch=self.max_batch, max_seq=self.max_seq,
+                seed=self.seed + len(self._engines),
+                scheduler=self.scheduler, measurements=self.measurements)
+        return self._engines[name]
+
+    def submit(self, req: Request) -> str:
+        """Route ``req`` and enqueue it on that artifact's engine;
+        returns the entry name (also recorded on ``req.routed_to``)."""
+        entry = self.route(req)
+        req.routed_to = entry.name
+        self._histogram[entry.name] = self._histogram.get(entry.name, 0) + 1
+        self.engine(entry.name).submit(req)
+        return entry.name
+
+    @property
+    def has_work(self) -> bool:
+        return any(e.has_work for e in self._engines.values())
+
+    def step(self) -> Dict[str, Any]:
+        """One quantum across the fleet: every engine with work advances
+        one :meth:`ServeEngine.step`. Wall time accrues per quantum (as
+        in the engine), so a fleet driven by an external ``step()`` loop
+        still reports a meaningful ``tokens_per_s``."""
+        t0 = time.perf_counter()
+        try:
+            events = {name: eng.step()["event"]
+                      for name, eng in self._engines.items()
+                      if eng.has_work}
+            return {"event": "fleet" if events else "idle",
+                    "engines": events}
+        finally:
+            self._wall_s += time.perf_counter() - t0
+
+    def run(self, deadline_s: Optional[float] = None) -> Dict[str, Any]:
+        """Round-robin the fleet until drained (or ``deadline_s``);
+        returns :meth:`stats`."""
+        t0 = time.time()
+        while self.has_work:
+            if deadline_s is not None and time.time() - t0 >= deadline_s:
+                break
+            self.step()
+        if self.measurements is not None:
+            for eng in self._engines.values():
+                if eng._step_times:
+                    eng.record_measurements()
+        return self.stats()
+
+    def reset_stats(self) -> None:
+        """Zero the router's counters and every live engine's stats
+        (engines and their compiled programs are kept — benchmarks use
+        this to exclude a warmup drain from a timed one)."""
+        for eng in self._engines.values():
+            eng.reset_stats()
+        self._histogram = {}
+        self._flagged = 0
+        self._rejected = 0
+        self._wall_s = 0.0
+
+    def stats(self) -> Dict[str, Any]:
+        """Fleet-wide serving stats: the routing histogram, per-artifact
+        engine stats, and the measured budget-violation rate."""
+        per_artifact = {name: eng.stats()
+                        for name, eng in self._engines.items()}
+        done = [r for eng in self._engines.values() for r in eng.done]
+        budgeted = [r for r in done if r.latency_budget_s is not None]
+        violations = [r for r in budgeted
+                      if r.t_done - r.t_submit > r.latency_budget_s]
+        total_tokens = sum(len(r.output) for r in done)
+        return {
+            "requests": len(done),
+            "total_new_tokens": total_tokens,
+            "wall_s": self._wall_s,
+            "tokens_per_s": total_tokens / max(self._wall_s, 1e-9),
+            "routing": dict(self._histogram),
+            "rejected": self._rejected,
+            "flagged": self._flagged,
+            "budgeted_requests": len(budgeted),
+            "budget_violations": len(violations),
+            "budget_violation_rate": (len(violations) / len(budgeted)
+                                      if budgeted else 0.0),
+            "per_artifact": per_artifact,
+        }

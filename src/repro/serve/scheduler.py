@@ -1,0 +1,224 @@
+"""Scheduler core for the serving engine: admission + slot bookkeeping.
+
+The old engine served in *waves*: admit up to ``max_batch`` equal-length
+prompts, decode the whole batch ``max(max_new_tokens)`` steps, repeat.
+Two well-known schedulers' diseases follow: head-of-line blocking (the
+queue head's prompt length defines the wave, so one odd-length request
+forces a tiny batch while a full batch's worth of other lengths waits)
+and decode waste (every slot steps until the *longest* request in the
+wave finishes). This module is the cure, split out of the engine so the
+policy is inspectable and testable on its own:
+
+``Scheduler``
+    Pending requests live in prompt-length buckets (prefill needs equal
+    lengths — the causal KV cache has no per-row padding mask).
+    Admission picks the bucket that fills the free slots best, and
+    orders requests *within* a bucket by ``max_new_tokens`` so a decode
+    group finishes together instead of dragging finished slots through a
+    long tail. The legacy ``fifo``/``wave`` policies keep the old
+    head-of-line behavior for comparison benchmarks.
+
+``SlotGroup``
+    One admitted cohort mid-decode: its requests (row -> request), its
+    KV caches, and the current token per row. Groups shrink as requests
+    finish: :func:`gather_cache_rows` gathers the still-active rows into
+    a smaller batch (``compact="pow2"`` snaps widths to powers of two so
+    the decode jit compiles O(log max_batch) shapes, not one per width),
+    and the freed slots go back to the engine's global budget — which is
+    what lets the engine admit the next group *mid-decode* instead of at
+    the end of the wave (continuous batching at group granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache
+
+POLICIES = ("bucketed", "fifo", "wave")
+COMPACTION = ("pow2", "exact", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission + compaction policy for the serving engine.
+
+    ``policy``:
+      * ``bucketed`` (default) — fullest prompt-length bucket first,
+        requests inside a bucket grouped by ``max_new_tokens``; new
+        groups are admitted whenever slots are free, including
+        mid-decode of other groups.
+      * ``fifo`` — the oldest pending request's bucket, in arrival
+        order (head-of-line semantics), but still admits mid-decode.
+      * ``wave`` — the legacy engine verbatim: ``fifo`` admission, one
+        group at a time, no compaction. Kept as the measurable baseline
+        for ``benchmarks/serve_bench.py``.
+
+    ``compact``: ``pow2`` (default) gathers a group's still-active rows
+    into the next power-of-two width once that halves the batch;
+    ``exact`` compacts to the exact active count on every finish (one
+    decode retrace per width); ``off`` never compacts (legacy).
+    """
+
+    policy: str = "bucketed"
+    compact: str = "pow2"
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown scheduler policy {self.policy!r}; "
+                             f"policies: {list(POLICIES)}")
+        if self.compact not in COMPACTION:
+            raise ValueError(f"unknown compaction mode {self.compact!r}; "
+                             f"modes: {list(COMPACTION)}")
+
+
+class Scheduler:
+    """Prompt-length-bucketed admission over pending requests.
+
+    The engine asks :meth:`select` for the next cohort each step; the
+    scheduler answers with a list of equal-prompt-length requests sized
+    to the free slots (or ``[]`` when nothing should be admitted yet).
+    """
+
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        self._buckets: Dict[int, Deque[Tuple[int, Any]]] = {}
+        self._arrival = itertools.count()
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    @property
+    def pending(self) -> List[Any]:
+        """All pending requests in arrival order (read-only snapshot)."""
+        flat = [t for b in self._buckets.values() for t in b]
+        return [r for _, r in sorted(flat, key=lambda t: t[0])]
+
+    def submit(self, req) -> None:
+        plen = len(req.prompt)
+        self._buckets.setdefault(plen, deque()).append(
+            (next(self._arrival), req))
+
+    def _pick_bucket(self, free_slots: int) -> Optional[int]:
+        live = {k: b for k, b in self._buckets.items() if b}
+        if not live:
+            return None
+        if self.config.policy in ("fifo", "wave"):
+            # head-of-line: the oldest pending request defines the cohort
+            return min(live, key=lambda k: live[k][0][0])
+        # bucketed: best fill of the free slots; ties go to the oldest head
+        return max(live, key=lambda k: (min(len(live[k]), free_slots),
+                                        -live[k][0][0]))
+
+    def select(self, free_slots: int, *, live_groups: int = 0) -> List[Any]:
+        """Admission decision: up to ``free_slots`` equal-length requests
+        for one prefill, or ``[]``. ``wave`` policy refuses to admit
+        while any group is still decoding (the legacy blocking drain)."""
+        if free_slots <= 0 or not len(self):
+            return []
+        if self.config.policy == "wave" and live_groups > 0:
+            return []
+        key = self._pick_bucket(free_slots)
+        if key is None:
+            return []
+        bucket = self._buckets[key]
+        take = min(len(bucket), free_slots)
+        if self.config.policy == "bucketed":
+            # group similar decode lengths so the cohort finishes together
+            # (the wave engine steps every slot max(max_new_tokens) times)
+            ordered = sorted(bucket, key=lambda t: (t[1].max_new_tokens,
+                                                    t[0]))
+            chosen = ordered[:take]
+            chosen_ids = {t[0] for t in chosen}
+            rest = [t for t in bucket if t[0] not in chosen_ids]
+            bucket.clear()
+            bucket.extend(rest)
+        else:
+            chosen = [bucket.popleft() for _ in range(take)]
+        return [r for _, r in chosen]
+
+
+# ---------------------------------------------------------------------------
+# Decode groups + cache-row gathering
+# ---------------------------------------------------------------------------
+
+def _gather(node, idx, axis: int):
+    if isinstance(node, KVCache):
+        # slot_pos is shared across rows (cache_len,) — only k/v have a
+        # batch axis
+        return node._replace(k=jnp.take(node.k, idx, axis=axis),
+                             v=jnp.take(node.v, idx, axis=axis))
+    if isinstance(node, dict):
+        return {k: _gather(v, idx, axis) for k, v in node.items()}
+    if isinstance(node, tuple) and hasattr(node, "_fields"):
+        # recurrent states (RGLRUState/RWKVState): every field is
+        # batch-axis aligned
+        return type(node)(*(_gather(f, idx, axis) for f in node))
+    if isinstance(node, tuple):
+        return tuple(_gather(v, idx, axis) for v in node)
+    return jnp.take(node, idx, axis=axis)
+
+
+def gather_cache_rows(caches: Dict[str, Any], idx) -> Dict[str, Any]:
+    """Select batch rows ``idx`` from a prefill/decode cache pytree.
+
+    Stacked (scanned) layer caches carry a leading period axis, so their
+    batch axis is 1; tail caches are batch-leading; the decode position
+    is a scalar shared by every row and passes through unchanged."""
+    idx = jnp.asarray(idx, jnp.int32)
+    out = dict(caches)
+    out["stack"] = _gather(caches["stack"], idx, 1)
+    out["tail"] = _gather(caches["tail"], idx, 0)
+    return out
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+class SlotGroup:
+    """One admitted cohort mid-decode. ``requests[row]`` is the request
+    fed by that batch row, or ``None`` for a pad row left by power-of-two
+    compaction (its tokens are computed and discarded)."""
+
+    def __init__(self, requests: List[Any], caches: Dict[str, Any], cur,
+                 plen: int):
+        self.requests: List[Optional[Any]] = list(requests)
+        self.caches = caches
+        self.cur = cur
+        self.plen = plen
+
+    @property
+    def width(self) -> int:
+        return len(self.requests)
+
+    @property
+    def active_rows(self) -> List[int]:
+        return [i for i, r in enumerate(self.requests)
+                if r is not None and len(r.output) < r.max_new_tokens]
+
+    @property
+    def done(self) -> bool:
+        return not self.active_rows
+
+    def compact(self, mode: str) -> int:
+        """Shrink the batch to the still-active rows per ``mode``;
+        returns the number of slots freed (0 when nothing changed)."""
+        if mode == "off" or self.done:
+            return 0
+        active = self.active_rows
+        target = len(active) if mode == "exact" else _pow2_at_least(
+            len(active))
+        if target >= self.width:
+            return 0
+        rows = active + [active[0]] * (target - len(active))
+        freed = self.width - target
+        self.requests = [self.requests[i] for i in active] \
+            + [None] * (target - len(active))
+        self.caches = gather_cache_rows(self.caches, rows)
+        self.cur = jnp.take(self.cur, jnp.asarray(rows, jnp.int32), axis=0)
+        return freed

@@ -1,0 +1,268 @@
+"""SLO-aware artifact router (ISSUE 5): Plan.export_catalog -> Router.
+
+Acceptance contract: two requests with different ``latency_budget_s``
+land on *different* frontier artifacts from one ``Plan.export_catalog``
+output; requests nothing can satisfy are rejected (or flagged); a
+tampered catalog member is refused through the existing ArtifactError
+paths; and a serve run's measured decode step recalibrates the replay
+oracle that planned the artifact.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CPruneConfig, DeploymentArtifact, MeasuredOracle,
+                       MeasurementConfig, MeasurementLog, PruningSession,
+                       TrainHooks, Workload, plan)
+from repro.api.artifact import ArtifactError
+from repro.configs import get_reduced_config
+from repro.core import clear_tuning_caches
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.router import ArtifactCatalog, RouteError, Router
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+def _cfg():
+    return get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+
+
+def _count(p):
+    return sum(int(np.prod(np.asarray(x).shape)) for x in jax.tree.leaves(p))
+
+
+@pytest.fixture(scope="module")
+def catalog_dir(tmp_path_factory):
+    """One plan, two frontier artifacts with a real accuracy/latency
+    trade-off: deep uniform pruning (fast, less accurate) vs shallow
+    FPGM pruning (slower, more accurate)."""
+    clear_tuning_caches()
+    cfg = _cfg()
+    params = init = jax.random.PRNGKey(0)
+    from repro.models.model import init_params
+    params = init_params(init, cfg)
+    n0 = _count(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: _count(p) / n0)
+    pl = plan(cfg, accuracy_floor=0.0, targets=["tpu_v5e"],
+              strategies=["uniform_l1", "fpgm"],
+              workload=Workload(tokens_global=8192), hooks=hooks,
+              params=params,
+              pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+              strategy_kwargs={"uniform_l1": {"ratio": 0.6},
+                               "fpgm": {"ratio": 0.1}})
+    assert len(pl.frontier) == 2        # the trade-off is real
+    path = tmp_path_factory.mktemp("fleet")
+    cat = pl.export_catalog(str(path), max_batch=2, max_seq=24)
+    assert len(cat) == 2
+    clear_tuning_caches()
+    return str(path), cfg
+
+
+def _entries(cat):
+    fast = min(cat, key=lambda e: e.predicted_step_s)
+    accurate = max(cat, key=lambda e: e.accuracy)
+    return fast, accurate
+
+
+def _req(rng, cfg, rid, **kw):
+    return Request(rid=rid, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=4, **kw)
+
+
+def test_catalog_roundtrips_and_matches_artifact_metadata(catalog_dir):
+    path, _ = catalog_dir
+    cat = ArtifactCatalog.load(path)
+    assert sorted(cat.names) == ["fpgm@tpu_v5e", "uniform_l1@tpu_v5e"]
+    fast, accurate = _entries(cat)
+    assert fast.name != accurate.name
+    assert fast.predicted_step_s < accurate.predicted_step_s
+    assert fast.accuracy < accurate.accuracy
+    for e in cat:
+        art = cat.artifact(e.name)
+        assert art.metadata["final_acc"] == e.accuracy
+        assert art.metadata["latency_total_s"] == e.latency_s
+        assert art.metadata["predicted_step_s"] == e.predicted_step_s
+        assert art.tuned_digest == e.tuned_digest
+        assert e.name in cat.summary()
+
+
+def test_router_dispatches_by_latency_budget(catalog_dir):
+    """The acceptance criterion: one catalog, two budgets, two artifacts.
+    A loose budget buys the accurate model; a tight one only fits the
+    fast model — and both actually serve."""
+    path, cfg = catalog_dir
+    cat = ArtifactCatalog.load(path)
+    fast, accurate = _entries(cat)
+    router = Router(cat)
+    rng = np.random.default_rng(0)
+    n_new = 4
+    tight = (fast.predicted_step_s + accurate.predicted_step_s) / 2 * n_new
+    loose = accurate.predicted_step_s * n_new * 100
+    r_tight = _req(rng, cfg, 0, latency_budget_s=tight)
+    r_loose = _req(rng, cfg, 1, latency_budget_s=loose)
+    assert router.submit(r_tight) == fast.name
+    assert router.submit(r_loose) == accurate.name
+    assert r_tight.routed_to != r_loose.routed_to
+    stats = router.run()
+    assert stats["requests"] == 2
+    assert stats["routing"] == {fast.name: 1, accurate.name: 1}
+    assert stats["per_artifact"][fast.name]["requests"] == 1
+    assert stats["per_artifact"][accurate.name]["requests"] == 1
+    assert r_tight.done and r_loose.done
+    assert len(r_tight.output) == len(r_loose.output) == n_new
+    # different pruned params -> (here) different greedy continuations
+    assert stats["total_new_tokens"] == 2 * n_new
+
+
+def test_router_respects_accuracy_floor_and_cheapest_policy(catalog_dir):
+    path, cfg = catalog_dir
+    cat = ArtifactCatalog.load(path)
+    fast, accurate = _entries(cat)
+    rng = np.random.default_rng(1)
+    # cheapest-satisfying policy: no floor -> the fast entry
+    router = Router(cat, policy="cheapest")
+    assert router.route(_req(rng, cfg, 0)).name == fast.name
+    # a floor above the fast entry forces the accurate one even there
+    floor = (fast.accuracy + accurate.accuracy) / 2
+    assert router.route(
+        _req(rng, cfg, 1, accuracy_floor=floor)).name == accurate.name
+    # default policy spends a missing budget on quality
+    assert Router(cat).route(_req(rng, cfg, 2)).name == accurate.name
+
+
+def test_router_rejects_or_flags_unsatisfiable_requests(catalog_dir):
+    path, cfg = catalog_dir
+    cat = ArtifactCatalog.load(path)
+    fast, _ = _entries(cat)
+    rng = np.random.default_rng(2)
+    router = Router(cat)
+    with pytest.raises(RouteError, match="no catalog entry satisfies"):
+        router.submit(_req(rng, cfg, 0, latency_budget_s=1e-12))
+    with pytest.raises(RouteError, match="accuracy_floor=2.0"):
+        router.submit(_req(rng, cfg, 1, accuracy_floor=2.0))
+    assert router.stats()["rejected"] == 2
+
+    flagging = Router(cat, on_unroutable="flag")
+    r = _req(rng, cfg, 2, latency_budget_s=1e-12)
+    assert flagging.submit(r) == fast.name      # best effort: fastest
+    assert r.slo_infeasible
+    stats = flagging.run()
+    assert stats["flagged"] == 1
+    assert stats["budgeted_requests"] == 1
+    assert stats["budget_violations"] == 1      # 1e-12s was never happening
+    assert stats["budget_violation_rate"] == 1.0
+
+
+def test_catalog_load_rejects_tampering(catalog_dir, tmp_path):
+    import shutil
+
+    path, _ = catalog_dir
+    # a tampered member fails the artifact's own fingerprint validation
+    broken = str(tmp_path / "fleet_params")
+    shutil.copytree(path, broken)
+    member = os.path.join(broken, sorted(os.listdir(broken))[0])
+    if not os.path.isdir(member):
+        member = os.path.join(broken, "fpgm@tpu_v5e")
+    flat = dict(np.load(os.path.join(member, "params.npz")))
+    key = sorted(flat)[0]
+    flat[key] = flat[key] + 1.0
+    with open(os.path.join(member, "params.npz"), "wb") as f:
+        np.savez(f, **flat)
+    with pytest.raises(ArtifactError, match="params"):
+        ArtifactCatalog.load(broken)
+
+    # a manifest whose routing numbers disagree with the artifact is
+    # refused too (the router must route by the artifact's real numbers)
+    edited = str(tmp_path / "fleet_manifest")
+    shutil.copytree(path, edited)
+    manifest = os.path.join(edited, "catalog.json")
+    with open(manifest) as f:
+        blob = json.load(f)
+    blob["entries"][0]["accuracy"] = 0.999999
+    with open(manifest, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(ArtifactError, match="does not match"):
+        ArtifactCatalog.load(edited)
+
+    # unknown manifest versions and missing manifests are clear errors
+    with open(manifest) as f:
+        blob = json.load(f)
+    blob["accuracy_floor"] = None
+    blob["version"] = 99
+    with open(manifest, "w") as f:
+        json.dump(blob, f)
+    with pytest.raises(ArtifactError, match="version"):
+        ArtifactCatalog.load(edited)
+    with pytest.raises(ArtifactError, match="missing"):
+        ArtifactCatalog.load(str(tmp_path / "nowhere"))
+
+
+_FAST = MeasurementConfig(warmup=0, repeats=1, trim=0, measure_top_k=1,
+                          max_grid_steps=1)
+
+
+def test_serve_measurements_recalibrate_the_replay_oracle(tmp_path):
+    """The oracle feedback loop: a replay-backed artifact is served with a
+    MeasurementLog attached; folding the observed decode step back via
+    ``recalibrated_oracle`` moves the replay prediction strictly toward
+    the measurement."""
+    cfg = get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=256, n_heads=4, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+    session = PruningSession(
+        cfg, oracle=MeasuredOracle(_FAST, record=MeasurementLog(_FAST)),
+        workload=Workload(tokens_global=256),
+        hooks=TrainHooks(short_term_train=lambda p, s: p,
+                         eval_acc=lambda p, s: 1.0),
+        pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    art = session.export(str(tmp_path / "art"), max_batch=2, max_seq=16)
+    assert art.oracle.name == "replay"
+    predicted = art.metadata["predicted_step_s"]
+    assert predicted is not None
+
+    log = MeasurementLog()
+    eng = ServeEngine.from_artifact(art, measurements=log)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=4))
+    eng.run()
+    key = MeasurementLog.step_key(art.measurement_tag, 2, 16)
+    measured = log.lookup(key)
+    assert measured is not None and measured > 0.0
+
+    orc2 = art.recalibrated_oracle(log)
+    clear_tuning_caches()
+    pred2 = art.predict_step_s(2, 16, oracle=orc2)
+    assert pred2 is not None
+    assert abs(pred2 - measured) < abs(predicted - measured)
+    # the factor solves fixed + factor*task = measured, so the residual
+    # is only re-tuned winner shifts + the unscaled epilogue term
+    assert pred2 == pytest.approx(measured, rel=0.1)
+    # the recalibrated oracle is its own cache identity
+    assert orc2.fingerprint() != art.oracle.fingerprint()
+
+    # a float works too, and non-replay artifacts refuse
+    orc3 = art.recalibrated_oracle(measured * 2)
+    assert orc3.log.digest() != orc2.log.digest()
+    analytic = _cfg()
+    s2 = PruningSession(analytic, workload=Workload(tokens_global=256),
+                        hooks=TrainHooks(short_term_train=lambda p, s: p,
+                                         eval_acc=lambda p, s: 1.0),
+                        pcfg=CPruneConfig(a_g=0.0, seq_len=32))
+    art2 = s2.export(str(tmp_path / "art2"), max_batch=2, max_seq=16)
+    with pytest.raises(ArtifactError, match="replay-backed"):
+        art2.recalibrated_oracle(1e-3)
+    with pytest.raises(ArtifactError, match="no .* entry"):
+        art.recalibrated_oracle(MeasurementLog())

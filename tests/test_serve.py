@@ -1,4 +1,6 @@
 """Serving engine: correctness of batched greedy decode + scheduler."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +9,7 @@ import pytest
 from repro.configs import get_reduced_config
 from repro.models.model import Model, init_params
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import Scheduler, SchedulerConfig
 
 
 @pytest.fixture(scope="module")
@@ -168,3 +171,181 @@ def test_engine_serves_real_pruned_params_end_to_end():
     r0 = next(r for r in eng.done if r.rid == 0)
     expect = _greedy_reference(cfg, res.params, r0.prompt, n_new)
     assert r0.output == expect
+
+
+# ---------------------------------------------------------------------------
+# Scheduler core (ISSUE 5): bucketed admission, slot compaction, step API
+# ---------------------------------------------------------------------------
+
+def _mk(rng, cfg, rid, plen, n_new):
+    return Request(rid=rid, prompt=rng.integers(
+        0, cfg.vocab_size, size=plen).astype(np.int32),
+        max_new_tokens=n_new)
+
+
+def test_scheduler_buckets_by_prompt_length_and_groups_decode_lengths():
+    """Pure policy: interleaved lengths land in per-length buckets, the
+    fullest bucket is admitted first, and a bucket's admission slice
+    groups similar max_new_tokens so the cohort finishes together."""
+    sched = Scheduler(SchedulerConfig())
+    rng = np.random.default_rng(0)
+    cfg = get_reduced_config("qwen3_1_7b")
+    reqs = []
+    for i in range(8):
+        r = _mk(rng, cfg, i, 8 if i % 2 == 0 else 12,
+                4 if i % 4 < 2 else 16)
+        reqs.append(r)
+        sched.submit(r)
+    assert len(sched) == 8
+    batch = sched.select(4)
+    # one prompt-length bucket, grouped by decode length
+    assert len(batch) == 4
+    assert len({len(r.prompt) for r in batch}) == 1
+    assert [r.max_new_tokens for r in batch] == sorted(
+        r.max_new_tokens for r in batch)
+    assert len(sched) == 4
+    # the other bucket comes next; wave policy refuses mid-decode admission
+    batch2 = sched.select(4)
+    assert len(batch2) == 4
+    assert len({len(r.prompt) for r in batch2}) == 1
+    assert len(batch[0].prompt) != len(batch2[0].prompt)
+    wave = Scheduler(SchedulerConfig(policy="wave"))
+    wave.submit(_mk(rng, cfg, 99, 8, 4))
+    assert wave.select(4, live_groups=1) == []
+    assert len(wave.select(4, live_groups=0)) == 1
+
+
+def test_engine_stops_stepping_finished_slots_on_mixed_max_new(setup):
+    """Satellite: a wave used to run max(max_new_tokens) full-width steps.
+    The scheduler core compacts finished slots away, so mixed decode
+    budgets stop paying for the longest request — outputs unchanged."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(4)]
+    budgets = [8, 2, 2, 2]
+
+    def drain(policy):
+        eng = ServeEngine(cfg, params, max_batch=4, max_seq=24,
+                          scheduler=policy)
+        for i, (p, n) in enumerate(zip(prompts, budgets)):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=n))
+        return eng, eng.run()
+
+    legacy, legacy_stats = drain("wave")
+    new, new_stats = drain("bucketed")
+    # legacy: 4 slots x (8 - 1) decode steps, finished or not
+    assert legacy_stats["slot_steps"] == 4 * 7
+    # scheduler core: the three short requests leave after their second
+    # token; the rest of the drain is a compacted batch
+    assert new_stats["slot_steps"] < legacy_stats["slot_steps"]
+    assert new_stats["active_slot_steps"] <= new_stats["slot_steps"]
+    assert new_stats["total_new_tokens"] == legacy_stats[
+        "total_new_tokens"] == sum(budgets)
+    # greedy outputs are bit-identical across policies, per request
+    for rid in range(4):
+        a = next(r for r in legacy.done if r.rid == rid)
+        b = next(r for r in new.done if r.rid == rid)
+        assert a.output == b.output
+
+
+def test_engine_keeps_batches_full_on_interleaved_prompt_lengths(setup):
+    """Satellite: alternating prompt lengths must not collapse batch
+    occupancy — length bucketing admits full same-length cohorts."""
+    cfg, params = setup
+    rng = np.random.default_rng(12)
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=32)
+    for i in range(8):
+        eng.submit(_mk(rng, cfg, i, 8 if i % 2 == 0 else 12, 4))
+    stats = eng.run()
+    assert stats["requests"] == 8
+    # every admitted cohort was a full batch of one prompt length
+    assert stats["waves"] == 2
+    assert stats["mean_batch_occupancy"] == pytest.approx(1.0)
+    assert stats["slot_steps"] == stats["active_slot_steps"]
+
+
+def test_engine_step_api_is_non_blocking_and_resumable(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=24)
+    for i in range(3):
+        eng.submit(_mk(rng, cfg, i, 8, 3))
+    assert eng.has_work
+    # a zero deadline does no work and loses nothing
+    stats0 = eng.serve_forever(deadline_s=0.0)
+    assert stats0["requests"] == 0 and len(eng.pending) == 3
+    # first quantum admits (prefill), later quanta decode, idle when done
+    ev = eng.step()
+    assert ev["event"] == "prefill" and ev["admitted"] == 2
+    seen = {ev["event"]}
+    while eng.has_work:
+        seen.add(eng.step()["event"])
+    assert seen == {"prefill", "decode"}
+    assert eng.step()["event"] == "idle"
+    assert len(eng.done) == 3
+    # run() on the drained engine is a no-op, not an error
+    assert eng.run()["requests"] == 3
+
+
+def test_engine_empty_run_returns_zeroed_stats(setup):
+    """Satellite: run() on an empty queue yields zeroed, finite stats —
+    never NaN — and no oracle-error key."""
+    cfg, params = setup
+    stats = ServeEngine(cfg, params, max_batch=2, max_seq=24).run()
+    assert stats["requests"] == 0
+    assert "oracle_rel_error" not in stats
+    for k, v in stats.items():
+        if isinstance(v, float):
+            assert math.isfinite(v), f"{k} is not finite: {v}"
+            assert v == 0.0 or k == "wall_s", f"{k} nonzero on empty run"
+    assert stats["predicted_step_s"] is None
+    assert stats["tokens_per_s"] == 0.0
+    assert stats["mean_batch_occupancy"] == 0.0
+
+
+def test_engine_records_decode_step_into_measurement_log(setup):
+    from repro.core.oracle import MeasurementLog
+
+    cfg, params = setup
+    rng = np.random.default_rng(14)
+    log = MeasurementLog()
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=24,
+                      measurements=log)
+    eng.submit(_mk(rng, cfg, 0, 8, 4))
+    stats = eng.run()
+    key = MeasurementLog.step_key(cfg.name, 2, 24)
+    assert log.lookup(key) is not None and log.lookup(key) > 0.0
+    # the recorded value summarizes the same samples stats() reports
+    assert log.lookup(key) <= stats["p95_step_s"] + 1e-12
+    # an idle engine records nothing rather than garbage
+    eng2 = ServeEngine(cfg, params, max_batch=2, max_seq=24)
+    assert eng2.record_measurements(MeasurementLog()) is None
+    with pytest.raises(ValueError, match="MeasurementLog"):
+        eng2.record_measurements()
+
+
+def test_engine_admits_next_cohort_mid_decode(setup):
+    """Continuous batching at group granularity: slots freed by finished
+    requests are refilled by a new cohort before the first finishes."""
+    cfg, params = setup
+    rng = np.random.default_rng(15)
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=32,
+                      scheduler=SchedulerConfig(compact="exact"))
+    # cohort 1: one long, three short -> three slots free mid-decode
+    for i, n in enumerate((12, 2, 2, 2)):
+        eng.submit(_mk(rng, cfg, i, 8, n))
+    # cohort 2 waits in another length bucket
+    for i in range(4, 7):
+        eng.submit(_mk(rng, cfg, i, 10, 2))
+    events = []
+    while eng.has_work:
+        ev = eng.step()
+        events.append((ev["event"], len(eng.done)))
+    # the second prefill happened while the long request was still
+    # decoding (fewer than all 7 requests were done at that point)
+    prefill_points = [done for e, done in events if e == "prefill"]
+    assert len(prefill_points) == 2
+    assert prefill_points[1] < 7
+    assert next(r for r in eng.done if r.rid == 0).output and \
+        len(eng.done) == 7
