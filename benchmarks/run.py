@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serve_bench        scheduler-core serving vs the legacy wave engine on
                      an interleaved workload, plus the SLO router over a
                      two-artifact catalog (throughput gates)
+  serve_chaos        supervised fleet under injected crashes/stragglers
+                     + one tampered catalog member (zero lost requests,
+                     bit-identical re-queued outputs, goodput gate)
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -46,6 +49,7 @@ def main() -> None:
         ("measured_smoke", measured_smoke.run),
         ("artifact_smoke", artifact_smoke.run),
         ("serve_bench", serve_bench.run),
+        ("serve_chaos", serve_bench.run_chaos),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

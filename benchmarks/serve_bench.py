@@ -20,11 +20,21 @@ Two arms, both warmed (a throwaway drain compiles every shape, then
     fast artifact, loose -> accurate) through the ``Router`` must sustain
     >= the wave engine serving the accurate artifact alone.
 
-Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py``
+A third arm (CI ``chaos-smoke``, ``--chaos``) serves the same catalog
+through the supervised fleet while a ``FaultInjector`` kills engines
+mid-decode, crashes one prefill, delays decode ticks (stragglers), and
+one catalog member is permanently tampered. Gates: **zero lost
+requests** (every request completes or is explicitly rejected),
+re-queued outputs **bit-identical** to a fault-free drain, and chaos
+goodput (delivered tokens) >= ``SERVE_CHAOS_MIN_GOODPUT`` (default 0.7)
+of the fault-free run's.
+
+Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py [--chaos]``
 """
 from __future__ import annotations
 
 import os
+import shutil
 import tempfile
 
 import jax
@@ -34,7 +44,9 @@ from benchmarks import common
 from repro.api import CPruneConfig, TrainHooks, Workload, plan
 from repro.models.model import init_params
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.router import Router
+from repro.serve.fleet import RetryPolicy, RouteError
+from repro.serve.router import ArtifactCatalog, Router
+from repro.util.faults import FaultInjector, crash_at, delay_at
 
 N_REQUESTS = 16
 MAX_BATCH = 4
@@ -160,5 +172,135 @@ def run():
     return {"sched": sched, "wave": wave, "router": routed, "solo": solo}
 
 
+def _export_catalog(td, cfg, params):
+    common.reset_tuning_caches()
+    n0 = common.count_params(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: common.count_params(p) / n0)
+    pl = plan(cfg, accuracy_floor=0.0, targets=["tpu_v5e"],
+              strategies=["uniform_l1", "fpgm"],
+              workload=Workload(tokens_global=8192), hooks=hooks,
+              params=params, pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+              strategy_kwargs={"uniform_l1": {"ratio": 0.6},
+                               "fpgm": {"ratio": 0.1}})
+    catalog = pl.export_catalog(td, max_batch=MAX_BATCH, max_seq=MAX_SEQ)
+    common.reset_tuning_caches()
+    return catalog
+
+
+def _tamper_member(root, name):
+    """Bump one member's manifest accuracy so the catalog refuses it
+    (the permanently-failing entry of the chaos arm)."""
+    import json
+    man = os.path.join(root, "catalog.json")
+    with open(man) as f:
+        blob = json.load(f)
+    for d in blob["entries"]:
+        if d["name"] == name:
+            d["accuracy"] += 0.5
+    with open(man, "w") as f:
+        json.dump(blob, f)
+
+
+def run_chaos():
+    """CI ``chaos-smoke``: the supervised fleet under injected faults.
+
+    Failure mix: two mid-decode engine crashes (replica torn down, cold
+    rebuild, in-flight re-queued), one prefill crash (admission-time
+    OOM), two decode delays (stragglers), and one catalog member whose
+    manifest is tampered (permanent load failure -> quarantine).
+    """
+    min_goodput = float(os.environ.get("SERVE_CHAOS_MIN_GOODPUT", "0.7"))
+    cfg = _bench_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    t = common.Timer()
+    with tempfile.TemporaryDirectory() as td:
+        clean = os.path.join(td, "clean")
+        broken = os.path.join(td, "broken")
+        catalog = _export_catalog(clean, cfg, params)
+        fast = min(catalog, key=lambda e: e.predicted_step_s)
+        accurate = max(catalog, key=lambda e: e.accuracy)
+        shutil.copytree(clean, broken)
+        _tamper_member(broken, accurate.name)
+
+        # -- fault-free reference: the surviving artifact, no faults ----
+        ref_eng = ServeEngine.from_artifact(catalog.artifact(fast.name))
+        for r in _workload(cfg):
+            ref_eng.submit(r)
+        ref = ref_eng.run()
+        ref_outputs = {r.rid: list(r.output) for r in ref_eng.done}
+        assert len(ref_outputs) == N_REQUESTS
+
+        # -- chaos arm: tampered member + injected engine faults --------
+        inj = FaultInjector(specs=[
+            crash_at(f"decode:{fast.name}#r0", 3, 25),   # engine crashes
+            crash_at("prefill", 1),                      # admission OOM
+            delay_at("decode", 0.05, 12),                # stragglers
+            delay_at("decode", 0.05, 30),
+        ])
+        router = Router(ArtifactCatalog.load(broken, lazy=True),
+                        faults=inj, retry=RetryPolicy(max_retries=4))
+        submitted = rejected = 0
+        for r in _workload(cfg):
+            submitted += 1
+            try:
+                router.submit(r)
+            except RouteError:
+                rejected += 1
+        chaos = router.run()
+
+    # -- gates --------------------------------------------------------------
+    # 1. zero silent loss: every request completed or was explicitly
+    #    rejected/failed, and nothing is still in flight
+    accounted = chaos["requests"] + rejected + chaos["failed"]
+    in_flight = sum(s["in_flight"] for s in chaos["per_artifact"].values())
+    if accounted != submitted or in_flight:
+        raise RuntimeError(
+            f"lost requests under chaos: submitted {submitted} != "
+            f"{chaos['requests']} completed + {rejected} rejected + "
+            f"{chaos['failed']} failed (in_flight={in_flight})")
+    # 2. bit-identical greedy outputs through crashes and re-queues
+    chaos_outputs = {r.rid: list(r.output)
+                     for sup in router._fleets.values()
+                     for r in sup.completed}
+    if chaos_outputs != ref_outputs:
+        bad = [rid for rid in ref_outputs
+               if chaos_outputs.get(rid) != ref_outputs[rid]]
+        raise RuntimeError(
+            f"re-queued outputs diverged from the fault-free drain "
+            f"for rids {bad}")
+    # 3. goodput: delivered tokens vs the fault-free drain
+    goodput = chaos["total_new_tokens"] / max(ref["total_new_tokens"], 1)
+    # 4. the faults actually happened (the arm must not silently no-op)
+    fleet = chaos["per_artifact"][fast.name]
+    if not (chaos["crashes"] >= 2 and fleet["rebuilds"] >= 1
+            and fleet["requeued"] >= 1
+            and accurate.name in chaos["quarantined"]):
+        raise RuntimeError(
+            f"chaos faults did not land: crashes={chaos['crashes']} "
+            f"rebuilds={fleet['rebuilds']} requeued={fleet['requeued']} "
+            f"quarantined={list(chaos['quarantined'])}")
+    common.emit(
+        "serve_chaos", t.us(),
+        f"goodput={goodput:.2f}"
+        f";crashes={chaos['crashes']}"
+        f";rebuilds={chaos['rebuilds']}"
+        f";requeued={chaos['requeued']}"
+        f";retried={fleet['retried_requests']}"
+        f";stragglers={fleet['straggler_steps']}"
+        f";failed={chaos['failed']}"
+        f";rejected={rejected}"
+        f";quarantined={list(chaos['quarantined'])}")
+    if goodput < min_goodput:
+        raise RuntimeError(
+            f"chaos goodput {goodput:.2f} < {min_goodput} of the "
+            f"fault-free drain")
+    return {"chaos": chaos, "ref": ref, "goodput": goodput}
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--chaos" in sys.argv:
+        run_chaos()
+    else:
+        run()

@@ -14,6 +14,15 @@ satisfying frontier artifact:
 
   PYTHONPATH=src python -m repro.launch.serve --catalog path/to/fleet \
       --budget-ms 5,50 --requests 16
+
+Fault-tolerant fleet serving: ``--replicas N`` puts every entry behind a
+ReplicaSupervisor (N engines, crash recovery, deadline-ordered bounded
+intake), ``--max-queue``/``--retry-budget`` bound admission and
+re-queues, and ``--chaos`` injects a deterministic failure mix (engine
+crash mid-decode, a straggler tick) to demonstrate recovery:
+
+  PYTHONPATH=src python -m repro.launch.serve --catalog path/to/fleet \
+      --replicas 2 --max-queue 32 --retry-budget 3 --chaos
 """
 import argparse
 import os
@@ -58,6 +67,20 @@ def _parser():
                     help="record the observed decode step into this "
                          "MeasurementLog JSON (feeds "
                          "DeploymentArtifact.recalibrated_oracle)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="supervised engine replicas per catalog entry "
+                         "(or per artifact); >1 implies fleet serving")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound each entry's intake + in-flight; overflow "
+                         "is shed with RouteError at submit")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="per-request re-queue budget after engine "
+                         "crashes (beyond it the request fails "
+                         "explicitly)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a deterministic failure mix (decode "
+                         "crash + straggler) to demonstrate supervised "
+                         "recovery")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
@@ -89,8 +112,21 @@ def _print_stats(stats, indent=""):
             for name, sub in v.items():
                 print(f"{indent}[{name}]")
                 _print_stats(sub, indent + "  ")
+        elif k == "per_replica":
+            for i, sub in enumerate(v):
+                print(f"{indent}[replica {i}]")
+                _print_stats(sub, indent + "  ")
         else:
             print(f"{indent}{k}: {v}")
+
+
+def _chaos_injector():
+    """The --chaos failure mix: one engine crash early in decode plus
+    one straggler tick — deterministic, so every run demonstrates a
+    contained crash, a cold rebuild, and a re-queue."""
+    from repro.util.faults import FaultInjector, crash_at, delay_at
+    return FaultInjector(specs=[crash_at("decode", 3),
+                                delay_at("decode", 0.05, 10)])
 
 
 def main():
@@ -106,18 +142,38 @@ def main():
     budgets = [float(b) * 1e-3 for b in args.budget_ms.split(",")] \
         if args.budget_ms else None
 
+    faults = _chaos_injector() if args.chaos else None
+    retry = None
+    if args.retry_budget != 2 or args.chaos:
+        from repro.serve.fleet import RetryPolicy
+        retry = RetryPolicy(max_retries=args.retry_budget)
+
     if args.catalog:
+        from repro.serve.fleet import RouteError
         from repro.serve.router import ArtifactCatalog, Router
-        catalog = ArtifactCatalog.load(args.catalog)
+        # fleet serving loads lazily: a broken member is quarantined at
+        # its engine-build time instead of refusing the whole catalog
+        catalog = ArtifactCatalog.load(args.catalog, lazy=True)
         print(f"routing over catalog {args.catalog}:\n{catalog.summary()}")
         router = Router(catalog, policy=args.route_policy,
                         on_unroutable=args.on_unroutable,
-                        scheduler=args.scheduler, measurements=log)
+                        scheduler=args.scheduler, measurements=log,
+                        replicas=args.replicas, max_queue=args.max_queue,
+                        retry=retry, faults=faults)
         cfg = catalog.artifact(catalog.names[0]).cfg
+        shed = 0
         for req in _requests(args, cfg, budgets):
-            router.submit(req)
+            try:
+                router.submit(req)
+            except RouteError as e:
+                shed += 1
+                print(f"shed: {e}")
         stats = router.run()
         _print_stats(stats)
+        if shed:
+            print(f"shed_at_submit: {shed}")
+        if stats["quarantined"]:
+            print(f"quarantined entries: {stats['quarantined']}")
         if log is not None:
             log.save(args.record)
             print(f"recorded {len(log)} measurement(s) -> {args.record}")
@@ -132,6 +188,27 @@ def main():
         cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     if cfg.is_encoder_only:
         raise SystemExit("encoder-only arch has no decode step")
+    if art is not None and (args.replicas > 1 or args.chaos):
+        # supervised fleet over one artifact: crash recovery + re-queue
+        from repro.serve.fleet import ReplicaSupervisor
+        sup = ReplicaSupervisor.from_artifact(
+            art, replicas=args.replicas, name=art.cfg.name,
+            faults=faults, retry=retry, max_queue=args.max_queue,
+            engine_kwargs=dict(max_batch=min(8, args.requests),
+                               max_seq=args.prompt_len + args.max_new,
+                               scheduler=args.scheduler, measurements=log))
+        print(f"supervising {args.replicas} replica(s) of {args.artifact} "
+              f"(model={cfg.name}, chaos={'on' if args.chaos else 'off'})")
+        for req in _requests(args, cfg, budgets):
+            sup.submit(req)
+        _print_stats(sup.run())
+        if log is not None:
+            for eng in sup.engines:
+                if eng._step_times:
+                    eng.record_measurements()
+            log.save(args.record)
+            print(f"recorded {len(log)} measurement(s) -> {args.record}")
+        return
     if art is not None:
         eng = ServeEngine.from_artifact(
             art, max_batch=min(8, args.requests),

@@ -1,8 +1,8 @@
 from repro.serve.engine import Engine, Request, ServeEngine
-from repro.serve.router import (ArtifactCatalog, CatalogEntry, RouteError,
-                                Router)
+from repro.serve.fleet import ReplicaSupervisor, RetryPolicy, RouteError
+from repro.serve.router import ArtifactCatalog, CatalogEntry, Router
 from repro.serve.scheduler import Scheduler, SchedulerConfig, SlotGroup
 
-__all__ = ["ArtifactCatalog", "CatalogEntry", "Engine", "Request",
-           "RouteError", "Router", "Scheduler", "SchedulerConfig",
-           "ServeEngine", "SlotGroup"]
+__all__ = ["ArtifactCatalog", "CatalogEntry", "Engine", "ReplicaSupervisor",
+           "Request", "RetryPolicy", "RouteError", "Router", "Scheduler",
+           "SchedulerConfig", "ServeEngine", "SlotGroup"]

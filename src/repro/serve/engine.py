@@ -40,6 +40,7 @@ from repro.configs.base import ModelConfig
 from repro.core.oracle import MeasurementLog
 from repro.models.model import Model
 from repro.serve.scheduler import Scheduler, SchedulerConfig, SlotGroup
+from repro.util.faults import FaultInjector, StragglerMonitor
 
 
 @dataclasses.dataclass
@@ -61,6 +62,31 @@ class Request:
     t_done: float = 0.0
     routed_to: Optional[str] = None
     slo_infeasible: bool = False
+    # fleet supervision (repro.serve.fleet): re-queue/reject accounting.
+    # A request ends in exactly one of three states: done, failed
+    # (explicit, with a reason), or still in flight — never silently lost.
+    retries: int = 0
+    failed: bool = False
+    fail_reason: Optional[str] = None
+
+    @property
+    def deadline_s(self) -> float:
+        """Absolute wall-clock deadline (inf when unbudgeted or not yet
+        submitted — the budget clock starts at first submit)."""
+        if self.latency_budget_s is None or not self.t_submit:
+            return float("inf")
+        return self.t_submit + self.latency_budget_s
+
+    def reset_for_retry(self) -> None:
+        """Forget partial progress so a re-queued request re-prefils from
+        its original prompt (greedy decode then reproduces the exact
+        fault-free output). The submit time — and therefore the deadline
+        — is deliberately preserved."""
+        self.output = []
+        self.done = False
+        self.t_first_token = 0.0
+        self.t_done = 0.0
+        self.retries += 1
 
 
 class ServeEngine:
@@ -72,7 +98,10 @@ class ServeEngine:
                  predicted_step_s: Optional[float] = None,
                  scheduler: Union[SchedulerConfig, str, None] = None,
                  measurements: Optional[MeasurementLog] = None,
-                 measurement_tag: Optional[str] = None):
+                 measurement_tag: Optional[str] = None,
+                 faults: Optional[FaultInjector] = None,
+                 fault_tag: Optional[str] = None,
+                 straggler: Optional[StragglerMonitor] = None):
         self.cfg = cfg
         self.params = params
         self.model = Model(cfg)
@@ -98,6 +127,12 @@ class ServeEngine:
         # MeasurementLog and hand it back to the oracle that planned it
         self.measurements = measurements
         self.measurement_tag = measurement_tag or cfg.name
+        # fault injection (repro.util.faults): the engine fires the
+        # "decode"/"prefill" points, tagged so a fleet-shared injector
+        # can target one replica; straggler watches decode-tick wall time
+        self.faults = faults
+        self.fault_tag = fault_tag or self.measurement_tag
+        self.straggler = straggler
         self.reset_stats()
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
@@ -109,7 +144,10 @@ class ServeEngine:
                       max_seq: Optional[int] = None, seed: int = 0,
                       predict_step: bool = True,
                       scheduler: Union[SchedulerConfig, str, None] = None,
-                      measurements: Optional[MeasurementLog] = None
+                      measurements: Optional[MeasurementLog] = None,
+                      faults: Optional[FaultInjector] = None,
+                      fault_tag: Optional[str] = None,
+                      straggler: Optional[StragglerMonitor] = None
                       ) -> "ServeEngine":
         """Serve a :class:`~repro.api.artifact.DeploymentArtifact` (an
         instance or a directory path) without constructing a
@@ -141,12 +179,16 @@ class ServeEngine:
         return cls(artifact.cfg, artifact.params, max_batch=max_batch,
                    max_seq=max_seq, seed=seed, predicted_step_s=predicted,
                    scheduler=scheduler, measurements=measurements,
-                   measurement_tag=artifact.measurement_tag)
+                   measurement_tag=artifact.measurement_tag,
+                   faults=faults, fault_tag=fault_tag, straggler=straggler)
 
     # -- queueing -----------------------------------------------------------
 
     def submit(self, req: Request):
-        req.t_submit = time.time()
+        # a re-queued request keeps its original submit time: the SLO
+        # clock (deadline_s) must not restart just because a replica died
+        if not req.t_submit:
+            req.t_submit = time.time()
         self.scheduler.submit(req)
 
     @property
@@ -157,6 +199,20 @@ class ServeEngine:
     @property
     def has_work(self) -> bool:
         return bool(len(self.scheduler) or self.groups)
+
+    def in_flight(self) -> List[Request]:
+        """Every submitted-but-unfinished request: scheduler-pending plus
+        the live decode rows. This is what a supervisor re-queues after a
+        crash — by construction it is disjoint from ``done``, so nothing
+        is ever counted twice or lost."""
+        live = list(self.scheduler.pending)
+        seen = {id(r) for r in live}
+        for g in self.groups:
+            for r in g.requests:
+                if r is not None and not r.done and id(r) not in seen:
+                    seen.add(id(r))
+                    live.append(r)
+        return live
 
     # -- the stepped core ---------------------------------------------------
 
@@ -174,7 +230,16 @@ class ServeEngine:
             batch = self.scheduler.select(free,
                                           live_groups=len(self.groups))
             if batch:
-                self._admit(batch)
+                try:
+                    self._admit(batch)
+                except Exception:
+                    # an admission crash (e.g. injected prefill OOM) must
+                    # not lose the cohort: the scheduler already popped
+                    # it, so hand it back before propagating — the
+                    # supervisor then finds every request in in_flight()
+                    for r in batch:
+                        self.scheduler.submit(r)
+                    raise
                 return {"event": "prefill", "admitted": len(batch),
                         "prompt_len": len(batch[0].prompt),
                         "live_groups": len(self.groups)}
@@ -215,6 +280,8 @@ class ServeEngine:
     # -- internal: admission + decode ---------------------------------------
 
     def _admit(self, reqs: List[Request]) -> SlotGroup:
+        if self.faults is not None:
+            self.faults.fire("prefill", self.fault_tag)
         plen = len(reqs[0].prompt)
         toks = np.zeros((len(reqs), plen), np.int32)
         for i, r in enumerate(reqs):
@@ -238,10 +305,17 @@ class ServeEngine:
         self._ticks += 1
         for group in list(self.groups):
             t0 = time.perf_counter()
+            if self.faults is not None:
+                # inside the timed region: a delay spec shows up as a
+                # slow step (the straggler monitor must see it), a crash
+                # spec kills the tick with the group state untouched
+                self.faults.fire("decode", self.fault_tag)
             logits, group.caches = self._decode(self.params, group.cur,
                                                 group.caches)
             jax.block_until_ready(logits)
             dt = time.perf_counter() - t0
+            if self.straggler is not None:
+                self.straggler.observe(dt)
             self._decode_wall_s += dt
             self._step_times.append(dt)
             self._step_widths.append(group.width)
@@ -364,6 +438,10 @@ class ServeEngine:
             "mean_batch_occupancy": (
                 self._active_slot_steps / (self._ticks * self.max_batch)
                 if self._ticks else 0.0),
+            # decode ticks slower than factor x rolling median (0 when no
+            # StragglerMonitor is attached — fleets attach one per engine)
+            "straggler_steps": (self.straggler.stragglers
+                                if self.straggler is not None else 0),
             # predicted-vs-measured step latency: how wrong the latency
             # oracle is on the model that is actually executing
             "measured_step_s": self._decode_wall_s / self._decode_steps

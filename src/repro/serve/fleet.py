@@ -1,0 +1,503 @@
+"""Supervised serving fleet: replicas, crash recovery, admission control.
+
+The scheduler-core engine (:mod:`repro.serve.engine`) assumes it lives
+forever; this module drops that assumption. A :class:`ReplicaSupervisor`
+wraps N engines serving one deployment artifact and keeps one invariant
+no matter what the engines do:
+
+    **every submitted request either completes or is explicitly
+    rejected** — ``submitted == completed + failed + in_flight`` at all
+    times, and ``in_flight`` drains to zero. Nothing is silently lost.
+
+Mechanics, in the order a request meets them:
+
+*Admission control.* Requests enter a bounded, deadline-ordered intake
+heap (``max_queue`` bounds intake + engine in-flight together). A
+request whose remaining ``latency_budget_s`` cannot cover its own
+oracle-estimated serve time is rejected with :class:`RouteError` at
+submit time — load is shed before it wastes decode ticks, not after.
+
+*Dispatch.* Each supervisor quantum drains the intake front (earliest
+deadline first) onto the least-loaded live replica, keeping per-engine
+queues shallow so the deadline ordering stays in the intake where it is
+still mutable. Deadlines order and gate admission; once admitted, a
+request is never killed by the wall clock — overruns are *reported*
+(the router's ``budget_violation_rate``), matching how the rest of the
+stack treats the oracle-priced SLO.
+
+*Crash recovery.* A replica whose ``step()`` raises is torn down: its
+finished requests are harvested, its in-flight requests are re-queued
+with their original submit time (the SLO clock does not restart) after
+:meth:`Request.reset_for_retry` clears partial output — greedy decode
+then reproduces the exact fault-free tokens. Retries are bounded
+(``RetryPolicy.max_retries``; beyond it the request fails explicitly)
+and rebuilds are cold — ``factory(i)`` reconstructs the engine from the
+artifact, with exponential backoff between consecutive rebuilds of the
+same replica. A supervisor whose factory itself keeps failing (e.g. a
+deleted artifact) declares itself dead, fails its queue explicitly, and
+is quarantined by the router.
+
+:class:`RouteError` lives here (the engine layer below needs it and the
+router layer above re-exports it — importing it from
+``repro.serve.router`` keeps working).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeEngine
+from repro.util.faults import StragglerMonitor
+
+
+class RouteError(ValueError):
+    """No catalog entry / replica can satisfy a request's SLO, or the
+    fleet sheds it under overload (the catalog may also be unusable for
+    routing). Every raise is an *explicit* rejection — the alternative
+    the fleet never takes is dropping the request silently."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff knobs for one supervised entry.
+
+    ``max_retries``
+        per-request re-queue budget after engine crashes; the request
+        fails explicitly (``fail_reason="retries"``) beyond it.
+    ``backoff_s`` / ``backoff_factor``
+        cold-rebuild delay for a crashed replica:
+        ``backoff_s * backoff_factor**(crashes-1)`` seconds before the
+        next rebuild attempt (0 = immediate, the test default).
+    ``max_build_failures``
+        consecutive factory failures before the supervisor declares
+        itself dead (a permanently missing/tampered artifact).
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    max_build_failures: int = 2
+
+
+class _Replica:
+    __slots__ = ("index", "engine", "crashes", "down_until")
+
+    def __init__(self, index: int):
+        self.index = index
+        self.engine: Optional[ServeEngine] = None
+        self.crashes = 0
+        self.down_until = 0.0
+
+
+class ReplicaSupervisor:
+    """N supervised engines serving one catalog entry.
+
+    ``factory(i)`` builds (or cold-rebuilds) replica ``i``'s engine —
+    typically ``ServeEngine.from_artifact`` plus a fresh
+    :class:`StragglerMonitor`; any exception it raises counts as a build
+    failure. ``est_step_s`` (the entry's oracle-predicted decode step)
+    prices admission-time deadline checks; without it only hard expiry
+    is enforced.
+    """
+
+    def __init__(self, factory: Callable[[int], ServeEngine], *,
+                 replicas: int = 1, name: str = "fleet",
+                 retry: Optional[RetryPolicy] = None,
+                 max_queue: Optional[int] = None,
+                 est_step_s: Optional[float] = None,
+                 straggler_skip_first: int = 2,
+                 straggler_factor: float = 3.0):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.factory = factory
+        self.name = name
+        self.retry = retry or RetryPolicy()
+        self.max_queue = max_queue
+        self.est_step_s = est_step_s
+        self.straggler_skip_first = straggler_skip_first
+        self.straggler_factor = straggler_factor
+        self._replicas = [_Replica(i) for i in range(replicas)]
+        self._seq = itertools.count()
+        self._intake: List[Any] = []            # (deadline, seq, Request)
+        self._done: List[Request] = []          # harvested from dead engines
+        self.failed: List[Request] = []         # explicit rejections
+        self._harvested_step_times: List[float] = []
+        self.dead = False
+        self.death_reason: Optional[str] = None
+        self.submitted = 0
+        self.crashes = 0
+        self.rebuilds = 0
+        self.requeued = 0
+        self.shed = 0                           # admission-time RouteErrors
+        self.consecutive_crashes = 0            # feeds the router's breaker
+        self.build_failures = 0                 # consecutive; reset on success
+        self.straggler_steps = 0                # harvested from dead engines
+        self.last_error: Optional[str] = None
+        self._wall_s = 0.0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_artifact(cls, artifact, *, replicas: int = 1,
+                      name: Optional[str] = None, seed: int = 0,
+                      faults=None, engine_kwargs: Optional[Dict] = None,
+                      **kwargs) -> "ReplicaSupervisor":
+        """Supervise ``replicas`` cold-built engines over one
+        ``DeploymentArtifact`` (instance or directory path). ``artifact``
+        may also be a zero-arg callable returning one — the fleet's lazy
+        catalogs use this so a tampered member fails at *build* time,
+        where the supervisor can contain it."""
+        engine_kwargs = dict(engine_kwargs or {})
+        tag = name or "artifact"
+
+        def factory(i: int) -> ServeEngine:
+            if faults is not None:
+                faults.fire("artifact_load", tag)
+            art = artifact() if callable(artifact) else artifact
+            return ServeEngine.from_artifact(
+                art, seed=seed + i, faults=faults,
+                fault_tag=f"{tag}#r{i}", **engine_kwargs)
+
+        return cls(factory, replicas=replicas, name=tag, **kwargs)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def engines(self) -> List[ServeEngine]:
+        """Live replica engines (crashed ones are absent until rebuilt)."""
+        return [r.engine for r in self._replicas if r.engine is not None]
+
+    @property
+    def primary(self) -> ServeEngine:
+        """Replica 0's engine, built on demand (propagates factory
+        errors — the router turns them into a quarantine)."""
+        rep = self._replicas[0]
+        if rep.engine is None:
+            rep.engine = self._build(rep)
+        return rep.engine
+
+    def start(self) -> None:
+        """Eagerly build replica 0 so a broken artifact surfaces at
+        submit time (where the router can fall back) instead of
+        mid-drain."""
+        self.primary
+
+    @property
+    def completed(self) -> List[Request]:
+        return self._done + [r for e in self.engines for r in e.done]
+
+    @property
+    def in_flight_count(self) -> int:
+        return len(self._intake) + sum(len(e.in_flight())
+                                       for e in self.engines)
+
+    @property
+    def queue_depth(self) -> int:
+        return self.in_flight_count
+
+    @property
+    def saturated(self) -> bool:
+        return self.max_queue is not None \
+            and self.in_flight_count >= self.max_queue
+
+    @property
+    def has_work(self) -> bool:
+        if self.dead:
+            return False
+        return bool(self._intake) or any(e.has_work for e in self.engines)
+
+    # -- admission ----------------------------------------------------------
+
+    def _estimate_s(self, req: Request) -> float:
+        """Oracle-priced decode time for ``req`` alone (predicted step x
+        token budget) — deliberately the same per-request price the
+        router routes by, NOT a queueing-delay estimate: budgets speak
+        the oracle's language, and overload is the bounded queue's job.
+        The check regains teeth for re-routed/re-queued requests, whose
+        remaining budget has genuinely shrunk since first submit."""
+        if self.est_step_s is None:
+            return 0.0
+        return self.est_step_s * max(1, req.max_new_tokens)
+
+    def submit(self, req: Request) -> None:
+        """Admit ``req`` to the deadline-ordered intake, or shed it with
+        :class:`RouteError` — when the supervisor is dead, the queue is
+        full, or the remaining budget cannot cover the estimated serve
+        time through the current backlog."""
+        if self.dead:
+            self.shed += 1
+            raise RouteError(f"entry {self.name!r} is dead "
+                             f"({self.death_reason}); request {req.rid} "
+                             f"not admitted")
+        if self.saturated:
+            self.shed += 1
+            raise RouteError(
+                f"entry {self.name!r} is saturated ({self.in_flight_count}"
+                f"/{self.max_queue} in flight); request {req.rid} shed at "
+                f"admission")
+        now = time.time()
+        if not req.t_submit:
+            req.t_submit = now
+        if req.latency_budget_s is not None and not req.slo_infeasible:
+            # (a flag-mode router has already accepted the SLO miss and
+            # asked for best effort — don't re-shed at admission)
+            # One clock snapshot: a fresh request's remaining budget is its
+            # full budget, not full-budget-minus-a-few-microseconds.
+            remaining = req.deadline_s - now
+            est = self._estimate_s(req)
+            if remaining < est:
+                self.shed += 1
+                raise RouteError(
+                    f"request {req.rid} cannot meet its deadline on entry "
+                    f"{self.name!r}: {remaining * 1e3:.3f} ms remaining < "
+                    f"{est * 1e3:.3f} ms estimated; shed at admission")
+        self.submitted += 1
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request) -> None:
+        heapq.heappush(self._intake, (req.deadline_s, next(self._seq), req))
+
+    # -- the supervised quantum ---------------------------------------------
+
+    def step(self) -> Dict[str, Any]:
+        """One supervised quantum: rebuild due replicas, dispatch the
+        intake front, advance every live engine one
+        :meth:`ServeEngine.step`, and contain any crash."""
+        t0 = time.perf_counter()
+        try:
+            completed_before = len(self.completed)
+            self._pump()
+            events: Dict[int, str] = {}
+            for rep in self._replicas:
+                if rep.engine is None or not rep.engine.has_work:
+                    continue
+                try:
+                    events[rep.index] = rep.engine.step()["event"]
+                except Exception as e:      # noqa: BLE001 — contain crashes
+                    self._on_crash(rep, e)
+                    events[rep.index] = "crash"
+            if len(self.completed) > completed_before:
+                # forward progress resets the breaker's crash streak
+                self.consecutive_crashes = 0
+            return {"event": "supervised" if events else "idle",
+                    "replicas": events, "intake": len(self._intake)}
+        finally:
+            self._wall_s += time.perf_counter() - t0
+
+    def run(self, deadline_s: Optional[float] = None) -> Dict[str, Any]:
+        """Step until drained (or ``deadline_s``); returns :meth:`stats`."""
+        t0 = time.time()
+        while self.has_work:
+            if deadline_s is not None and time.time() - t0 >= deadline_s:
+                break
+            self.step()
+        return self.stats()
+
+    def _pump(self) -> None:
+        now = time.time()
+        for rep in self._replicas:
+            if rep.engine is None and not self.dead and now >= rep.down_until:
+                try:
+                    rep.engine = self._build(rep)
+                except Exception as e:      # noqa: BLE001
+                    self._on_build_failure(rep, e)
+        live = [r for r in self._replicas if r.engine is not None]
+        while self._intake and live:
+            # Deadline-aware ORDERING only: budgets are oracle-priced
+            # (predicted step seconds), so wall-clock expiry here would be
+            # apples-to-oranges. Feasibility is checked against the oracle
+            # estimate at admission and again on crash re-queue.
+            # Keep per-engine queues shallow: deadline order lives in the
+            # intake, engines only ever hold ~2 cohorts of lookahead.
+            rep = min(live, key=lambda r: len(r.engine.in_flight()))
+            if len(rep.engine.in_flight()) >= 2 * rep.engine.max_batch:
+                break
+            _, _, req = heapq.heappop(self._intake)
+            rep.engine.submit(req)
+
+    def _build(self, rep: _Replica) -> ServeEngine:
+        eng = self.factory(rep.index)
+        if eng.straggler is None and self.straggler_factor is not None:
+            # fresh monitor per (re)build: the rebuilt engine re-pays jit
+            # compilation, which must not poison the straggler median
+            eng.straggler = StragglerMonitor(
+                factor=self.straggler_factor,
+                skip_first=self.straggler_skip_first)
+        self.build_failures = 0
+        if rep.crashes:
+            self.rebuilds += 1
+        return eng
+
+    def _on_build_failure(self, rep: _Replica, exc: Exception) -> None:
+        self.build_failures += 1
+        self.last_error = f"{type(exc).__name__}: {exc}"
+        pol = self.retry
+        rep.down_until = time.time() + pol.backoff_s * (
+            pol.backoff_factor ** max(0, self.build_failures - 1))
+        if self.build_failures > pol.max_build_failures \
+                and not self.engines:
+            self._die(f"engine build failed {self.build_failures}x "
+                      f"(last: {self.last_error})")
+
+    def _die(self, reason: str) -> None:
+        """Permanent failure: fail every queued request explicitly; the
+        router quarantines dead supervisors."""
+        self.dead = True
+        self.death_reason = reason
+        while self._intake:
+            _, _, req = heapq.heappop(self._intake)
+            self._fail(req, "quarantined")
+        for eng in self.engines:
+            for req in eng.in_flight():
+                self._fail(req, "quarantined")
+        for rep in self._replicas:
+            if rep.engine is not None:
+                self._harvest(rep.engine)
+                rep.engine = None
+
+    def _on_crash(self, rep: _Replica, exc: Exception) -> None:
+        """Tear the replica down, harvest its finished requests, and
+        re-queue its in-flight ones (bounded retries, deadlines kept)."""
+        self.crashes += 1
+        self.consecutive_crashes += 1
+        rep.crashes += 1
+        self.last_error = f"{type(exc).__name__}: {exc}"
+        eng, rep.engine = rep.engine, None
+        pol = self.retry
+        rep.down_until = time.time() + pol.backoff_s * (
+            pol.backoff_factor ** max(0, rep.crashes - 1))
+        self._harvest(eng)
+        for req in eng.in_flight():
+            if req.retries >= pol.max_retries:
+                req.retries += 1
+                self._fail(req, "retries")
+            else:
+                # the SLO clock keeps running (t_submit preserved), but a
+                # late retry is NOT killed here: wall-clock overruns are
+                # reported (the router's budget_violation_rate), never
+                # enforced mid-flight — deadline feasibility is a
+                # submit-time decision
+                req.reset_for_retry()
+                self.requeued += 1
+                self._enqueue(req)
+
+    def _harvest(self, eng: ServeEngine) -> None:
+        """Preserve a dying engine's accounting: its finished requests,
+        timed steps, and straggler count outlive it."""
+        self._done.extend(eng.done)
+        eng.done = []
+        self._harvested_step_times.extend(eng._step_times)
+        if eng.straggler is not None:
+            self.straggler_steps += eng.straggler.stragglers
+
+    def _fail(self, req: Request, reason: str) -> None:
+        req.failed = True
+        req.fail_reason = reason
+        self.failed.append(req)
+
+    def probe(self) -> bool:
+        """Half-open probe for a dead supervisor: one rebuild attempt of
+        replica 0. Success revives the supervisor (and clears the crash
+        streak); failure leaves it dead. Used by the router's periodic
+        quarantine probing; a no-op returning True when already live."""
+        if not self.dead:
+            self.consecutive_crashes = 0
+            return True
+        rep = self._replicas[0]
+        try:
+            eng = self.factory(rep.index)
+        except Exception as e:              # noqa: BLE001
+            self.last_error = f"{type(e).__name__}: {e}"
+            return False
+        self.dead = False
+        self.death_reason = None
+        self.build_failures = 0
+        self.consecutive_crashes = 0
+        rep.engine = eng
+        if eng.straggler is None and self.straggler_factor is not None:
+            eng.straggler = StragglerMonitor(
+                factor=self.straggler_factor,
+                skip_first=self.straggler_skip_first)
+        return True
+
+    # -- stats --------------------------------------------------------------
+
+    def accounting(self) -> Dict[str, int]:
+        """The zero-loss invariant, as numbers: ``submitted`` must equal
+        ``completed + failed + in_flight`` (shed requests were never
+        admitted, so they are accounted at the router)."""
+        return {"submitted": self.submitted,
+                "completed": len(self.completed),
+                "failed": len(self.failed),
+                "in_flight": self.in_flight_count}
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def stats(self) -> Dict[str, Any]:
+        done = self.completed
+        total_tokens = sum(len(r.output) for r in done)
+        step_times = list(self._harvested_step_times)
+        predicted = None
+        for eng in self.engines:
+            step_times.extend(eng._step_times)
+            if predicted is None:
+                predicted = eng.predicted_step_s
+        stragglers = self.straggler_steps + sum(
+            e.straggler.stragglers for e in self.engines
+            if e.straggler is not None)
+        fails: Dict[str, int] = {}
+        for r in self.failed:
+            fails[r.fail_reason] = fails.get(r.fail_reason, 0) + 1
+        stats = {
+            "requests": len(done),
+            "total_new_tokens": total_tokens,
+            "wall_s": self._wall_s,
+            "tokens_per_s": total_tokens / max(self._wall_s, 1e-9),
+            "p50_step_s": self._pct(step_times, 50),
+            "p95_step_s": self._pct(step_times, 95),
+            "measured_step_s": (float(np.mean(step_times))
+                                if step_times else 0.0),
+            "predicted_step_s": predicted if predicted is not None
+            else self.est_step_s,
+            # supervision accounting
+            "replicas": len(self._replicas),
+            "live_replicas": len(self.engines),
+            "crashes": self.crashes,
+            "rebuilds": self.rebuilds,
+            "requeued": self.requeued,
+            "retried_requests": sum(1 for r in done if r.retries),
+            "max_retries_seen": max((r.retries for r in done + self.failed),
+                                    default=0),
+            "failed": len(self.failed),
+            "failed_by_reason": fails,
+            "shed": self.shed,
+            "straggler_steps": stragglers,
+            "dead": self.dead,
+            "queue_depth": len(self._intake),
+            "in_flight": self.in_flight_count,
+            "accounting": self.accounting(),
+            "per_replica": [e.stats() for e in self.engines],
+        }
+        return stats
+
+    def reset_stats(self) -> None:
+        """Zero counters and forget retired/failed requests; live engines
+        and their compiled programs are kept (benchmarks exclude a warmup
+        drain this way). Supervision state (crash streaks, backoff,
+        death) is preserved — stats are not health."""
+        for eng in self.engines:
+            eng.reset_stats()
+        self._done = []
+        self.failed = []
+        self._harvested_step_times = []
+        self.submitted = self.in_flight_count
+        self.crashes = self.rebuilds = self.requeued = self.shed = 0
+        self.straggler_steps = 0
+        self._wall_s = 0.0

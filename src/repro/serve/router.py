@@ -28,10 +28,21 @@ implements the strict lowest-latency-that-satisfies reading. Requests no
 entry can satisfy are rejected with :class:`RouteError` (or best-effort
 dispatched and flagged with ``on_unroutable="flag"``).
 
-Per-artifact engines spin up lazily on first dispatch and share the
+Per-artifact engines spin up lazily on first dispatch — each one wrapped
+in a :class:`~repro.serve.fleet.ReplicaSupervisor` (crash recovery,
+bounded deadline-ordered intake, re-queue with retries) — and share the
 router's stats: per-artifact token/s, a routing histogram, and the
 measured budget-violation rate — the serve-time check that the planner's
 constraint math survived contact with the hardware.
+
+Fault containment at the catalog level: an entry whose artifact fails to
+load (``ArtifactError``) or whose supervisor trips ``breaker_k``
+consecutive crashes is **quarantined** — removed from dispatch, its
+requests falling back to the cheapest remaining entry that still fits
+their budget, and periodically probed (every ``probe_every`` router
+steps) for recovery. When nothing healthy fits, the router sheds the
+request with an explicit :class:`RouteError` instead of queueing past
+its deadline.
 """
 from __future__ import annotations
 
@@ -44,7 +55,9 @@ from typing import Any, Dict, Iterator, List, Optional, Union
 from repro.api.artifact import ArtifactError, DeploymentArtifact
 from repro.core.oracle import MeasurementLog
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.fleet import ReplicaSupervisor, RetryPolicy, RouteError
 from repro.serve.scheduler import SchedulerConfig
+from repro.util.faults import FaultInjector
 
 CATALOG_VERSION = 1
 CATALOG_NAME = "catalog.json"
@@ -52,10 +65,8 @@ CATALOG_NAME = "catalog.json"
 POLICIES = ("quality", "cheapest")
 ON_UNROUTABLE = ("reject", "flag")
 
-
-class RouteError(ValueError):
-    """No catalog entry satisfies a request's SLO (or the catalog is
-    unusable for routing)."""
+__all__ = ["ArtifactCatalog", "CatalogEntry", "RouteError", "Router",
+           "CATALOG_VERSION", "CATALOG_NAME"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +103,7 @@ class ArtifactCatalog:
         self.root = root
         self.entries = list(entries)
         self._artifacts = dict(artifacts)
+        self.lazy = False
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -110,14 +122,46 @@ class ArtifactCatalog:
         raise KeyError(f"no catalog entry {name!r}; entries: {self.names}")
 
     def artifact(self, name: str) -> DeploymentArtifact:
-        self.get(name)
+        """The (validated) member artifact. In a lazy catalog the member
+        is loaded on first use — and *re-attempted* on every call after a
+        failure, so a quarantine probe can succeed once the artifact is
+        repaired on disk."""
+        entry = self.get(name)
+        if name not in self._artifacts:
+            art = DeploymentArtifact.load(os.path.join(self.root,
+                                                       entry.path))
+            self._check_entry(entry, art)
+            self._artifacts[name] = art
         return self._artifacts[name]
+
+    @staticmethod
+    def _check_entry(entry: CatalogEntry, art: DeploymentArtifact) -> None:
+        meta = art.metadata
+        recorded = (meta.get("final_acc"), meta.get("latency_total_s"),
+                    meta.get("predicted_step_s"), art.tuned_digest)
+        claimed = (entry.accuracy, entry.latency_s,
+                   entry.predicted_step_s, entry.tuned_digest)
+        if recorded != claimed:
+            raise ArtifactError(
+                f"catalog entry {entry.name!r} does not match its "
+                f"artifact's metadata (manifest claims {claimed!r}, "
+                f"artifact records {recorded!r}) — the manifest or the "
+                f"artifact was modified after export")
 
     def summary(self) -> str:
         return "\n".join(e.describe() for e in self.entries)
 
     @classmethod
-    def load(cls, root: str) -> "ArtifactCatalog":
+    def load(cls, root: str, *, lazy: bool = False) -> "ArtifactCatalog":
+        """Load the manifest and — by default — every member artifact.
+
+        ``lazy=True`` defers member loading (and its fingerprint
+        validation) to the first :meth:`artifact` call per entry. This is
+        the fleet-serving mode: one tampered or deleted member then
+        surfaces as an :class:`~repro.api.artifact.ArtifactError` at that
+        entry's engine-build time, where the :class:`Router` quarantines
+        the entry and keeps the rest of the catalog serving, instead of
+        refusing the whole catalog up front."""
         manifest = os.path.join(root, CATALOG_NAME)
         if not os.path.exists(manifest):
             raise ArtifactError(f"no artifact catalog at {root!r} "
@@ -140,25 +184,20 @@ class ArtifactCatalog:
             except TypeError as e:
                 raise ArtifactError(
                     f"malformed catalog entry in {manifest!r}: {e}") from e
-            # a tampered member fails DeploymentArtifact.load's own
-            # fingerprint validation — the catalog adds no second scheme
-            art = DeploymentArtifact.load(os.path.join(root, entry.path))
-            meta = art.metadata
-            recorded = (meta.get("final_acc"), meta.get("latency_total_s"),
-                        meta.get("predicted_step_s"), art.tuned_digest)
-            claimed = (entry.accuracy, entry.latency_s,
-                       entry.predicted_step_s, entry.tuned_digest)
-            if recorded != claimed:
-                raise ArtifactError(
-                    f"catalog entry {entry.name!r} does not match its "
-                    f"artifact's metadata (manifest claims {claimed!r}, "
-                    f"artifact records {recorded!r}) — the manifest or the "
-                    f"artifact was modified after export")
+            if not lazy:
+                # a tampered member fails DeploymentArtifact.load's own
+                # fingerprint validation — the catalog adds no second
+                # scheme — and the manifest's routing numbers must agree
+                # with the artifact's own metadata
+                art = DeploymentArtifact.load(os.path.join(root, entry.path))
+                cls._check_entry(entry, art)
+                artifacts[entry.name] = art
             entries.append(entry)
-            artifacts[entry.name] = art
         if not entries:
             raise ArtifactError(f"catalog at {root!r} lists no artifacts")
-        return cls(root, entries, artifacts)
+        cat = cls(root, entries, artifacts)
+        cat.lazy = lazy
+        return cat
 
 
 def _step_or_inf(e: CatalogEntry) -> float:
@@ -170,7 +209,19 @@ def _step_or_inf(e: CatalogEntry) -> float:
 
 class Router:
     """Dispatch requests to the catalog entry that satisfies their SLO,
-    over lazily-constructed per-artifact engines."""
+    over lazily-constructed, crash-supervised per-artifact engine fleets.
+
+    Fleet knobs: ``replicas`` engines per entry (each behind one
+    :class:`~repro.serve.fleet.ReplicaSupervisor`), ``max_queue`` bounds
+    each entry's intake + in-flight (overload sheds with
+    :class:`RouteError` at submit), ``retry`` is the per-entry
+    :class:`~repro.serve.fleet.RetryPolicy`, ``breaker_k`` consecutive
+    engine crashes quarantine an entry, and quarantined entries are
+    probed every ``probe_every`` router steps (:meth:`probe` forces
+    one). ``faults`` attaches a shared
+    :class:`~repro.util.faults.FaultInjector` to every engine it builds
+    — chaos testing uses this to kill replicas deterministically.
+    """
 
     def __init__(self, catalog: ArtifactCatalog, *,
                  policy: str = "quality",
@@ -179,7 +230,13 @@ class Router:
                  max_seq: Optional[int] = None,
                  seed: int = 0,
                  scheduler: Union[SchedulerConfig, str, None] = None,
-                 measurements: Optional[MeasurementLog] = None):
+                 measurements: Optional[MeasurementLog] = None,
+                 replicas: int = 1,
+                 max_queue: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker_k: int = 3,
+                 probe_every: int = 64,
+                 faults: Optional[FaultInjector] = None):
         if policy not in POLICIES:
             raise ValueError(f"unknown routing policy {policy!r}; "
                              f"policies: {list(POLICIES)}")
@@ -195,10 +252,20 @@ class Router:
         self.seed = seed
         self.scheduler = scheduler
         self.measurements = measurements
-        self._engines: Dict[str, ServeEngine] = {}
+        self.replicas = replicas
+        self.max_queue = max_queue
+        self.retry = retry or RetryPolicy()
+        self.breaker_k = breaker_k
+        self.probe_every = probe_every
+        self.faults = faults
+        self._fleets: Dict[str, ReplicaSupervisor] = {}
+        self._quarantined: Dict[str, Dict[str, Any]] = {}
         self._histogram: Dict[str, int] = {}
         self._flagged = 0
         self._rejected = 0
+        self._steps = 0
+        self._probes = 0
+        self._recovered = 0
         self._wall_s = 0.0
 
     # -- the routing decision ----------------------------------------------
@@ -214,13 +281,13 @@ class Router:
             return None
         return entry.predicted_step_s * max(1, req.max_new_tokens)
 
-    def route(self, req: Request) -> CatalogEntry:
-        """Pure routing decision (no enqueue). Raises :class:`RouteError`
-        when nothing satisfies the request and the router rejects; in
-        ``flag`` mode returns the fastest entry best-effort and marks
-        ``req.slo_infeasible``."""
+    def _candidates(self, req: Request) -> List[CatalogEntry]:
+        """SLO-feasible, non-quarantined entries in dispatch-preference
+        order (the policy's order); empty when nothing qualifies."""
         feasible = []
         for e in self.catalog:
+            if e.name in self._quarantined:
+                continue
             if req.accuracy_floor is not None \
                     and e.accuracy < req.accuracy_floor:
                 continue
@@ -229,14 +296,30 @@ class Router:
                 if est is None or est > req.latency_budget_s:
                     continue
             feasible.append(e)
+        if self.policy == "quality":
+            # the budget buys accuracy; equal accuracy -> cheaper wins
+            feasible.sort(key=lambda e: (-e.accuracy, _step_or_inf(e)))
+        else:
+            # cheapest satisfying entry first
+            feasible.sort(key=lambda e: (_step_or_inf(e), -e.accuracy))
+        return feasible
+
+    def route(self, req: Request) -> CatalogEntry:
+        """Pure routing decision (no enqueue). Raises :class:`RouteError`
+        when nothing satisfies the request and the router rejects; in
+        ``flag`` mode returns the fastest healthy entry best-effort and
+        marks ``req.slo_infeasible``."""
+        feasible = self._candidates(req)
         if feasible:
-            if self.policy == "quality":
-                # the budget buys accuracy; equal accuracy -> cheaper wins
-                return min(feasible, key=lambda e: (-e.accuracy,
-                                                    _step_or_inf(e)))
-            # cheapest satisfying entry
-            return min(feasible, key=lambda e: (_step_or_inf(e),
-                                                -e.accuracy))
+            return feasible[0]
+        healthy = [e for e in self.catalog
+                   if e.name not in self._quarantined]
+        if not healthy:
+            self._rejected += 1
+            raise RouteError(
+                f"every catalog entry is quarantined "
+                f"({dict((n, q['reason']) for n, q in self._quarantined.items())}); "
+                f"request {req.rid} shed")
         if self.on_unroutable == "reject":
             self._rejected += 1
             raise RouteError(
@@ -245,48 +328,154 @@ class Router:
                 f"latency_budget_s={req.latency_budget_s!r}, "
                 f"max_new_tokens={req.max_new_tokens}); catalog:\n"
                 + self.catalog.summary())
-        # flag: best-effort on the fastest entry, visibly marked
+        # flag: best-effort on the fastest healthy entry, visibly marked
         req.slo_infeasible = True
         self._flagged += 1
-        return min(self.catalog, key=lambda e: (_step_or_inf(e),
-                                                -e.accuracy))
+        return min(healthy, key=lambda e: (_step_or_inf(e), -e.accuracy))
+
+    # -- supervised fleets + quarantine -------------------------------------
+
+    def _fleet(self, name: str) -> ReplicaSupervisor:
+        """The (lazily constructed) supervised engine fleet for entry
+        ``name`` — replica 0 is built eagerly so a broken artifact
+        surfaces here, where the caller can quarantine and fall back."""
+        if name not in self._fleets:
+            entry = self.catalog.get(name)
+            idx = len(self._fleets)
+            sup = ReplicaSupervisor.from_artifact(
+                lambda _n=name: self.catalog.artifact(_n),
+                replicas=self.replicas, name=name,
+                seed=self.seed + idx * 101,
+                faults=self.faults, retry=self.retry,
+                max_queue=self.max_queue,
+                est_step_s=entry.predicted_step_s,
+                engine_kwargs=dict(
+                    max_batch=self.max_batch, max_seq=self.max_seq,
+                    scheduler=self.scheduler,
+                    measurements=self.measurements))
+            sup.start()                 # propagate build errors eagerly
+            self._fleets[name] = sup
+        return self._fleets[name]
+
+    def engine(self, name: str) -> ServeEngine:
+        """Back-compat: entry ``name``'s primary replica engine.
+
+        A failed lazy build (tampered/deleted artifact, injected load
+        fault) quarantines the entry before propagating, so later
+        ``submit`` calls fall back to healthy entries instead of
+        re-tripping the same error."""
+        try:
+            return self._fleet(name).primary
+        except Exception as e:          # noqa: BLE001 — ArtifactError et al
+            self._quarantine(name, f"{type(e).__name__}: {e}")
+            raise
+
+    def _quarantine(self, name: str, reason: str) -> None:
+        if name in self._quarantined:
+            return
+        rec = self._quarantined.setdefault(
+            name, {"reason": reason, "at_step": self._steps, "probes": 0})
+        rec["reason"] = reason
+
+    def probe(self) -> List[str]:
+        """Half-open probe of every quarantined entry; returns the names
+        restored to dispatch. Runs automatically every ``probe_every``
+        router steps."""
+        restored = []
+        for name in list(self._quarantined):
+            self._quarantined[name]["probes"] += 1
+            self._probes += 1
+            sup = self._fleets.get(name)
+            try:
+                ok = sup.probe() if sup is not None else bool(
+                    self._fleet(name))
+            except Exception:           # noqa: BLE001 — probe must not throw
+                ok = False
+            if ok:
+                del self._quarantined[name]
+                self._recovered += 1
+                restored.append(name)
+        return restored
 
     # -- dispatch + drive ---------------------------------------------------
 
-    def engine(self, name: str) -> ServeEngine:
-        """The (lazily constructed) engine serving catalog entry
-        ``name``."""
-        if name not in self._engines:
-            art = self.catalog.artifact(name)
-            self._engines[name] = ServeEngine.from_artifact(
-                art, max_batch=self.max_batch, max_seq=self.max_seq,
-                seed=self.seed + len(self._engines),
-                scheduler=self.scheduler, measurements=self.measurements)
-        return self._engines[name]
-
     def submit(self, req: Request) -> str:
-        """Route ``req`` and enqueue it on that artifact's engine;
-        returns the entry name (also recorded on ``req.routed_to``)."""
-        entry = self.route(req)
-        req.routed_to = entry.name
-        self._histogram[entry.name] = self._histogram.get(entry.name, 0) + 1
-        self.engine(entry.name).submit(req)
-        return entry.name
+        """Route ``req`` and enqueue it on that entry's supervised
+        fleet; returns the entry name (recorded on ``req.routed_to``).
+
+        Graceful degradation: if the preferred entry fails to build
+        (quarantine) or sheds at admission (saturated / deadline
+        infeasible through its backlog), the next policy-ordered
+        candidate is tried — the cheapest entry that still fits wins.
+        When nothing healthy can take it, the request is rejected with
+        :class:`RouteError`; a ``flag``-mode router still best-efforts
+        SLO-infeasible requests onto the fastest healthy entry, but an
+        overloaded (bounded-queue) fleet always sheds."""
+        candidates = self._candidates(req)
+        if not candidates:
+            entry = self.route(req)     # flag-mode fallback, or raises
+            candidates = [entry]
+        shed_reasons = []
+        for entry in candidates:
+            try:
+                sup = self._fleet(entry.name)
+            except Exception as e:      # noqa: BLE001 — ArtifactError,
+                # injected load faults, anything the factory throws:
+                # contain it as a quarantine and fall back
+                self._quarantine(entry.name,
+                                 f"{type(e).__name__}: {e}")
+                shed_reasons.append(f"{entry.name}: build failed")
+                continue
+            if sup.dead:
+                self._quarantine(entry.name,
+                                 sup.death_reason or "supervisor dead")
+                shed_reasons.append(f"{entry.name}: dead")
+                continue
+            try:
+                sup.submit(req)
+            except RouteError as e:
+                shed_reasons.append(str(e))
+                continue
+            req.routed_to = entry.name
+            self._histogram[entry.name] = \
+                self._histogram.get(entry.name, 0) + 1
+            return entry.name
+        self._rejected += 1
+        raise RouteError(
+            f"request {req.rid} shed: no healthy catalog entry could "
+            f"admit it ({'; '.join(shed_reasons)})")
 
     @property
     def has_work(self) -> bool:
-        return any(e.has_work for e in self._engines.values())
+        return any(s.has_work for s in self._fleets.values())
 
     def step(self) -> Dict[str, Any]:
-        """One quantum across the fleet: every engine with work advances
-        one :meth:`ServeEngine.step`. Wall time accrues per quantum (as
-        in the engine), so a fleet driven by an external ``step()`` loop
-        still reports a meaningful ``tokens_per_s``."""
+        """One quantum across the fleet: every supervised entry with work
+        advances one :meth:`ReplicaSupervisor.step` (which contains
+        crashes and rebuilds replicas). Wall time accrues per quantum, so
+        a fleet driven by an external ``step()`` loop still reports a
+        meaningful ``tokens_per_s``. Trips breakers and runs periodic
+        quarantine probes."""
         t0 = time.perf_counter()
         try:
-            events = {name: eng.step()["event"]
-                      for name, eng in self._engines.items()
-                      if eng.has_work}
+            self._steps += 1
+            events = {}
+            for name, sup in self._fleets.items():
+                if sup.has_work:
+                    events[name] = sup.step()["event"]
+                if name not in self._quarantined:
+                    if sup.dead:
+                        self._quarantine(
+                            name, sup.death_reason or "supervisor dead")
+                    elif self.breaker_k and \
+                            sup.consecutive_crashes >= self.breaker_k:
+                        self._quarantine(
+                            name, f"circuit breaker: "
+                                  f"{sup.consecutive_crashes} consecutive "
+                                  f"crashes (last: {sup.last_error})")
+            if self._quarantined and self.probe_every \
+                    and self._steps % self.probe_every == 0:
+                self.probe()
             return {"event": "fleet" if events else "idle",
                     "engines": events}
         finally:
@@ -301,28 +490,35 @@ class Router:
                 break
             self.step()
         if self.measurements is not None:
-            for eng in self._engines.values():
-                if eng._step_times:
-                    eng.record_measurements()
+            for sup in self._fleets.values():
+                for eng in sup.engines:
+                    if eng._step_times:
+                        eng.record_measurements()
         return self.stats()
 
     def reset_stats(self) -> None:
-        """Zero the router's counters and every live engine's stats
-        (engines and their compiled programs are kept — benchmarks use
-        this to exclude a warmup drain from a timed one)."""
-        for eng in self._engines.values():
-            eng.reset_stats()
+        """Zero the router's counters and every fleet's stats (engines
+        and their compiled programs are kept — benchmarks use this to
+        exclude a warmup drain from a timed one). Quarantine state is
+        health, not stats, and survives."""
+        for sup in self._fleets.values():
+            sup.reset_stats()
         self._histogram = {}
         self._flagged = 0
         self._rejected = 0
+        self._probes = 0
+        self._recovered = 0
         self._wall_s = 0.0
 
     def stats(self) -> Dict[str, Any]:
         """Fleet-wide serving stats: the routing histogram, per-artifact
-        engine stats, and the measured budget-violation rate."""
-        per_artifact = {name: eng.stats()
-                        for name, eng in self._engines.items()}
-        done = [r for eng in self._engines.values() for r in eng.done]
+        supervisor stats (crashes, rebuilds, re-queues, per-replica
+        engine stats), quarantine state, and the measured
+        budget-violation rate."""
+        per_artifact = {name: sup.stats()
+                        for name, sup in self._fleets.items()}
+        done = [r for sup in self._fleets.values() for r in sup.completed]
+        failed = [r for sup in self._fleets.values() for r in sup.failed]
         budgeted = [r for r in done if r.latency_budget_s is not None]
         violations = [r for r in budgeted
                       if r.t_done - r.t_submit > r.latency_budget_s]
@@ -339,5 +535,16 @@ class Router:
             "budget_violations": len(violations),
             "budget_violation_rate": (len(violations) / len(budgeted)
                                       if budgeted else 0.0),
+            # fault-tolerance accounting (fleet-wide sums; per-entry
+            # detail lives in per_artifact)
+            "failed": len(failed),
+            "crashes": sum(s.crashes for s in self._fleets.values()),
+            "rebuilds": sum(s.rebuilds for s in self._fleets.values()),
+            "requeued": sum(s.requeued for s in self._fleets.values()),
+            "shed": sum(s.shed for s in self._fleets.values()),
+            "quarantined": {name: q["reason"]
+                            for name, q in self._quarantined.items()},
+            "probes": self._probes,
+            "recovered": self._recovered,
             "per_artifact": per_artifact,
         }

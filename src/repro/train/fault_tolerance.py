@@ -3,10 +3,10 @@
 * ``resilient_loop`` — drives train steps with automatic restore-from-latest
   checkpoint on failure (bounded retries). Failures are injectable for
   tests (``FaultInjector``).
-* ``StragglerMonitor`` — per-step deadline watch: steps slower than
-  ``factor`` x rolling median are logged and counted; at scale the driver
-  uses this to trigger re-scheduling (here: surfaced as metrics + tested
-  with injected delays).
+* ``StragglerMonitor`` / ``FaultInjector`` — now live in
+  :mod:`repro.util.faults` (shared with the serving fleet, which uses the
+  same injection discipline for engine crashes, prefill OOMs, artifact
+  load failures, and slow-step stragglers); re-exported here unchanged.
 * ``compress_grads`` / ``decompress_grads`` — int8 error-feedback gradient
   compression for DCN-bound (cross-pod) reductions: quantize to int8 with
   per-tensor scale, carry the residual to the next step. 4x wire-format
@@ -14,57 +14,17 @@
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.util.faults import (FaultInjector, FaultSpec, InjectedFault,
+                               StragglerMonitor)
 
-# ---------------------------------------------------------------------------
-# Straggler monitoring
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class StragglerMonitor:
-    factor: float = 3.0
-    window: int = 32
-    _times: List[float] = dataclasses.field(default_factory=list)
-    stragglers: int = 0
-
-    def observe(self, seconds: float) -> bool:
-        """Returns True if this step was a straggler."""
-        is_straggler = False
-        if len(self._times) >= 5:
-            med = float(np.median(self._times[-self.window:]))
-            is_straggler = seconds > self.factor * med
-        self._times.append(seconds)
-        if is_straggler:
-            self.stragglers += 1
-        return is_straggler
-
-    @property
-    def median_s(self) -> float:
-        return float(np.median(self._times)) if self._times else 0.0
-
-
-# ---------------------------------------------------------------------------
-# Crash recovery
-# ---------------------------------------------------------------------------
-
-class FaultInjector:
-    """Deterministic failure injection for tests."""
-
-    def __init__(self, fail_at_steps=()):
-        self.fail_at = set(fail_at_steps)
-        self.fired = set()
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise RuntimeError(f"injected fault at step {step}")
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault", "StragglerMonitor",
+           "resilient_loop", "compress_grads", "decompress_grads"]
 
 
 def resilient_loop(*, n_steps: int, state: Dict[str, Any],

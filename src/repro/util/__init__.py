@@ -1,0 +1,6 @@
+"""Shared runtime utilities used by both the train and serve stacks."""
+from repro.util.faults import (FaultInjector, FaultSpec, InjectedFault,
+                               StragglerMonitor, crash_at, delay_at)
+
+__all__ = ["FaultInjector", "FaultSpec", "InjectedFault", "StragglerMonitor",
+           "crash_at", "delay_at"]

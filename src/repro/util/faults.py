@@ -1,0 +1,183 @@
+"""Shared fault runtime: deterministic injection + straggler detection.
+
+Promoted out of ``repro.train.fault_tolerance`` (which re-exports these
+names) so the *serve* stack can use the same discipline the train loop
+already has: every failure mode is a named injection point that fires
+deterministically, so crash recovery is testable instead of aspirational.
+
+Injection points wired into the serving stack (``ServeEngine`` fires the
+first two, the router's engine factory fires the third):
+
+``"decode"``
+    immediately before each jitted decode call (one fire per live group
+    per tick) — an engine crash mid-decode.
+``"prefill"``
+    immediately before a cohort's prefill — an admission-time OOM.
+``"artifact_load"``
+    before a catalog member artifact is loaded/an engine is built — a
+    deleted or tampered artifact surfacing at fleet-build time.
+
+Every fire also counts a tagged variant ``"<point>:<tag>"`` (the engine's
+``fault_tag``, ``"<entry>#r<replica>"`` in a fleet), so a spec can target
+one specific engine out of a fleet sharing a single injector.
+
+Crash specs raise :class:`InjectedFault`; delay specs sleep (a slow-step
+straggler — the engine's :class:`StragglerMonitor` sees the inflated
+step time). Occurrence indices are 0-based and fire at most once each,
+so a rebuilt-after-crash engine serves cleanly: exactly the restore
+discipline ``resilient_loop`` has always tested with ``fail_at_steps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic, test-injected failure (never raised in
+    production paths unless a :class:`FaultInjector` was attached)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: fire at the given 0-based occurrence indices
+    of ``point`` (which may be a tagged variant like ``"decode:a@t#r0"``).
+    """
+
+    point: str
+    at: Tuple[int, ...] = (0,)
+    kind: str = "crash"             # "crash" | "delay"
+    delay_s: float = 0.0
+    message: str = ""
+
+    def __post_init__(self):
+        if self.kind not in ("crash", "delay"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        object.__setattr__(self, "at", tuple(int(i) for i in self.at))
+
+
+def crash_at(point: str, *at: int, message: str = "") -> FaultSpec:
+    """Crash spec: raise :class:`InjectedFault` at these occurrences of
+    ``point`` (default: the first)."""
+    return FaultSpec(point, at or (0,), "crash", 0.0, message)
+
+
+def delay_at(point: str, delay_s: float, *at: int) -> FaultSpec:
+    """Delay spec: sleep ``delay_s`` at these occurrences of ``point``
+    (an injected straggler)."""
+    return FaultSpec(point, at or (0,), "delay", delay_s)
+
+
+class FaultInjector:
+    """Deterministic failure injection for tests and chaos runs.
+
+    The legacy train-loop interface (``fail_at_steps`` +
+    :meth:`maybe_fail`) is unchanged; the serve stack uses named points:
+
+        inj = FaultInjector(specs=[crash_at("decode", 5),
+                                   delay_at("decode", 0.05, 9)])
+        inj.fire("decode", tag="fast@v5e#r0")   # counts both keys
+
+    ``fired_log`` records every fault actually delivered as
+    ``(key, occurrence, kind)`` so tests can assert exactly what fired.
+    """
+
+    def __init__(self, fail_at_steps=(), specs=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+        self.specs: List[FaultSpec] = list(specs)
+        self.counts: Dict[str, int] = {}
+        self.fired_log: List[Tuple[str, int, str]] = []
+
+    def maybe_fail(self, step: int):
+        """Legacy train-loop hook: raise once per scheduled step."""
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+    def count(self, point: str) -> int:
+        """Occurrences of ``point`` fired so far."""
+        return self.counts.get(point, 0)
+
+    def fire(self, point: str, tag: Optional[str] = None) -> float:
+        """Count one occurrence of ``point`` (and of ``point:tag``),
+        deliver any scheduled fault, and return seconds slept.
+
+        Both keys are counted *before* any fault is delivered, so a
+        crash never desynchronizes the tagged counter from the global
+        one. When a delay and a crash land on the same occurrence the
+        delay runs first (a straggler that then dies)."""
+        keys = [point] if tag is None else [point, f"{point}:{tag}"]
+        hits = []
+        for key in keys:
+            n = self.counts.get(key, 0)
+            self.counts[key] = n + 1
+            for spec in self.specs:
+                if spec.point == key and n in spec.at:
+                    hits.append((spec, key, n))
+        slept = 0.0
+        crash = None
+        for spec, key, n in hits:
+            self.fired_log.append((key, n, spec.kind))
+            if spec.kind == "delay":
+                time.sleep(spec.delay_s)
+                slept += spec.delay_s
+            elif crash is None:
+                crash = (spec, key, n)
+        if crash is not None:
+            spec, key, n = crash
+            raise InjectedFault(
+                spec.message or f"injected {key!r} fault "
+                                f"(occurrence {n})")
+        return slept
+
+
+# ---------------------------------------------------------------------------
+# Straggler monitoring
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Per-step deadline watch: steps slower than ``factor`` x rolling
+    median are counted as stragglers.
+
+    ``skip_first`` warmup samples are discarded entirely — they never
+    enter the median window. Without it the threshold is seeded from the
+    first 5 samples *including* warmup/compile steps, which inflates the
+    median and hides early stragglers (the serve engine's first decode
+    ticks pay jit compilation, so serve-side monitors must skip them).
+    """
+
+    factor: float = 3.0
+    window: int = 32
+    skip_first: int = 0
+    min_samples: int = 5
+    _times: List[float] = dataclasses.field(default_factory=list)
+    _skipped: int = 0
+    stragglers: int = 0
+
+    def observe(self, seconds: float) -> bool:
+        """Returns True if this step was a straggler."""
+        if self._skipped < self.skip_first:
+            self._skipped += 1
+            return False
+        is_straggler = False
+        if len(self._times) >= self.min_samples:
+            med = float(np.median(self._times[-self.window:]))
+            is_straggler = seconds > self.factor * med
+        self._times.append(seconds)
+        if is_straggler:
+            self.stragglers += 1
+        return is_straggler
+
+    @property
+    def samples(self) -> int:
+        """Recorded (post-warmup) samples."""
+        return len(self._times)
+
+    @property
+    def median_s(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0

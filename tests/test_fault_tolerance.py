@@ -103,6 +103,44 @@ def test_straggler_monitor_flags_slow_steps():
     assert mon.stragglers == 1
 
 
+def test_straggler_monitor_skip_first_discards_warmup():
+    """Regression: compile-inflated warmup steps must never seed the
+    rolling median. Without skip_first, two 1s compile steps inflate the
+    first-5-samples median and a genuinely slow step passes unflagged;
+    with skip_first=2 the same trace flags it."""
+    compile_steps = [1.0] * 6           # one jit retrace per group shape
+    steady = [0.01] * 5
+    slow = 0.05                         # 5x steady, but < 3x compile-median
+
+    naive = StragglerMonitor(factor=3.0)
+    for t in compile_steps + steady:
+        naive.observe(t)
+    assert naive.observe(slow) is False         # hidden by warmup samples
+
+    warm = StragglerMonitor(factor=3.0, skip_first=len(compile_steps))
+    for t in compile_steps + steady:
+        warm.observe(t)
+    assert warm.observe(slow) is True
+    assert warm.samples == len(steady) + 1      # warmup never recorded
+    assert warm.median_s == pytest.approx(0.01)
+
+
+def test_fault_runtime_is_shared_with_the_serve_stack():
+    """The train-loop names re-export repro.util.faults unchanged (the
+    serving fleet injects through the same classes)."""
+    from repro.util import faults as uf
+    assert FaultInjector is uf.FaultInjector
+    assert StragglerMonitor is uf.StragglerMonitor
+    inj = FaultInjector(specs=[uf.crash_at("decode", 1)])
+    inj.fire("decode")
+    with pytest.raises(uf.InjectedFault):
+        inj.fire("decode")
+    # legacy interface still served by the same class
+    inj2 = FaultInjector(fail_at_steps=[0])
+    with pytest.raises(RuntimeError):
+        inj2.maybe_fail(0)
+
+
 def test_grad_compression_error_feedback_is_unbiased():
     """Sum of decompressed grads + final residual == sum of true grads."""
     key = jax.random.PRNGKey(0)

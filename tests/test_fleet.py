@@ -1,0 +1,461 @@
+"""Fault-tolerant serving fleet (ISSUE 6): supervised engines, serve-time
+fault injection, deadline-aware retry/re-queue, graceful degradation.
+
+Acceptance contract: under injected engine crashes (and one permanently
+failing catalog member) every submitted request either completes or is
+explicitly rejected — nothing is silently lost; re-queued requests
+produce bit-identical greedy outputs to an uninterrupted run; a tampered
+member is quarantined while the rest of the catalog keeps serving; and
+overload sheds at admission instead of queueing past deadlines.
+"""
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import CPruneConfig, TrainHooks, Workload, plan
+from repro.api.artifact import ArtifactError
+from repro.configs import get_reduced_config
+from repro.core import clear_tuning_caches
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.fleet import ReplicaSupervisor, RetryPolicy, RouteError
+from repro.serve.router import ArtifactCatalog, Router
+from repro.util.faults import (FaultInjector, FaultSpec, InjectedFault,
+                               crash_at, delay_at)
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+def _cfg():
+    return get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rng, cfg, rid, n_new=4, **kw):
+    return Request(rid=rid, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32),
+        max_new_tokens=n_new, **kw)
+
+
+def _count(p):
+    return sum(int(np.prod(np.asarray(x).shape)) for x in jax.tree.leaves(p))
+
+
+@pytest.fixture(scope="module")
+def catalog_dir(tmp_path_factory):
+    """One plan, two frontier artifacts (fast/less-accurate vs
+    slow/accurate) — the chaos fixture for router-level containment."""
+    clear_tuning_caches()
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n0 = _count(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: _count(p) / n0)
+    pl = plan(cfg, accuracy_floor=0.0, targets=["tpu_v5e"],
+              strategies=["uniform_l1", "fpgm"],
+              workload=Workload(tokens_global=8192), hooks=hooks,
+              params=params, pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+              strategy_kwargs={"uniform_l1": {"ratio": 0.6},
+                               "fpgm": {"ratio": 0.1}})
+    path = tmp_path_factory.mktemp("chaos")
+    cat = pl.export_catalog(str(path), max_batch=2, max_seq=24)
+    assert len(cat) == 2
+    clear_tuning_caches()
+    return str(path), cfg
+
+
+def _entries(cat):
+    fast = min(cat, key=lambda e: e.predicted_step_s)
+    accurate = max(cat, key=lambda e: e.accuracy)
+    return fast, accurate
+
+
+def _tamper(root, entry):
+    """Flip the manifest's accuracy claim for one member — the artifact's
+    own metadata then disagrees, which ArtifactCatalog refuses."""
+    import json
+    man = os.path.join(root, "catalog.json")
+    with open(man) as f:
+        blob = json.load(f)
+    for d in blob["entries"]:
+        if d["name"] == entry:
+            d["accuracy"] = d["accuracy"] + 0.5
+    with open(man, "w") as f:
+        json.dump(blob, f)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: named points, tags, occurrence indices, delays
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validates_kind_and_coerces_occurrences():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("decode", kind="explode")
+    assert crash_at("decode").at == (0,)
+    assert crash_at("decode", 3, 7).at == (3, 7)
+    assert delay_at("decode", 0.01, 2).delay_s == 0.01
+    assert FaultSpec("decode", at=(np.int64(1),)).at == (1,)
+
+
+def test_injector_fires_points_by_occurrence_and_tag():
+    inj = FaultInjector(specs=[
+        crash_at("decode", 2),                  # global: 3rd decode anywhere
+        crash_at("prefill:b#r1"),               # tagged: only replica b#r1
+        delay_at("decode", 0.0, 0),             # delay on the very first
+    ])
+    # occurrence 0: delay fires (returns slept), no crash
+    assert inj.fire("decode", tag="a#r0") == 0.0
+    assert inj.count("decode") == 1 and inj.count("decode:a#r0") == 1
+    inj.fire("decode", tag="a#r0")              # occurrence 1: clean
+    with pytest.raises(InjectedFault, match="occurrence 2"):
+        inj.fire("decode", tag="a#r0")          # occurrence 2: crash
+    # counters advanced BEFORE delivery: the crash occurrence is counted
+    assert inj.count("decode") == 3
+    # tag-targeted spec ignores other tags, hits its own
+    inj.fire("prefill", tag="a#r0")
+    with pytest.raises(InjectedFault):
+        inj.fire("prefill", tag="b#r1")
+    assert ("decode", 0, "delay") in inj.fired_log
+    assert ("decode", 2, "crash") in inj.fired_log
+    assert ("prefill:b#r1", 0, "crash") in inj.fired_log
+    # each scheduled occurrence fires at most once: replays are clean
+    inj2 = FaultInjector(specs=[crash_at("decode", 0)])
+    with pytest.raises(InjectedFault):
+        inj2.fire("decode")
+    inj2.fire("decode")                         # occurrence 1: clean
+
+
+def test_injector_legacy_train_interface_unchanged():
+    inj = FaultInjector(fail_at_steps=[3])
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError, match="injected fault at step 3"):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)                           # fires once
+
+
+# ---------------------------------------------------------------------------
+# Engine-level injection points
+# ---------------------------------------------------------------------------
+
+def test_engine_prefill_crash_loses_no_requests(setup):
+    """An admission-time crash (injected prefill OOM) must leave the
+    popped cohort recoverable: everything is still in in_flight()."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    reqs = [_req(rng, cfg, i) for i in range(2)]
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=16,
+                      faults=FaultInjector(specs=[crash_at("prefill")]))
+    for r in reqs:
+        eng.submit(r)
+    with pytest.raises(InjectedFault):
+        eng.step()
+    assert {r.rid for r in eng.in_flight()} == {0, 1}   # nothing lost
+    # the occurrence is consumed — the same engine drains cleanly
+    while eng.has_work:
+        eng.step()
+    assert all(r.done and len(r.output) == 4 for r in reqs)
+
+
+def test_engine_decode_delay_is_seen_by_straggler_monitor(setup):
+    """A delay spec inflates the timed decode step — the attached
+    StragglerMonitor (warmup skipped) must flag it."""
+    from repro.util.faults import StragglerMonitor
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(cfg, params, max_batch=2, max_seq=24,
+                      faults=FaultInjector(specs=[delay_at("decode", 0.25,
+                                                           10)]),
+                      straggler=StragglerMonitor(factor=3.0, skip_first=2))
+    eng.submit(_req(rng, cfg, 0, n_new=14))
+    stats = eng.run()
+    assert stats["straggler_steps"] >= 1
+    assert eng.straggler.samples == 13 - 2      # warmup never recorded
+
+
+# ---------------------------------------------------------------------------
+# ReplicaSupervisor: crash recovery, bit-identity, retries, admission
+# ---------------------------------------------------------------------------
+
+def test_supervisor_crash_after_compaction_is_bit_identical(setup):
+    """Kill the engine on a decode tick *after* SlotGroup pow2 compaction
+    (4 rows -> 2) and assert the re-queued requests reproduce the exact
+    fault-free greedy outputs through the rebuilt engine."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    mixed = [2, 2, 6, 6]                # two retire together -> 4->2 compact
+
+    def fresh_requests():
+        r = np.random.default_rng(2)
+        return [_req(r, cfg, i, n_new=n) for i, n in enumerate(mixed)]
+
+    # fault-free reference
+    ref_eng = ServeEngine(cfg, params, max_batch=4, max_seq=16)
+    ref = fresh_requests()
+    for r in ref:
+        ref_eng.submit(r)
+    ref_eng.run()
+    assert all(r.done for r in ref)
+
+    # supervised run: decode occurrence 2 is the first tick after the
+    # compaction (occ 0 retires the short pair and compacts the group)
+    inj = FaultInjector(specs=[crash_at("decode", 2)])
+    sup = ReplicaSupervisor(
+        lambda i: ServeEngine(cfg, params, max_batch=4, max_seq=16,
+                              faults=inj),
+        name="compact-crash", retry=RetryPolicy(max_retries=2))
+    for r in fresh_requests():
+        sup.submit(r)
+    stats = sup.run()
+
+    assert stats["crashes"] == 1 and stats["rebuilds"] == 1
+    assert stats["requeued"] == 2               # the two survivors
+    assert stats["retried_requests"] == 2
+    assert stats["failed"] == 0 and not stats["dead"]
+    acc = stats["accounting"]
+    assert acc["submitted"] == 4
+    assert acc["completed"] == 4 and acc["in_flight"] == 0
+    got = {r.rid: r.output for r in sup.completed}
+    want = {r.rid: r.output for r in ref}
+    assert got == want                          # bit-identical greedy decode
+    assert max(r.retries for r in sup.completed) == 1
+
+
+def test_supervisor_exhausts_retry_budget_explicitly(setup):
+    """A poisoned engine (every decode tick crashes) must end in an
+    explicit failure with fail_reason='retries' — never a silent loss or
+    an infinite rebuild loop."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    inj = FaultInjector(specs=[crash_at("decode", *range(16))])
+    sup = ReplicaSupervisor(
+        lambda i: ServeEngine(cfg, params, max_batch=2, max_seq=16,
+                              faults=inj),
+        name="poisoned", retry=RetryPolicy(max_retries=1))
+    req = _req(rng, cfg, 0)
+    sup.submit(req)
+    stats = sup.run()
+    assert req.failed and req.fail_reason == "retries"
+    assert not req.done and req in sup.failed
+    assert stats["failed_by_reason"] == {"retries": 1}
+    assert stats["crashes"] == 2                # initial + one retry
+    acc = stats["accounting"]
+    assert acc == {"submitted": 1, "completed": 0, "failed": 1,
+                   "in_flight": 0}
+
+
+def test_supervisor_admission_sheds_on_overload_and_deadline(setup):
+    """Admission control is engine-free: a full queue or an infeasible
+    budget sheds with RouteError before any engine is built."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+
+    def no_build(i):
+        raise AssertionError("admission must not build engines")
+
+    sup = ReplicaSupervisor(no_build, name="bounded", max_queue=2)
+    sup.submit(_req(rng, cfg, 0))
+    sup.submit(_req(rng, cfg, 1))
+    with pytest.raises(RouteError, match="saturated"):
+        sup.submit(_req(rng, cfg, 2))
+    assert sup.shed == 1 and sup.submitted == 2
+
+    priced = ReplicaSupervisor(no_build, name="priced", est_step_s=1.0)
+    with pytest.raises(RouteError, match="cannot meet its deadline"):
+        priced.submit(_req(rng, cfg, 0, n_new=4, latency_budget_s=2.0))
+    # a feasible budget is admitted at its full value (t_submit is set
+    # in the same clock snapshot as the deadline check)
+    priced.submit(_req(rng, cfg, 1, n_new=4, latency_budget_s=10.0))
+    # a re-routed request keeps its original submit time — once the
+    # elapsed wall clock eats the margin, re-admission sheds explicitly
+    stale = _req(rng, cfg, 2, n_new=4, latency_budget_s=5.0)
+    stale.t_submit = time.time() - 2.0          # 2s already burned
+    with pytest.raises(RouteError, match="cannot meet its deadline"):
+        priced.submit(stale)
+    assert priced.shed == 2 and priced.submitted == 1
+
+
+def test_supervisor_dies_after_build_failures_then_probe_revives(setup):
+    """A permanently failing factory kills the supervisor (its queue is
+    failed explicitly, 'quarantined'); a later successful probe revives
+    it for new work — the router's half-open recovery path."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    broken = {"on": True}
+
+    def factory(i):
+        if broken["on"]:
+            raise ArtifactError("artifact vanished")
+        return ServeEngine(cfg, params, max_batch=2, max_seq=16)
+
+    sup = ReplicaSupervisor(factory, name="flaky",
+                            retry=RetryPolicy(max_build_failures=1))
+    req = _req(rng, cfg, 0)
+    sup.submit(req)
+    while sup.has_work:
+        sup.step()
+    assert sup.dead and "build failed" in sup.death_reason
+    assert req.failed and req.fail_reason == "quarantined"
+    with pytest.raises(RouteError, match="dead"):
+        sup.submit(_req(rng, cfg, 1))
+    assert not sup.probe()                      # still broken
+    broken["on"] = False
+    assert sup.probe()                          # half-open success
+    assert not sup.dead
+    r2 = _req(rng, cfg, 2)
+    sup.submit(r2)
+    sup.run()
+    assert r2.done and len(r2.output) == 4
+
+
+def test_supervisor_spreads_load_across_replicas(setup):
+    """N replicas serve one entry: both engines take work, stats
+    aggregate across them, and the zero-loss invariant holds."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    sup = ReplicaSupervisor(
+        lambda i: ServeEngine(cfg, params, max_batch=1, max_seq=16,
+                              seed=i),
+        name="pair", replicas=2)
+    reqs = [_req(rng, cfg, i) for i in range(4)]
+    for r in reqs:
+        sup.submit(r)
+    stats = sup.run()
+    assert stats["replicas"] == 2 and stats["live_replicas"] == 2
+    assert all(r.done for r in reqs)
+    assert stats["accounting"]["completed"] == 4
+    per_replica = stats["per_replica"]
+    assert len(per_replica) == 2
+    assert all(s["requests"] >= 1 for s in per_replica)   # both served
+
+
+# ---------------------------------------------------------------------------
+# Router: quarantine, breaker, fallback, overload
+# ---------------------------------------------------------------------------
+
+def test_router_quarantines_tampered_member_and_keeps_serving(
+        catalog_dir, tmp_path):
+    """Satellite regression: one tampered member of a 2-entry catalog is
+    quarantined at lazy build time; the other entry keeps serving."""
+    path, cfg = catalog_dir
+    root = str(tmp_path / "cat")
+    shutil.copytree(path, root)
+    cat0 = ArtifactCatalog.load(path)
+    fast, accurate = _entries(cat0)
+    _tamper(root, accurate.name)
+
+    # eager load refuses the whole catalog (the pre-fleet behaviour) ...
+    with pytest.raises(ArtifactError, match="does not match"):
+        ArtifactCatalog.load(root)
+    # ... lazy load defers, so the router can contain the bad member
+    cat = ArtifactCatalog.load(root, lazy=True)
+    router = Router(cat)
+    # Router.engine() on the bad entry: quarantine, then propagate
+    with pytest.raises(ArtifactError, match="does not match"):
+        router.engine(accurate.name)
+    assert accurate.name in router.stats()["quarantined"]
+
+    rng = np.random.default_rng(7)
+    reqs = [_req(rng, cfg, i) for i in range(3)]
+    for r in reqs:
+        # quality policy would prefer the accurate entry — quarantine
+        # forces the healthy fast one
+        assert router.submit(r) == fast.name
+    stats = router.run()
+    assert all(r.done for r in reqs)
+    assert stats["requests"] == 3
+    assert stats["routing"] == {fast.name: 3}
+    assert stats["quarantined"] == \
+        {accurate.name: stats["quarantined"][accurate.name]}
+    assert "ArtifactError" in stats["quarantined"][accurate.name]
+
+
+def test_router_submit_falls_back_when_preferred_entry_fails_to_build(
+        catalog_dir, tmp_path):
+    """Same tampered catalog, but the quarantine happens *inside*
+    submit() — the caller just sees the request land on the healthy
+    entry."""
+    path, cfg = catalog_dir
+    root = str(tmp_path / "cat")
+    shutil.copytree(path, root)
+    fast, accurate = _entries(ArtifactCatalog.load(path))
+    _tamper(root, accurate.name)
+    router = Router(ArtifactCatalog.load(root, lazy=True))
+    rng = np.random.default_rng(8)
+    req = _req(rng, cfg, 0)
+    assert router.submit(req) == fast.name
+    assert accurate.name in router.stats()["quarantined"]
+    router.run()
+    assert req.done and req.routed_to == fast.name
+
+
+def test_router_breaker_trips_then_probe_restores(catalog_dir):
+    """breaker_k consecutive crashes quarantine an entry; the queued
+    request still drains (retry on the rebuilt engine), and a manual
+    probe restores the entry to dispatch."""
+    path, cfg = catalog_dir
+    cat = ArtifactCatalog.load(path)
+    fast, accurate = _entries(cat)
+    # two consecutive crashes on the accurate entry's replica 0
+    inj = FaultInjector(specs=[
+        crash_at(f"decode:{accurate.name}#r0", 0, 1)])
+    router = Router(cat, faults=inj, breaker_k=2, probe_every=0,
+                    retry=RetryPolicy(max_retries=3))
+    rng = np.random.default_rng(9)
+    req = _req(rng, cfg, 0, accuracy_floor=accurate.accuracy)
+    assert router.submit(req) == accurate.name
+    stats = router.run()
+    assert req.done and len(req.output) == 4    # third attempt served
+    assert req.retries == 2
+    assert stats["crashes"] == 2 and stats["requeued"] == 2
+    assert accurate.name in stats["quarantined"]
+    assert "circuit breaker" in stats["quarantined"][accurate.name]
+    # quarantine redirects new work (floor-less) to the healthy entry
+    r2 = _req(rng, cfg, 1)
+    assert router.submit(r2) == fast.name
+    # a floor only the quarantined entry meets now sheds explicitly
+    with pytest.raises(RouteError):
+        router.submit(_req(rng, cfg, 2, accuracy_floor=accurate.accuracy))
+    # half-open probe: the supervisor is alive again -> restored
+    assert router.probe() == [accurate.name]
+    assert router.submit(
+        _req(rng, cfg, 3, accuracy_floor=accurate.accuracy)) == accurate.name
+    router.run()
+
+
+def test_router_overload_falls_back_then_sheds(catalog_dir):
+    """A bounded per-entry queue degrades gracefully: overflow falls to
+    the next candidate, and when every fleet is full the request is shed
+    with RouteError (explicitly, at submit)."""
+    path, cfg = catalog_dir
+    cat = ArtifactCatalog.load(path)
+    fast, accurate = _entries(cat)
+    router = Router(cat, max_queue=1)
+    rng = np.random.default_rng(10)
+    assert router.submit(_req(rng, cfg, 0)) == accurate.name
+    assert router.submit(_req(rng, cfg, 1)) == fast.name   # fallback
+    with pytest.raises(RouteError, match="shed"):
+        router.submit(_req(rng, cfg, 2))                   # both full
+    stats = router.stats()
+    # request 1 shed once (on the accurate fleet), request 2 on both
+    assert stats["rejected"] == 1 and stats["shed"] == 3
+    router.run()
+    final = router.stats()
+    assert final["requests"] == 2
+    assert final["routing"] == {accurate.name: 1, fast.name: 1}
