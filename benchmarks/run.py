@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serve_chaos        supervised fleet under injected crashes/stragglers
                      + one tampered catalog member (zero lost requests,
                      bit-identical re-queued outputs, goodput gate)
+  serve_autopilot    drift-triggered autopilot: injected decode drift ->
+                     recalibrated replan -> atomic hot-swap (swap must
+                     happen, violation rate must drop, zero dropped)
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -50,6 +53,7 @@ def main() -> None:
         ("artifact_smoke", artifact_smoke.run),
         ("serve_bench", serve_bench.run),
         ("serve_chaos", serve_bench.run_chaos),
+        ("serve_autopilot", serve_bench.run_autopilot),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

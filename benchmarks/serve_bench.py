@@ -29,7 +29,16 @@ re-queued outputs **bit-identical** to a fault-free drain, and chaos
 goodput (delivered tokens) >= ``SERVE_CHAOS_MIN_GOODPUT`` (default 0.7)
 of the fault-free run's.
 
-Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py [--chaos]``
+A fourth arm (CI ``autopilot-smoke``, ``--autopilot``) serves a
+replay-backed catalog while an injected decode delay drifts the accurate
+entry far past its prediction: the :class:`repro.serve.Autopilot` must —
+autonomously — detect the drift, replan under the recalibrated oracle,
+and hot-swap the new catalog generation in. Gates: at least one swap, a
+post-swap budget-violation rate strictly below pre-swap, and **zero
+dropped requests** across the swap.
+
+Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py
+[--chaos|--autopilot]``
 """
 from __future__ import annotations
 
@@ -41,8 +50,10 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.api import CPruneConfig, TrainHooks, Workload, plan
+from repro.api import (CPruneConfig, MeasuredOracle, MeasurementConfig,
+                       MeasurementLog, TrainHooks, Workload, plan)
 from repro.models.model import init_params
+from repro.serve.autopilot import Autopilot, AutopilotConfig
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.fleet import RetryPolicy, RouteError
 from repro.serve.router import ArtifactCatalog, Router
@@ -298,9 +309,134 @@ def run_chaos():
     return {"chaos": chaos, "ref": ref, "goodput": goodput}
 
 
+class _DeterministicMeasuredOracle(MeasuredOracle):
+    """Per-kernel timing as a deterministic function of problem size —
+    the real recording/replay/rescale code path, but the frontier
+    ordering (more pruning => faster) cannot be inverted by interpret-
+    mode timing noise (see tests/test_autopilot.py)."""
+
+    def _time_kernel(self, m, k, n, batch, dtype_bytes, block) -> float:
+        return float(m * k * n * batch) * 1e-12 + 5e-7
+
+
+def run_autopilot():
+    """CI ``autopilot-smoke``: drift -> replan -> hot-swap, no human.
+
+    Phase 1 serves budgeted requests on the accurate entry while an
+    injected decode delay drifts its observed step to >= 5x the oracle
+    prediction — every budget is violated. The autopilot detects the
+    drift through the measurement window, recalibrates the entry's
+    replay oracle, re-runs the plan's own sweep under it, and atomically
+    swaps the new catalog generation in. Phase 2 serves budgets spoken
+    in the *new* catalog's language and must (after a warmup drain of
+    the fresh engines) violate none of them.
+    """
+    cfg = _bench_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    t = common.Timer()
+    common.reset_tuning_caches()
+    n0 = common.count_params(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: common.count_params(p) / n0)
+    mcfg = MeasurementConfig(warmup=0, repeats=1, trim=0, measure_top_k=1,
+                             max_grid_steps=1)
+    pl = plan(cfg, accuracy_floor=0.0, targets=["tpu_v5e"],
+              strategies=["uniform_l1", "fpgm"],
+              workload=Workload(tokens_global=8192), hooks=hooks,
+              params=params,
+              oracle=_DeterministicMeasuredOracle(
+                  mcfg, record=MeasurementLog(mcfg)),
+              pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+              strategy_kwargs={"uniform_l1": {"ratio": 0.6},
+                               "fpgm": {"ratio": 0.1}})
+    with tempfile.TemporaryDirectory() as td:
+        catalog = pl.export_catalog(td, max_batch=2, max_seq=24)
+        common.reset_tuning_caches()
+        fast = min(catalog, key=lambda e: e.predicted_step_s)
+        accurate = max(catalog, key=lambda e: e.accuracy)
+
+        # synthetic drift: the accurate entry's decode step inflates to
+        # >= 5x its oracle prediction, every tick
+        delay = max(0.08, 5 * accurate.predicted_step_s)
+        inj = FaultInjector(specs=[
+            delay_at(f"decode:{accurate.name}#r0", delay, *range(4000))])
+        router = Router(catalog, faults=inj)
+        ap = Autopilot(router, replan=pl, faults=inj,
+                       config=AutopilotConfig(
+                           check_every=4, rel_error_threshold=1.0,
+                           min_window=2, min_budgeted=999,
+                           probation_steps=25, cooldown_steps=50,
+                           max_swaps=1))
+
+        rng = np.random.default_rng(0)
+
+        def _req(rid, budget):
+            return Request(rid=rid, prompt=rng.integers(
+                0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=4, latency_budget_s=budget)
+
+        # phase 1: budgets the pre-drift oracle promises easily
+        phase1 = [_req(i, delay) for i in range(4)]
+        for r in phase1:
+            router.submit(r)
+        ap.run(deadline_s=600)
+        st = ap.stats()
+        if st["swaps"] < 1:
+            raise RuntimeError(
+                f"autopilot never swapped: {st['events']}")
+        pre_rate = sum(r.t_done - r.t_submit > delay
+                       for r in phase1) / len(phase1)
+        if not all(r.done and not r.failed for r in phase1):
+            raise RuntimeError("pre-swap requests lost across the swap")
+
+        # phase 2: budgets in the recalibrated catalog's language
+        new_fast = min(router.catalog, key=lambda e: e.predicted_step_s)
+        new_acc = max(router.catalog, key=lambda e: e.accuracy)
+        b2 = (new_fast.predicted_step_s + new_acc.predicted_step_s) / 2 * 4
+        for i in range(2):              # warm the fresh engines
+            router.submit(_req(10 + i, b2))
+        ap.run(deadline_s=600)
+        phase2 = [_req(20 + i, b2) for i in range(2)]
+        for r in phase2:
+            router.submit(r)
+        ap.run(deadline_s=600)
+        post_rate = sum(r.t_done - r.t_submit > b2
+                        for r in phase2) / len(phase2)
+        rst = router.stats()
+
+    # -- gates --------------------------------------------------------------
+    if rst["submitted"] != rst["requests"] or rst["failed"] \
+            or rst["shed"] or rst["rejected"]:
+        raise RuntimeError(
+            f"requests dropped across the swap: submitted "
+            f"{rst['submitted']} != {rst['requests']} completed "
+            f"(failed={rst['failed']} shed={rst['shed']} "
+            f"rejected={rst['rejected']})")
+    if post_rate >= pre_rate:
+        raise RuntimeError(
+            f"hot-swap did not improve the budget-violation rate: "
+            f"post {post_rate:.2f} >= pre {pre_rate:.2f}")
+    common.emit(
+        "serve_autopilot", t.us(),
+        f"swaps={st['swaps']}"
+        f";replans={st['replans']}"
+        f";rollbacks={st['rollbacks']}"
+        f";generation={rst['generation']}"
+        f";pre_violation_rate={pre_rate:.2f}"
+        f";post_violation_rate={post_rate:.2f}"
+        f";submitted={rst['submitted']}"
+        f";completed={rst['requests']}"
+        f";retired_fleets={rst['retired_fleets']}")
+    common.reset_tuning_caches()
+    return {"stats": st, "router": rst, "pre_rate": pre_rate,
+            "post_rate": post_rate}
+
+
 if __name__ == "__main__":
     import sys
     if "--chaos" in sys.argv:
         run_chaos()
+    elif "--autopilot" in sys.argv:
+        run_autopilot()
     else:
         run()

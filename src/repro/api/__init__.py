@@ -43,8 +43,10 @@ accuracy_floor=...)``).
 The `repro.core` modules remain importable as before; this package only
 composes them.
 """
-from repro.api.artifact import ArtifactError, DeploymentArtifact
-from repro.api.planner import Plan, PlanCandidate, PlanError, plan
+from repro.api.artifact import (ArtifactError, DeploymentArtifact,
+                                GenerationStore)
+from repro.api.planner import (Plan, PlanCandidate, PlanError, PlanInputs,
+                               plan, replan)
 from repro.api.session import PruningSession
 from repro.api.strategies import (PruneResult, get_strategy, list_strategies,
                                   register_strategy)
@@ -62,6 +64,6 @@ __all__ = [
     "list_targets", "register_target", "CPruneConfig", "TrainHooks",
     "Workload", "AnalyticOracle", "LatencyOracle", "MeasuredOracle",
     "MeasurementConfig", "MeasurementLog", "ReplayOracle", "get_oracle",
-    "use_oracle", "ArtifactError", "DeploymentArtifact", "Plan",
-    "PlanCandidate", "PlanError", "plan",
+    "use_oracle", "ArtifactError", "DeploymentArtifact", "GenerationStore",
+    "Plan", "PlanCandidate", "PlanError", "PlanInputs", "plan", "replan",
 ]

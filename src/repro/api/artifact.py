@@ -38,6 +38,8 @@ import dataclasses
 import hashlib
 import json
 import os
+import shutil
+import warnings
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -494,6 +496,24 @@ class DeploymentArtifact:
                 f"recalibration needs a replay-backed artifact (this one "
                 f"is {self.oracle.name!r}): only a recorded log can be "
                 f"rescaled deterministically")
+        kernel_keys = [k for k in self.oracle.log.entries
+                       if k.startswith("gemm:")]
+        if not kernel_keys:
+            raise ArtifactError(
+                "the bundled replay log records no kernel (gemm:*) "
+                "measurements, so there is nothing to rescale — re-export "
+                "the artifact from a session with a recording "
+                "MeasuredOracle")
+        if len(kernel_keys) == 1:
+            # a single kernel entry makes the rescale degenerate: the
+            # factor is fully aliased with that one measurement, so the
+            # "recalibrated" oracle cannot generalize beyond it
+            warnings.warn(
+                f"replay log has a single kernel measurement "
+                f"({kernel_keys[0]!r}); the rescale would be degenerate — "
+                f"returning the original oracle unscaled",
+                RuntimeWarning, stacklevel=2)
+            return self.oracle
         defaults = self.metadata.get("serve_defaults") or {}
         mb = max_batch if max_batch is not None \
             else defaults.get("max_batch", 8)
@@ -561,3 +581,195 @@ class DeploymentArtifact:
         return ServeEngine.from_artifact(self, max_batch=max_batch,
                                          max_seq=max_seq, seed=seed,
                                          predict_step=predict_step)
+
+
+# ---------------------------------------------------------------------------
+# Catalog generations — crash-safe, reversible hot-swap storage
+# ---------------------------------------------------------------------------
+
+GENERATIONS_DIR = "generations"
+CURRENT_NAME = "CURRENT"
+_GEN_PREFIX = "gen-"
+_CATALOG_MANIFEST = "catalog.json"   # mirrors serve.router.CATALOG_NAME
+
+
+class GenerationStore:
+    """Side-by-side catalog generations under one root, with an atomic
+    pointer flip as the only commit operation.
+
+    Layout::
+
+        root/
+          catalog.json ...          generation 0: the flat layout
+                                    ``Plan.export_catalog`` writes
+          generations/gen-0001/     a complete catalog directory
+          generations/gen-0002/     (member artifacts + catalog.json)
+          CURRENT                   JSON {"generation": N, "path": rel}
+
+    ``CURRENT`` is replaced via tmp + ``os.replace``, so a kill at any
+    point of a swap leaves either the old or the new generation fully
+    current — never a torn catalog: a staged generation is invisible
+    until its manifest exists *and* the pointer names it, and the
+    previous generation's files are untouched by the flip.
+    ``ArtifactCatalog.load`` resolves the pointer transparently; a root
+    with no ``CURRENT`` is simply generation 0, so pre-generation
+    catalogs keep loading unchanged. Generation 0 is never deleted —
+    ``rollback`` can always reach it.
+
+    ``faults`` (a :class:`repro.util.faults.FaultInjector`) fires the
+    ``swap_commit`` point immediately before the pointer flip, which is
+    how tests kill a swap mid-flight.
+    """
+
+    def __init__(self, root: str, *, keep_last: int = 3, faults=None):
+        self.root = root
+        self.keep_last = keep_last
+        self.faults = faults
+
+    # -- pointer ------------------------------------------------------------
+
+    @staticmethod
+    def read_pointer(root: str) -> Optional[Dict[str, Any]]:
+        """The raw ``CURRENT`` pointer, or ``None`` when the root is a
+        plain generation-0 catalog. A malformed pointer is refused loudly
+        (``os.replace`` makes a torn write impossible, so damage means
+        tampering)."""
+        p = os.path.join(root, CURRENT_NAME)
+        if not os.path.exists(p):
+            return None
+        try:
+            with open(p) as f:
+                blob = json.load(f)
+            return {"generation": int(blob["generation"]),
+                    "path": str(blob["path"])}
+        except (OSError, json.JSONDecodeError, KeyError, TypeError,
+                ValueError) as e:
+            raise ArtifactError(
+                f"malformed generation pointer at {p!r}: "
+                f"{type(e).__name__}: {e}") from e
+
+    @classmethod
+    def resolve(cls, root: str) -> Tuple[int, str]:
+        """``(generation, directory)`` the catalog at ``root`` currently
+        serves from — ``(0, root)`` when no pointer exists."""
+        ptr = cls.read_pointer(root)
+        if ptr is None:
+            return 0, root
+        path = os.path.normpath(os.path.join(root, ptr["path"]))
+        if not os.path.exists(os.path.join(path, _CATALOG_MANIFEST)):
+            raise ArtifactError(
+                f"generation pointer at {root!r} names generation "
+                f"{ptr['generation']} ({path!r}) but no catalog manifest "
+                f"exists there")
+        return ptr["generation"], path
+
+    @property
+    def current(self) -> Tuple[int, str]:
+        return self.resolve(self.root)
+
+    def gen_path(self, gen_id: int) -> str:
+        if gen_id == 0:
+            return self.root
+        return os.path.join(self.root, GENERATIONS_DIR,
+                            f"{_GEN_PREFIX}{gen_id:04d}")
+
+    def generations(self) -> Dict[int, str]:
+        """Every *complete* generation on disk (its manifest exists),
+        keyed by id. Staged-but-uncommitted directories are excluded."""
+        out: Dict[int, str] = {}
+        if os.path.exists(os.path.join(self.root, _CATALOG_MANIFEST)):
+            out[0] = self.root
+        gdir = os.path.join(self.root, GENERATIONS_DIR)
+        if os.path.isdir(gdir):
+            for name in sorted(os.listdir(gdir)):
+                if not name.startswith(_GEN_PREFIX):
+                    continue
+                try:
+                    gid = int(name[len(_GEN_PREFIX):])
+                except ValueError:
+                    continue
+                path = os.path.join(gdir, name)
+                if os.path.exists(os.path.join(path, _CATALOG_MANIFEST)):
+                    out[gid] = path
+        return out
+
+    def _all_gen_ids(self) -> List[int]:
+        """Ids of every generation directory, complete or orphaned."""
+        ids = [0]
+        gdir = os.path.join(self.root, GENERATIONS_DIR)
+        if os.path.isdir(gdir):
+            for name in os.listdir(gdir):
+                if name.startswith(_GEN_PREFIX):
+                    try:
+                        ids.append(int(name[len(_GEN_PREFIX):]))
+                    except ValueError:
+                        pass
+        return ids
+
+    # -- swap lifecycle -----------------------------------------------------
+
+    def stage(self) -> Tuple[int, str]:
+        """An empty directory for the next generation (id is monotonic
+        past every directory on disk *and* the current pointer, so retired
+        ids are never reused). A crashed previous stage at the same id is
+        cleared — an uncommitted stage is invisible, hence disposable."""
+        cur, _ = self.current
+        gid = max(self._all_gen_ids() + [cur]) + 1
+        path = self.gen_path(gid)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.makedirs(path)
+        return gid, path
+
+    def commit(self, gen_id: int) -> str:
+        """Atomically make ``gen_id`` the current generation. Refuses a
+        stage with no manifest (``export_catalog`` into it first)."""
+        path = self.gen_path(gen_id)
+        if not os.path.exists(os.path.join(path, _CATALOG_MANIFEST)):
+            raise ArtifactError(
+                f"cannot commit generation {gen_id}: no catalog manifest "
+                f"at {path!r} — export a catalog into the staged "
+                f"directory first")
+        self._flip(gen_id)
+        return path
+
+    def rollback(self) -> Tuple[int, str]:
+        """Flip back to the newest complete generation older than the
+        current one (the rolled-back generation's files stay on disk for
+        post-mortem until :meth:`retire`)."""
+        cur, _ = self.current
+        prior = [g for g in self.generations() if g < cur]
+        if not prior:
+            raise ArtifactError(
+                f"cannot roll back: generation {cur} has no prior "
+                f"generation on disk")
+        gid = max(prior)
+        self._flip(gid)
+        return gid, self.gen_path(gid)
+
+    def retire(self, keep_last: Optional[int] = None) -> List[int]:
+        """Delete old generations, keeping the current one, generation 0
+        (always), and the ``keep_last`` most recent others. Returns the
+        retired ids."""
+        keep = self.keep_last if keep_last is None else keep_last
+        cur, _ = self.current
+        gens = self.generations()
+        candidates = sorted(g for g in gens if g not in (0, cur))
+        kept = set(candidates[-keep:]) if keep > 0 else set()
+        removed = []
+        for g in candidates:
+            if g not in kept:
+                shutil.rmtree(gens[g])
+                removed.append(g)
+        return removed
+
+    def _flip(self, gen_id: int) -> None:
+        rel = "." if gen_id == 0 else \
+            f"{GENERATIONS_DIR}/{_GEN_PREFIX}{gen_id:04d}"
+        if self.faults is not None:
+            self.faults.fire("swap_commit", f"gen{gen_id}")
+        p = os.path.join(self.root, CURRENT_NAME)
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"generation": gen_id, "path": rel}, f)
+        os.replace(tmp, p)

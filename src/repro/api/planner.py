@@ -82,6 +82,27 @@ class PlanCandidate:
 
 
 @dataclasses.dataclass
+class PlanInputs:
+    """Everything :func:`plan` needs to run the same sweep again —
+    stashed on the returned :class:`Plan` so :func:`replan` can re-score
+    the identical strategy×target arms under a different oracle (the
+    autopilot's recalibrated one) without the caller re-supplying hooks,
+    params, or constraints."""
+
+    cfg: ModelConfig
+    accuracy_floor: float
+    latency_budget_s: Optional[float]
+    targets: Sequence[Union[str, TargetSpec]]
+    strategies: Sequence[str]
+    workload: Optional[Workload]
+    hooks: Optional[TrainHooks]
+    pcfg: Optional[CPruneConfig]
+    params: Optional[Dict]
+    strategy_kwargs: Optional[Dict[str, Dict]]
+    seed: int
+
+
+@dataclasses.dataclass
 class Plan:
     """The sweep's outcome: every candidate, the Pareto frontier, and the
     best constraint-satisfying choice."""
@@ -89,6 +110,7 @@ class Plan:
     accuracy_floor: float
     latency_budget_s: Optional[float]
     candidates: List[PlanCandidate]
+    inputs: Optional[PlanInputs] = None
 
     @property
     def frontier(self) -> List[PlanCandidate]:
@@ -227,5 +249,47 @@ def plan(cfg: ModelConfig, *, accuracy_floor: float,
             candidates.append(cand)
             if verbose:
                 print(cand.describe())
+    inputs = PlanInputs(cfg=cfg, accuracy_floor=accuracy_floor,
+                        latency_budget_s=latency_budget_s,
+                        targets=tuple(targets), strategies=tuple(strategies),
+                        workload=workload, hooks=hooks, pcfg=pcfg,
+                        params=params, strategy_kwargs=strategy_kwargs,
+                        seed=seed)
     return Plan(accuracy_floor=accuracy_floor,
-                latency_budget_s=latency_budget_s, candidates=candidates)
+                latency_budget_s=latency_budget_s, candidates=candidates,
+                inputs=inputs)
+
+
+def replan(prior: Plan, *, oracle: Union[str, LatencyOracle, None],
+           accuracy_floor: Optional[float] = None,
+           latency_budget_s: Optional[float] = None,
+           verbose: bool = False) -> Plan:
+    """Run ``prior``'s exact sweep again under a different oracle — the
+    replan half of the plan → serve → replan loop.
+
+    ``oracle`` is typically a serve-recalibrated replay backend
+    (:meth:`DeploymentArtifact.recalibrated_oracle`); the sweep restarts
+    from the *same* initial params, strategies, targets, hooks, and
+    constraints recorded in ``prior.inputs``, so the only variable is
+    what the oracle believes about the target. The re-sweep is warm: the
+    process-wide ProgramCache keys carry the oracle fingerprint, so
+    tunings scored by the stale oracle are never reused, while everything
+    oracle-independent (model build, task decomposition) carries over.
+    Constraint overrides let a replan also tighten/relax the floor or
+    budget in the same pass."""
+    ins = prior.inputs
+    if ins is None:
+        raise PlanError(
+            "this Plan records no inputs (it was not produced by plan() "
+            "in this process); run plan() directly instead of replan()")
+    return plan(ins.cfg,
+                accuracy_floor=(ins.accuracy_floor if accuracy_floor is None
+                                else accuracy_floor),
+                latency_budget_s=(ins.latency_budget_s
+                                  if latency_budget_s is None
+                                  else latency_budget_s),
+                targets=ins.targets, strategies=ins.strategies,
+                workload=ins.workload, hooks=ins.hooks, pcfg=ins.pcfg,
+                params=ins.params, oracle=oracle,
+                strategy_kwargs=ins.strategy_kwargs, seed=ins.seed,
+                verbose=verbose)

@@ -35,6 +35,7 @@ on :meth:`LatencyOracle.fingerprint`, so winners never cross backends.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import hashlib
@@ -42,8 +43,8 @@ import itertools
 import json
 import os
 import time
-from typing import Dict, Iterator, Optional, Protocol, Tuple, Union, \
-    runtime_checkable
+from typing import Deque, Dict, Iterator, List, Optional, Protocol, Tuple, \
+    Union, runtime_checkable
 
 import numpy as np
 
@@ -143,11 +144,30 @@ class MeasurementConfig:
 
 class MeasurementLog:
     """A map from measurement key to seconds, with JSON persistence —
-    the replay artifact (and the measured backend's in-run memo)."""
+    the replay artifact (and the measured backend's in-run memo).
 
-    def __init__(self, config: Optional[MeasurementConfig] = None):
+    Long-running serve processes record into a log continuously, so the
+    store can be bounded: ``max_entries`` caps the key count with LRU
+    eviction (``lookup`` refreshes recency, the oldest key is dropped on
+    overflow — the same discipline as ``latency._FIXED_CACHE``), and
+    ``evicted`` counts what was dropped. Independently, every ``record``
+    appends to a per-key observation window (``window(key)``, newest
+    last, at most ``window_size`` samples) so drift detectors can reason
+    about *recent* behaviour instead of a single overwritten scalar.
+    Bounds and windows are runtime-only: ``digest``/``save``/``load``
+    operate on ``entries`` exactly as before, so replay-artifact digests
+    are unaffected.
+    """
+
+    def __init__(self, config: Optional[MeasurementConfig] = None, *,
+                 max_entries: Optional[int] = None, window_size: int = 32):
         self.config = config or MeasurementConfig()
-        self.entries: Dict[str, float] = {}
+        self.entries: "collections.OrderedDict[str, float]" = \
+            collections.OrderedDict()
+        self.max_entries = max_entries
+        self.window_size = max(1, int(window_size))
+        self.history: Dict[str, Deque[float]] = {}
+        self.evicted = 0
         # where this log last touched disk (set by save/load) — lets a
         # session checkpoint round-trip its replay artifact by path
         self.path: Optional[str] = None
@@ -156,9 +176,12 @@ class MeasurementLog:
         return len(self.entries)
 
     def copy(self) -> "MeasurementLog":
-        """Snapshot of the current entries (same config, no path)."""
-        new = MeasurementLog(self.config)
-        new.entries = dict(self.entries)
+        """Snapshot of the current entries (same config/bounds, no path)."""
+        new = MeasurementLog(self.config, max_entries=self.max_entries,
+                             window_size=self.window_size)
+        new.entries = collections.OrderedDict(self.entries)
+        new.history = {k: collections.deque(v, maxlen=self.window_size)
+                       for k, v in self.history.items()}
         return new
 
     @staticmethod
@@ -185,15 +208,34 @@ class MeasurementLog:
         the factor, and a :class:`ReplayOracle` over the result predicts
         what serving actually measured."""
         new = MeasurementLog(self.config)
-        new.entries = {k: (v * factor if k.startswith(prefix) else v)
-                       for k, v in self.entries.items()}
+        new.entries = collections.OrderedDict(
+            (k, v * factor if k.startswith(prefix) else v)
+            for k, v in self.entries.items())
         return new
 
     def record(self, key: str, seconds: float) -> None:
-        self.entries[key] = float(seconds)
+        secs = float(seconds)
+        if key in self.entries:
+            self.entries.move_to_end(key)
+        self.entries[key] = secs
+        self.history.setdefault(
+            key, collections.deque(maxlen=self.window_size)).append(secs)
+        if self.max_entries is not None:
+            while len(self.entries) > self.max_entries:
+                old, _ = self.entries.popitem(last=False)
+                self.history.pop(old, None)
+                self.evicted += 1
 
     def lookup(self, key: str) -> Optional[float]:
-        return self.entries.get(key)
+        secs = self.entries.get(key)
+        if secs is not None:
+            self.entries.move_to_end(key)   # refresh LRU recency
+        return secs
+
+    def window(self, key: str) -> List[float]:
+        """Recent observations recorded under ``key`` (newest last, at
+        most ``window_size`` of them)."""
+        return list(self.history.get(key, ()))
 
     def digest(self) -> str:
         blob = json.dumps([self.config.to_dict(),
@@ -218,7 +260,8 @@ class MeasurementLog:
             raise ValueError(f"unsupported measurement log version "
                              f"{blob.get('version')!r} in {path}")
         log = cls(MeasurementConfig(**blob["config"]))
-        log.entries = {k: float(v) for k, v in blob["entries"].items()}
+        log.entries = collections.OrderedDict(
+            (k, float(v)) for k, v in blob["entries"].items())
         log.path = path
         return log
 
@@ -231,6 +274,45 @@ def _trimmed_median(times, trim: int) -> float:
     if len(ts) % 2:
         return ts[mid]
     return 0.5 * (ts[mid - 1] + ts[mid])
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    """Predicted-vs-observed latency for one measurement key.
+
+    ``rel_error`` is ``(measured - predicted) / predicted`` — positive
+    means the target is *slower* than the plan-time oracle believed
+    (the direction that breaks latency budgets). ``window`` is how many
+    recent observations backed ``measured_s`` (their median)."""
+
+    key: str
+    predicted_s: float
+    measured_s: float
+    rel_error: float
+    window: int
+
+    @property
+    def magnitude(self) -> float:
+        return abs(self.rel_error)
+
+
+def score_drift(log: MeasurementLog, key: str, predicted_s: float, *,
+                min_window: int = 2) -> Optional[DriftReport]:
+    """Score how far serve-time observations under ``key`` have drifted
+    from a plan-time prediction.
+
+    Uses the median of the log's recent observation window (not the
+    latest sample) so a single straggler step doesn't trip a replan.
+    Returns ``None`` when there is not yet enough evidence: fewer than
+    ``min_window`` observations, or a non-positive prediction."""
+    window = log.window(key)
+    if len(window) < max(1, min_window) or predicted_s <= 0.0:
+        return None
+    measured = _trimmed_median(window, 0)
+    return DriftReport(key=key, predicted_s=float(predicted_s),
+                       measured_s=measured,
+                       rel_error=(measured - predicted_s) / predicted_s,
+                       window=len(window))
 
 
 class _MeasurementOracle:

@@ -23,6 +23,17 @@ crash mid-decode, a straggler tick) to demonstrate recovery:
 
   PYTHONPATH=src python -m repro.launch.serve --catalog path/to/fleet \
       --replicas 2 --max-queue 32 --retry-budget 3 --chaos
+
+Autopilot serving: ``--autopilot`` puts the catalog router under the
+online control plane — every ``--check-every`` steps it scores each
+entry's predicted-vs-measured drift and budget-violation rate, and on a
+threshold crossing it replans under the recalibrated replay oracle and
+hot-swaps the new catalog generation in (new requests route on the new
+generation, in-flight requests drain on the old engines; a worse
+generation is rolled back after ``--probation-steps``):
+
+  PYTHONPATH=src python -m repro.launch.serve --catalog path/to/fleet \
+      --autopilot --budget-ms 5,50 --requests 16 --max-swaps 1
 """
 import argparse
 import os
@@ -81,6 +92,33 @@ def _parser():
                     help="inject a deterministic failure mix (decode "
                          "crash + straggler) to demonstrate supervised "
                          "recovery")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="catalog mode only: watch per-entry drift "
+                         "(oracle_rel_error, budget_violation_rate, "
+                         "crashes/quarantine), replan under the "
+                         "recalibrated oracle, and hot-swap new catalog "
+                         "generations with zero downtime")
+    ap.add_argument("--check-every", type=int, default=16,
+                    help="router steps between autopilot health sweeps")
+    ap.add_argument("--rel-error-threshold", type=float, default=0.5,
+                    help="windowed |measured-predicted|/predicted that "
+                         "counts as oracle drift")
+    ap.add_argument("--violation-threshold", type=float, default=0.5,
+                    help="per-entry budget-violation rate that counts "
+                         "as drift")
+    ap.add_argument("--probation-steps", type=int, default=64,
+                    help="router steps a freshly swapped generation "
+                         "serves before it is judged (worse violation "
+                         "rate than the outgoing generation -> rollback)")
+    ap.add_argument("--cooldown-steps", type=int, default=64,
+                    help="minimum router steps between replans "
+                         "(a rollback quadruples it)")
+    ap.add_argument("--keep-generations", type=int, default=3,
+                    help="old catalog generations kept on disk after a "
+                         "passed probation")
+    ap.add_argument("--max-swaps", type=int, default=None,
+                    help="hard cap on autonomous swaps (default: "
+                         "unlimited)")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
@@ -118,6 +156,40 @@ def _print_stats(stats, indent=""):
                 _print_stats(sub, indent + "  ")
         else:
             print(f"{indent}{k}: {v}")
+
+
+def _catalog_replan(catalog):
+    """Replan closure for a disk-loaded catalog (no in-process Plan to
+    re-run): re-sweep the catalog's own strategy x target arms under the
+    recalibrated oracle, scoring accuracy by parameter retention — the
+    serve driver has no training data, so retention stands in for the
+    eval hook; a real deployment drives the Autopilot through the Python
+    API with its own TrainHooks instead."""
+    from repro.api import CPruneConfig, TrainHooks, Workload, plan
+
+    cfg = catalog.artifact(catalog.names[0]).cfg
+    strategies = list(dict.fromkeys(e.strategy for e in catalog.entries))
+    targets = list(dict.fromkeys(e.target for e in catalog.entries))
+
+    def _count(p):
+        import jax
+        return sum(x.size for x in jax.tree_util.tree_leaves(p))
+
+    def _replan(trigger, oracle):
+        import jax
+
+        from repro.models.model import init_params
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        n0 = _count(params)
+        hooks = TrainHooks(short_term_train=lambda p, s: p,
+                           eval_acc=lambda p, s: _count(p) / n0)
+        return plan(cfg, accuracy_floor=0.0, targets=targets,
+                    strategies=strategies,
+                    workload=Workload(tokens_global=8192), hooks=hooks,
+                    params=params, pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+                    oracle=oracle)
+
+    return _replan
 
 
 def _chaos_injector():
@@ -161,6 +233,24 @@ def main():
                         replicas=args.replicas, max_queue=args.max_queue,
                         retry=retry, faults=faults)
         cfg = catalog.artifact(catalog.names[0]).cfg
+        pilot = None
+        if args.autopilot:
+            from repro.serve.autopilot import Autopilot, AutopilotConfig
+            acfg = AutopilotConfig(
+                check_every=args.check_every,
+                rel_error_threshold=args.rel_error_threshold,
+                violation_threshold=args.violation_threshold,
+                probation_steps=args.probation_steps,
+                cooldown_steps=args.cooldown_steps,
+                keep_generations=args.keep_generations,
+                max_swaps=args.max_swaps)
+            pilot = Autopilot(router, replan=_catalog_replan(catalog),
+                              config=acfg, log=log, faults=faults)
+            print(f"autopilot on: check_every={acfg.check_every} "
+                  f"rel_error>{acfg.rel_error_threshold} "
+                  f"violation_rate>{acfg.violation_threshold} "
+                  f"probation={acfg.probation_steps} "
+                  f"keep={acfg.keep_generations} generations")
         shed = 0
         for req in _requests(args, cfg, budgets):
             try:
@@ -168,7 +258,13 @@ def main():
             except RouteError as e:
                 shed += 1
                 print(f"shed: {e}")
-        stats = router.run()
+        if pilot is not None:
+            pstats = pilot.run()
+            stats = router.stats()
+            print("autopilot:")
+            _print_stats(pstats, "  ")
+        else:
+            stats = router.run()
         _print_stats(stats)
         if shed:
             print(f"shed_at_submit: {shed}")

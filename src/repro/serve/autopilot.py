@@ -1,0 +1,477 @@
+"""Autopilot control plane: drift-triggered replanning + hot-swap.
+
+CPrune's thesis is that compiler/serve-time *measurements* steer the
+pruned model. The offline pipeline already closes most of that loop —
+``plan()`` sweeps strategies under a measurement-backed oracle, serving
+records the observed decode step, and
+:meth:`DeploymentArtifact.recalibrated_oracle` folds the observation
+back into the oracle — but a human still had to notice the drift and
+rerun ``plan()``. :class:`Autopilot` removes the human:
+
+    watch  — every ``check_every`` router steps, read each catalog
+             entry's health signals from one place (`Router.stats()`):
+             predicted-vs-measured ``oracle_rel_error`` scored over a
+             :class:`MeasurementLog` observation window
+             (:func:`repro.core.oracle.score_drift`), the per-entry
+             ``budget_violation_rate``, and the supervisor's
+             crash/quarantine counts.
+    replan — when a signal crosses its threshold, recalibrate the drift
+             source's replay oracle against the observed step and re-run
+             the *prior plan's own sweep* under it
+             (:func:`repro.api.planner.replan` — the ProgramCache keys
+             carry the new oracle fingerprint, so the re-sweep is warm
+             but never reuses stale winners).
+    swap   — export the new frontier as a side-by-side catalog
+             generation (:class:`repro.api.artifact.GenerationStore`),
+             flip the ``CURRENT`` pointer atomically, and
+             :meth:`Router.swap` it live: new requests route on the new
+             generation, in-flight requests drain on the old engines,
+             and the old fleets retire only at zero in-flight work.
+    judge  — the new generation is on *probation* for
+             ``probation_steps``; if its budget-violation rate is
+             strictly worse than the outgoing generation's, the
+             autopilot flips back (:meth:`rollback`) — the same
+             half-open discipline the fleet's circuit breaker uses —
+             and backs off; otherwise old generations are retired down
+             to ``keep_generations``.
+
+Crash safety is the store's: a kill at any point of the swap (the
+``swap_export`` / ``swap_commit`` fault points make this testable)
+leaves either the old or the new generation fully current — never a
+torn catalog.
+
+The replan runs inline by default — "background" in the sense that
+serving is never disturbed: admitted requests keep their engines, and
+the swap itself is O(pointer flip). ``background=True`` moves the
+expensive ``plan()`` sweep to a worker thread and applies the finished
+swap on a later control tick; the serve loop keeps stepping meanwhile.
+(The sweep briefly activates target/oracle globals, which is safe
+because decode steps never consult them — but only one replan runs at a
+time.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.api.artifact import ArtifactError, GenerationStore
+from repro.core.oracle import DriftReport, MeasurementLog, score_drift
+from repro.serve.router import ArtifactCatalog, Router
+
+__all__ = ["Autopilot", "AutopilotConfig", "replan_from"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutopilotConfig:
+    """Thresholds and pacing for the control loop.
+
+    ``check_every``
+        router steps between health sweeps.
+    ``rel_error_threshold``
+        |windowed (measured-predicted)/predicted| that counts as oracle
+        drift.
+    ``violation_threshold`` / ``min_budgeted``
+        per-entry budget-violation rate that counts as drift, once at
+        least ``min_budgeted`` budgeted requests completed there.
+    ``crash_threshold``
+        supervisor crash count that counts as drift (quarantine always
+        does).
+    ``min_window``
+        observed decode steps (one per sweep) before ``oracle_rel_error``
+        is trusted — a single straggler must not trigger a replan.
+    ``probation_steps``
+        router steps the new generation must serve before it is judged
+        against the outgoing generation's violation rate.
+    ``cooldown_steps``
+        minimum router steps between replans; a rollback quadruples it.
+    ``keep_generations``
+        old generations kept on disk after a passed probation.
+    ``max_swaps``
+        hard cap on autonomous swaps (None = unlimited) — a safety
+        valve for demos and tests.
+    """
+
+    check_every: int = 16
+    rel_error_threshold: float = 0.5
+    violation_threshold: float = 0.5
+    crash_threshold: int = 5
+    min_window: int = 2
+    min_budgeted: int = 4
+    probation_steps: int = 64
+    cooldown_steps: int = 64
+    keep_generations: int = 3
+    max_swaps: Optional[int] = None
+
+
+def replan_from(prior) -> Callable[[Dict[str, Any], Any], Any]:
+    """The default replan callable: re-run ``prior``'s (a :class:`Plan`)
+    own sweep under the recalibrated oracle via
+    :func:`repro.api.planner.replan`."""
+    def _replan(trigger: Dict[str, Any], oracle) -> Any:
+        from repro.api.planner import replan
+        return replan(prior, oracle=oracle)
+    return _replan
+
+
+class Autopilot:
+    """Drift-triggered replan + zero-downtime hot-swap over one
+    :class:`Router`.
+
+    ``replan`` is either a prior :class:`~repro.api.planner.Plan` (its
+    own sweep is re-run under the recalibrated oracle) or a callable
+    ``(trigger, oracle) -> Plan`` for custom replanning. ``store``
+    defaults to a :class:`GenerationStore` over the router catalog's
+    base root; ``log`` is the shared measurement log the control loop
+    records observed decode steps into (bounded by default — a
+    week-long serve process must not grow it without limit). ``faults``
+    fires the ``swap_export``/``swap_commit`` points so chaos tests can
+    kill a swap mid-flight.
+    """
+
+    def __init__(self, router: Router, *, replan,
+                 store: Optional[GenerationStore] = None,
+                 config: Optional[AutopilotConfig] = None,
+                 log: Optional[MeasurementLog] = None,
+                 faults=None, background: bool = False):
+        self.router = router
+        self.config = config or AutopilotConfig()
+        self.replan = replan if callable(replan) else replan_from(replan)
+        self.store = store or GenerationStore(
+            getattr(router.catalog, "base_root", router.catalog.root),
+            keep_last=self.config.keep_generations, faults=faults)
+        self.log = log if log is not None else MeasurementLog(
+            max_entries=256)
+        self.faults = faults
+        self.background = background
+        self._steps = 0
+        self._sweeps = 0
+        self._replans = 0
+        self._swaps = 0
+        self._rollbacks = 0
+        self._cooldown_until = 0
+        self._probation: Optional[Dict[str, Any]] = None
+        self._last_trigger: Optional[Dict[str, Any]] = None
+        self._skips: Dict[str, int] = {}
+        self._events: List[str] = []
+        self._worker: Optional[threading.Thread] = None
+        self._pending: Optional[Dict[str, Any]] = None
+
+    # -- the control loop ---------------------------------------------------
+
+    def step(self) -> Dict[str, Any]:
+        """One serve quantum plus (periodically) one health sweep — the
+        drop-in replacement for ``router.step()`` in a serve loop."""
+        ev = self.router.step()
+        self._steps += 1
+        if self.config.check_every and \
+                self._steps % self.config.check_every == 0:
+            self.sweep()
+        return ev
+
+    def run(self, deadline_s: Optional[float] = None) -> Dict[str, Any]:
+        """Step until the router drains and no replan is in flight (or
+        ``deadline_s``); returns :meth:`stats`."""
+        t0 = time.time()
+        while self.router.has_work or self._worker is not None \
+                or self._pending is not None:
+            if deadline_s is not None and time.time() - t0 >= deadline_s:
+                break
+            if not self.router.has_work and self._worker is not None \
+                    and self._worker.is_alive():
+                time.sleep(0.005)       # idle wait for the background plan
+            self.step()
+        return self.stats()
+
+    def sweep(self) -> Optional[Dict[str, Any]]:
+        """One health pass: refresh measurements, apply a finished
+        background replan, resolve probation, and — when out of cooldown
+        and a signal crosses its threshold — trigger a replan+swap.
+        Returns the trigger acted on, if any."""
+        self._sweeps += 1
+        self._record_measurements()
+        self._poll_worker()
+        if self._probation is not None:
+            if self._steps >= self._probation["until"]:
+                self._resolve_probation()
+            return None
+        if self._steps < self._cooldown_until:
+            return None
+        if self._worker is not None:
+            return None                 # a replan is already in flight
+        if self.config.max_swaps is not None \
+                and self._swaps >= self.config.max_swaps:
+            return None
+        trigger = self._detect()
+        if trigger is None:
+            return None
+        self._last_trigger = trigger
+        self.replan_and_swap(trigger)
+        return trigger
+
+    # -- watch: health signals ----------------------------------------------
+
+    def _record_measurements(self) -> None:
+        """Fold every live engine's observed decode step into the shared
+        log — one observation per engine per sweep, so the per-key
+        window measures sweeps, not raw ticks."""
+        for sup in self.router._fleets.values():
+            for eng in sup.engines:
+                if eng._step_times:
+                    eng.record_measurements(self.log)
+
+    def _entry_dims(self, name: str) -> Dict[str, int]:
+        sup = self.router._fleets.get(name)
+        eng = sup.engines[0] if sup is not None and sup.engines else None
+        if eng is not None:
+            return {"max_batch": eng.max_batch, "max_seq": eng.max_seq}
+        try:
+            art = self.router.catalog.artifact(name)
+            defaults = art.metadata.get("serve_defaults") or {}
+        except (ArtifactError, KeyError):
+            defaults = {}
+        return {"max_batch": defaults.get("max_batch", 8),
+                "max_seq": defaults.get("max_seq", 512)}
+
+    def _drift(self, name: str) -> Optional[DriftReport]:
+        """Windowed predicted-vs-measured drift for one entry, or None
+        without enough evidence."""
+        sup = self.router._fleets.get(name)
+        if sup is None:
+            return None
+        eng = sup.engines[0] if sup.engines else None
+        predicted = eng.predicted_step_s if eng is not None else None
+        if predicted is None:
+            predicted = self.router.catalog.get(name).predicted_step_s
+        if not predicted:
+            return None
+        try:
+            art = self.router.catalog.artifact(name)
+        except (ArtifactError, KeyError):
+            return None
+        dims = self._entry_dims(name)
+        key = MeasurementLog.step_key(art.measurement_tag,
+                                      dims["max_batch"], dims["max_seq"])
+        return score_drift(self.log, key, predicted,
+                           min_window=self.config.min_window)
+
+    def _detect(self) -> Optional[Dict[str, Any]]:
+        """Scan every *current-generation* entry; return the strongest
+        tripped trigger (largest drift magnitude wins; violation rate
+        breaks ties), or None when everything is healthy."""
+        cfg = self.config
+        tripped: List[Dict[str, Any]] = []
+        for name, sup in self.router._fleets.items():
+            st = sup.stats()
+            drift = self._drift(name)
+            reasons = []
+            if drift is not None and drift.magnitude \
+                    >= cfg.rel_error_threshold:
+                reasons.append(
+                    f"oracle_rel_error {drift.rel_error:+.2f} over "
+                    f"{drift.window} obs (threshold "
+                    f"{cfg.rel_error_threshold})")
+            if st["budgeted_requests"] >= cfg.min_budgeted \
+                    and st["budget_violation_rate"] \
+                    >= cfg.violation_threshold:
+                reasons.append(
+                    f"budget_violation_rate "
+                    f"{st['budget_violation_rate']:.2f} over "
+                    f"{st['budgeted_requests']} budgeted (threshold "
+                    f"{cfg.violation_threshold})")
+            if st["crashes"] >= cfg.crash_threshold:
+                reasons.append(f"{st['crashes']} crashes (threshold "
+                               f"{cfg.crash_threshold})")
+            if name in self.router._quarantined:
+                reasons.append("quarantined: "
+                               + self.router._quarantined[name]["reason"])
+            if reasons:
+                rec = {"name": name, "reasons": reasons, "drift": drift,
+                       "generation": self.router.generation,
+                       "violation_rate": st["budget_violation_rate"]}
+                rec.update(self._entry_dims(name))
+                tripped.append(rec)
+        if not tripped:
+            return None
+        tripped.sort(key=lambda t: (
+            -(t["drift"].magnitude if t["drift"] is not None else 0.0),
+            -t["violation_rate"]))
+        return tripped[0]
+
+    # -- replan + swap ------------------------------------------------------
+
+    def replan_and_swap(self, trigger: Dict[str, Any]) -> bool:
+        """Recalibrate the drift source's oracle, replan, and hot-swap
+        the winner in as a new catalog generation. Planning errors are
+        contained (the old generation keeps serving, the trigger goes
+        into cooldown); injected swap faults propagate — they simulate a
+        process kill, and the store's atomic flip is the recovery
+        story."""
+        name = trigger["name"]
+        try:
+            art = self.router.catalog.artifact(name)
+            oracle = art.recalibrated_oracle(
+                self.log, max_batch=trigger["max_batch"],
+                max_seq=trigger["max_seq"])
+        except (ArtifactError, KeyError) as e:
+            self._skip("recalibrate", f"{name}: {e}")
+            return False
+        if oracle is art.oracle:
+            # degenerate single-entry log: nothing actually rescaled
+            self._skip("recalibrate", f"{name}: degenerate rescale")
+            return False
+        self._replans += 1
+        self._event(f"replan triggered by {name!r}: "
+                    + "; ".join(trigger["reasons"]))
+        if self.background:
+            self._worker = threading.Thread(
+                target=self._replan_worker, args=(trigger, oracle),
+                daemon=True)
+            self._worker.start()
+            return True
+        try:
+            new_plan = self.replan(trigger, oracle)
+        except Exception as e:          # noqa: BLE001 — planning must
+            # never take serving down with it
+            self._skip("replan", f"{type(e).__name__}: {e}")
+            return False
+        return self._apply(new_plan, trigger)
+
+    def _replan_worker(self, trigger: Dict[str, Any], oracle) -> None:
+        try:
+            pl = self.replan(trigger, oracle)
+            self._pending = {"plan": pl, "trigger": trigger}
+        except Exception as e:          # noqa: BLE001
+            self._pending = {"error": f"{type(e).__name__}: {e}",
+                             "trigger": trigger}
+
+    def _poll_worker(self) -> None:
+        if self._worker is None or self._worker.is_alive():
+            return
+        self._worker.join()
+        self._worker = None
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return
+        if "error" in pending:
+            self._skip("replan", pending["error"])
+            return
+        self._apply(pending["plan"], pending["trigger"])
+
+    def _apply(self, new_plan, trigger: Dict[str, Any]) -> bool:
+        """Stage → export → commit → swap. The pointer flip is the only
+        commit point; everything before it is invisible to readers."""
+        pre = self._gen_violation_rate()
+        gen_id, staged = self.store.stage()
+        if self.faults is not None:
+            self.faults.fire("swap_export", f"gen{gen_id}")
+        try:
+            new_plan.export_catalog(staged,
+                                    max_batch=trigger["max_batch"],
+                                    max_seq=trigger["max_seq"])
+        except (ArtifactError, ValueError) as e:
+            # includes PlanError (empty frontier): the orphaned stage is
+            # reclaimed by the next stage(); the old generation serves on
+            self._skip("export", f"{type(e).__name__}: {e}")
+            self._cooldown_until = self._steps + self.config.cooldown_steps
+            return False
+        self.store.commit(gen_id)
+        catalog = ArtifactCatalog.load(self.store.root, lazy=True)
+        self.router.swap(catalog)
+        self._swaps += 1
+        self._probation = {
+            "until": self._steps + self.config.probation_steps,
+            "pre": pre, "generation": catalog.generation,
+            "trigger": trigger["name"],
+        }
+        self._cooldown_until = self._steps + self.config.cooldown_steps
+        self._event(f"swapped in generation {catalog.generation} "
+                    f"(pre-swap violation rate {pre['rate']:.2f}); "
+                    f"probation until step {self._probation['until']}")
+        return True
+
+    # -- judge: probation + rollback ----------------------------------------
+
+    def _gen_violation_rate(self) -> Dict[str, Any]:
+        """Budget-violation record of the *current* generation's fleets
+        only (retired generations are excluded — each generation is
+        judged on its own traffic)."""
+        done = [r for sup in self.router._fleets.values()
+                for r in sup.completed]
+        budgeted = [r for r in done if r.latency_budget_s is not None]
+        violations = [r for r in budgeted
+                      if r.t_done - r.t_submit > r.latency_budget_s]
+        return {"budgeted": len(budgeted), "violations": len(violations),
+                "rate": (len(violations) / len(budgeted)
+                         if budgeted else 0.0)}
+
+    def _resolve_probation(self) -> None:
+        assert self._probation is not None
+        cur = self._gen_violation_rate()
+        pre = self._probation["pre"]
+        if cur["budgeted"] >= self.config.min_budgeted \
+                and cur["rate"] > pre["rate"]:
+            self._event(
+                f"probation FAILED: generation "
+                f"{self._probation['generation']} violation rate "
+                f"{cur['rate']:.2f} > pre-swap {pre['rate']:.2f}; "
+                f"rolling back")
+            self.rollback()
+            return
+        self._event(f"probation passed: generation "
+                    f"{self._probation['generation']} violation rate "
+                    f"{cur['rate']:.2f} (pre-swap {pre['rate']:.2f})")
+        self._probation = None
+        retired = self.store.retire()
+        if retired:
+            self._event(f"retired generations {retired}")
+
+    def rollback(self) -> Dict[str, Any]:
+        """Flip back to the previous generation and swap it live — the
+        half-open discipline: the failed generation stays on disk, the
+        cooldown is quadrupled, and a later trigger may try again."""
+        gen_id, _ = self.store.rollback()
+        catalog = ArtifactCatalog.load(self.store.root, lazy=True)
+        self.router.swap(catalog)
+        self._rollbacks += 1
+        self._probation = None
+        self._cooldown_until = self._steps \
+            + 4 * max(1, self.config.cooldown_steps)
+        self._event(f"rolled back to generation {gen_id}")
+        return {"generation": gen_id}
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _skip(self, stage: str, why: str) -> None:
+        self._skips[stage] = self._skips.get(stage, 0) + 1
+        self._event(f"skipped at {stage}: {why}")
+
+    def _event(self, msg: str) -> None:
+        self._events.append(f"step {self._steps}: {msg}")
+        del self._events[:-50]
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "steps": self._steps,
+            "sweeps": self._sweeps,
+            "replans": self._replans,
+            "swaps": self._swaps,
+            "rollbacks": self._rollbacks,
+            "generation": self.router.generation,
+            "probation": (None if self._probation is None else {
+                "generation": self._probation["generation"],
+                "until": self._probation["until"],
+                "pre_rate": self._probation["pre"]["rate"],
+            }),
+            "cooldown_until": self._cooldown_until,
+            "replan_in_flight": self._worker is not None,
+            "last_trigger": (None if self._last_trigger is None else {
+                "name": self._last_trigger["name"],
+                "reasons": self._last_trigger["reasons"],
+            }),
+            "skips": dict(self._skips),
+            "log_entries": len(self.log),
+            "log_evicted": self.log.evicted,
+            "events": list(self._events),
+        }

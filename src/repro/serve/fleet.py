@@ -128,6 +128,7 @@ class ReplicaSupervisor:
         self.failed: List[Request] = []         # explicit rejections
         self._harvested_step_times: List[float] = []
         self.dead = False
+        self.draining = False
         self.death_reason: Optional[str] = None
         self.submitted = 0
         self.crashes = 0
@@ -211,6 +212,21 @@ class ReplicaSupervisor:
             return False
         return bool(self._intake) or any(e.has_work for e in self.engines)
 
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued or decoding anywhere — the
+        condition under which a draining supervisor may be retired
+        without losing work."""
+        return not self.has_work and self.in_flight_count == 0
+
+    def drain(self) -> None:
+        """Enter drain mode: every new :meth:`submit` is shed with
+        :class:`RouteError`, while already-admitted work (intake + engine
+        in-flight) keeps stepping to completion. The hot-swap discipline:
+        a retiring generation finishes what it accepted and is torn down
+        only once :attr:`idle`."""
+        self.draining = True
+
     # -- admission ----------------------------------------------------------
 
     def _estimate_s(self, req: Request) -> float:
@@ -234,6 +250,10 @@ class ReplicaSupervisor:
             raise RouteError(f"entry {self.name!r} is dead "
                              f"({self.death_reason}); request {req.rid} "
                              f"not admitted")
+        if self.draining:
+            self.shed += 1
+            raise RouteError(f"entry {self.name!r} is draining (retiring "
+                             f"generation); request {req.rid} not admitted")
         if self.saturated:
             self.shed += 1
             raise RouteError(
@@ -455,6 +475,13 @@ class ReplicaSupervisor:
         fails: Dict[str, int] = {}
         for r in self.failed:
             fails[r.fail_reason] = fails.get(r.fail_reason, 0) + 1
+        budgeted = [r for r in done if r.latency_budget_s is not None]
+        violations = [r for r in budgeted
+                      if r.t_done - r.t_submit > r.latency_budget_s]
+        measured = float(np.mean(step_times)) if step_times else 0.0
+        pred_eff = predicted if predicted is not None else self.est_step_s
+        rel_error = ((pred_eff - measured) / max(measured, 1e-12)
+                     if pred_eff is not None and step_times else None)
         stats = {
             "requests": len(done),
             "total_new_tokens": total_tokens,
@@ -462,10 +489,15 @@ class ReplicaSupervisor:
             "tokens_per_s": total_tokens / max(self._wall_s, 1e-9),
             "p50_step_s": self._pct(step_times, 50),
             "p95_step_s": self._pct(step_times, 95),
-            "measured_step_s": (float(np.mean(step_times))
-                                if step_times else 0.0),
-            "predicted_step_s": predicted if predicted is not None
-            else self.est_step_s,
+            "measured_step_s": measured,
+            "predicted_step_s": pred_eff,
+            # drift signals (the autopilot's per-entry health inputs)
+            "oracle_rel_error": rel_error,
+            "measurement_window": len(step_times),
+            "budgeted_requests": len(budgeted),
+            "budget_violations": len(violations),
+            "budget_violation_rate": (len(violations) / len(budgeted)
+                                      if budgeted else 0.0),
             # supervision accounting
             "replicas": len(self._replicas),
             "live_replicas": len(self.engines),
@@ -480,6 +512,7 @@ class ReplicaSupervisor:
             "shed": self.shed,
             "straggler_steps": stragglers,
             "dead": self.dead,
+            "draining": self.draining,
             "queue_depth": len(self._intake),
             "in_flight": self.in_flight_count,
             "accounting": self.accounting(),

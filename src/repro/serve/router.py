@@ -52,7 +52,8 @@ import os
 import time
 from typing import Any, Dict, Iterator, List, Optional, Union
 
-from repro.api.artifact import ArtifactError, DeploymentArtifact
+from repro.api.artifact import (ArtifactError, DeploymentArtifact,
+                                GenerationStore)
 from repro.core.oracle import MeasurementLog
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.fleet import ReplicaSupervisor, RetryPolicy, RouteError
@@ -100,10 +101,15 @@ class ArtifactCatalog:
 
     def __init__(self, root: str, entries: List[CatalogEntry],
                  artifacts: Dict[str, DeploymentArtifact]):
-        self.root = root
+        self.root = root                # the directory actually read
         self.entries = list(entries)
         self._artifacts = dict(artifacts)
         self.lazy = False
+        # generation-store identity (set by load): base_root is the
+        # stable catalog root whose CURRENT pointer selected this
+        # generation; a pointer-less root is simply generation 0
+        self.base_root = root
+        self.generation = 0
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -161,11 +167,18 @@ class ArtifactCatalog:
         surfaces as an :class:`~repro.api.artifact.ArtifactError` at that
         entry's engine-build time, where the :class:`Router` quarantines
         the entry and keeps the rest of the catalog serving, instead of
-        refusing the whole catalog up front."""
-        manifest = os.path.join(root, CATALOG_NAME)
+        refusing the whole catalog up front.
+
+        A root carrying a ``CURRENT`` generation pointer (written by
+        :class:`~repro.api.artifact.GenerationStore` during a hot-swap)
+        is resolved to its current generation directory first; a plain
+        root loads as generation 0 exactly as before."""
+        generation, actual = GenerationStore.resolve(root)
+        manifest = os.path.join(actual, CATALOG_NAME)
         if not os.path.exists(manifest):
-            raise ArtifactError(f"no artifact catalog at {root!r} "
+            raise ArtifactError(f"no artifact catalog at {actual!r} "
                                 f"(missing {CATALOG_NAME})")
+        base_root, root = root, actual
         try:
             with open(manifest) as f:
                 blob = json.load(f)
@@ -197,6 +210,8 @@ class ArtifactCatalog:
             raise ArtifactError(f"catalog at {root!r} lists no artifacts")
         cat = cls(root, entries, artifacts)
         cat.lazy = lazy
+        cat.base_root = base_root
+        cat.generation = generation
         return cat
 
 
@@ -267,6 +282,17 @@ class Router:
         self._probes = 0
         self._recovered = 0
         self._wall_s = 0.0
+        # hot-swap state: fleets of prior generations drain here until
+        # idle, then fold their accounting into the retired accumulators
+        # so stats stay zero-loss across generations
+        self.generation = getattr(catalog, "generation", 0)
+        self._retiring: List[Dict[str, Any]] = []
+        self._swaps = 0
+        self._retired_fleets = 0
+        self._retired_done: List[Request] = []
+        self._retired_failed: List[Request] = []
+        self._retired_counts = {"submitted": 0, "crashes": 0,
+                                "rebuilds": 0, "requeued": 0, "shed": 0}
 
     # -- the routing decision ----------------------------------------------
 
@@ -397,6 +423,46 @@ class Router:
                 restored.append(name)
         return restored
 
+    # -- hot swap -----------------------------------------------------------
+
+    def swap(self, catalog: ArtifactCatalog) -> Dict[str, Any]:
+        """Zero-downtime generation swap: install ``catalog`` for every
+        *future* routing decision, while each current fleet enters drain
+        mode — its already-admitted requests (intake + in-flight) keep
+        stepping to completion on the old engines, and the fleet is
+        retired only once its supervisor reports zero in-flight work.
+        Nothing is re-routed and nothing is dropped: a request admitted
+        before the swap completes on the old generation with the exact
+        output it would have produced without the swap. Quarantine state
+        belongs to the outgoing generation and is cleared."""
+        draining = []
+        for name, sup in self._fleets.items():
+            sup.drain()
+            rec = {"name": name, "generation": self.generation, "sup": sup}
+            if sup.idle:
+                self._retire(rec)
+            else:
+                self._retiring.append(rec)
+                draining.append(name)
+        self._fleets = {}
+        self._quarantined = {}
+        self.catalog = catalog
+        self.generation = getattr(catalog, "generation",
+                                  self.generation + 1)
+        self._swaps += 1
+        return {"generation": self.generation, "draining": draining}
+
+    def _retire(self, rec: Dict[str, Any]) -> None:
+        """Fold a drained supervisor's accounting into the router-level
+        accumulators — completed/failed requests and counters survive the
+        generation that produced them."""
+        sup = rec["sup"]
+        self._retired_fleets += 1
+        self._retired_done.extend(sup.completed)
+        self._retired_failed.extend(sup.failed)
+        for key in self._retired_counts:
+            self._retired_counts[key] += getattr(sup, key)
+
     # -- dispatch + drive ---------------------------------------------------
 
     def submit(self, req: Request) -> str:
@@ -447,7 +513,8 @@ class Router:
 
     @property
     def has_work(self) -> bool:
-        return any(s.has_work for s in self._fleets.values())
+        return any(s.has_work for s in self._fleets.values()) \
+            or any(r["sup"].has_work for r in self._retiring)
 
     def step(self) -> Dict[str, Any]:
         """One quantum across the fleet: every supervised entry with work
@@ -473,6 +540,15 @@ class Router:
                             name, f"circuit breaker: "
                                   f"{sup.consecutive_crashes} consecutive "
                                   f"crashes (last: {sup.last_error})")
+            # retiring generations keep draining alongside the current one
+            for rec in list(self._retiring):
+                sup = rec["sup"]
+                if sup.has_work:
+                    label = f"{rec['name']}@gen{rec['generation']}"
+                    events[label] = sup.step()["event"]
+                if sup.idle:
+                    self._retiring.remove(rec)
+                    self._retire(rec)
             if self._quarantined and self.probe_every \
                     and self._steps % self.probe_every == 0:
                 self.probe()
@@ -490,7 +566,9 @@ class Router:
                 break
             self.step()
         if self.measurements is not None:
-            for sup in self._fleets.values():
+            sups = list(self._fleets.values()) \
+                + [r["sup"] for r in self._retiring]
+            for sup in sups:
                 for eng in sup.engines:
                     if eng._step_times:
                         eng.record_measurements()
@@ -503,6 +581,11 @@ class Router:
         health, not stats, and survives."""
         for sup in self._fleets.values():
             sup.reset_stats()
+        for rec in self._retiring:
+            rec["sup"].reset_stats()
+        self._retired_done = []
+        self._retired_failed = []
+        self._retired_counts = {k: 0 for k in self._retired_counts}
         self._histogram = {}
         self._flagged = 0
         self._rejected = 0
@@ -513,16 +596,30 @@ class Router:
     def stats(self) -> Dict[str, Any]:
         """Fleet-wide serving stats: the routing histogram, per-artifact
         supervisor stats (crashes, rebuilds, re-queues, per-replica
-        engine stats), quarantine state, and the measured
-        budget-violation rate."""
+        engine stats, and the drift signals ``oracle_rel_error`` /
+        ``measurement_window`` / per-entry ``budget_violation_rate``),
+        quarantine state, and the measured budget-violation rate.
+        Aggregates span generations: requests completed by retiring or
+        retired fleets stay counted after a hot-swap, so the zero-loss
+        accounting (``submitted == requests + failed + in-flight``)
+        holds across swaps."""
         per_artifact = {name: sup.stats()
                         for name, sup in self._fleets.items()}
-        done = [r for sup in self._fleets.values() for r in sup.completed]
-        failed = [r for sup in self._fleets.values() for r in sup.failed]
+        retiring_sups = [rec["sup"] for rec in self._retiring]
+        all_sups = list(self._fleets.values()) + retiring_sups
+        done = [r for sup in all_sups for r in sup.completed] \
+            + self._retired_done
+        failed = [r for sup in all_sups for r in sup.failed] \
+            + self._retired_failed
         budgeted = [r for r in done if r.latency_budget_s is not None]
         violations = [r for r in budgeted
                       if r.t_done - r.t_submit > r.latency_budget_s]
         total_tokens = sum(len(r.output) for r in done)
+
+        def _count(attr: str) -> int:
+            return sum(getattr(s, attr) for s in all_sups) \
+                + self._retired_counts[attr]
+
         return {
             "requests": len(done),
             "total_new_tokens": total_tokens,
@@ -531,6 +628,7 @@ class Router:
             "routing": dict(self._histogram),
             "rejected": self._rejected,
             "flagged": self._flagged,
+            "submitted": _count("submitted"),
             "budgeted_requests": len(budgeted),
             "budget_violations": len(violations),
             "budget_violation_rate": (len(violations) / len(budgeted)
@@ -538,13 +636,21 @@ class Router:
             # fault-tolerance accounting (fleet-wide sums; per-entry
             # detail lives in per_artifact)
             "failed": len(failed),
-            "crashes": sum(s.crashes for s in self._fleets.values()),
-            "rebuilds": sum(s.rebuilds for s in self._fleets.values()),
-            "requeued": sum(s.requeued for s in self._fleets.values()),
-            "shed": sum(s.shed for s in self._fleets.values()),
+            "crashes": _count("crashes"),
+            "rebuilds": _count("rebuilds"),
+            "requeued": _count("requeued"),
+            "shed": _count("shed"),
             "quarantined": {name: q["reason"]
                             for name, q in self._quarantined.items()},
             "probes": self._probes,
             "recovered": self._recovered,
             "per_artifact": per_artifact,
+            # hot-swap accounting
+            "generation": self.generation,
+            "swaps": self._swaps,
+            "retired_fleets": self._retired_fleets,
+            "retiring": [{"name": rec["name"],
+                          "generation": rec["generation"],
+                          "in_flight": rec["sup"].in_flight_count}
+                         for rec in self._retiring],
         }

@@ -1,0 +1,537 @@
+"""Autopilot control plane: drift-triggered replanning + hot-swap.
+
+Acceptance contract: with a drift injected at serve time (the accurate
+entry's decode step slowed well past its prediction), the autopilot —
+with no human in the loop — detects the drift through the router's
+health signals, replans under the drift source's recalibrated oracle,
+exports the winner as a new catalog generation, and hot-swaps it in
+with zero dropped requests and zero lost in-flight work (every request
+admitted before the swap completes on the old generation); the
+post-swap budget-violation rate is strictly lower than pre-swap. A kill
+injected mid-swap (``crash_at``) leaves a loadable, validated catalog;
+a failed probation rolls the swap back to the prior generation.
+"""
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CPruneConfig, DeploymentArtifact, MeasuredOracle,
+                       MeasurementConfig, MeasurementLog, ReplayOracle,
+                       TrainHooks, Workload, plan)
+from repro.api.artifact import ArtifactError, GenerationStore
+from repro.configs import get_reduced_config
+from repro.core import clear_tuning_caches
+from repro.models.model import init_params
+from repro.serve.autopilot import Autopilot, AutopilotConfig
+from repro.serve.engine import Request
+from repro.serve.fleet import ReplicaSupervisor, RouteError
+from repro.serve.router import ArtifactCatalog, Router
+from repro.util.faults import FaultInjector, InjectedFault, crash_at, delay_at
+
+
+@pytest.fixture(autouse=True)
+def _cold_caches():
+    clear_tuning_caches()
+    yield
+    clear_tuning_caches()
+
+
+def _cfg():
+    return get_reduced_config("qwen3_1_7b").with_overrides(
+        n_layers=2, d_model=64, d_ff=512, n_heads=8, n_kv_heads=2,
+        head_dim=8, vocab_size=128)
+
+
+def _count(p):
+    return sum(int(np.prod(np.asarray(x).shape)) for x in jax.tree.leaves(p))
+
+
+_FAST = MeasurementConfig(warmup=0, repeats=1, trim=0, measure_top_k=1,
+                          max_grid_steps=1)
+
+
+class _DeterministicMeasuredOracle(MeasuredOracle):
+    """A measured oracle whose per-kernel timing is a deterministic
+    function of the problem size instead of a wall clock. Everything
+    else — recording, replay bundling, rescaling — is the real code
+    path, but the frontier ordering (more pruning => faster) cannot be
+    inverted by single-repeat interpret-mode timing noise."""
+
+    def _time_kernel(self, m, k, n, batch, dtype_bytes, block) -> float:
+        return float(m * k * n * batch) * 1e-12 + 5e-7
+
+
+@pytest.fixture(scope="module")
+def fleet_plan(tmp_path_factory):
+    """One measured-oracle plan whose two frontier artifacts are
+    replay-backed (so ``recalibrated_oracle`` — and therefore the
+    autopilot's replan — works), exported as a catalog."""
+    clear_tuning_caches()
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n0 = _count(params)
+    hooks = TrainHooks(short_term_train=lambda p, s: p,
+                       eval_acc=lambda p, s: _count(p) / n0)
+    pl = plan(cfg, accuracy_floor=0.0, targets=["tpu_v5e"],
+              strategies=["uniform_l1", "fpgm"],
+              workload=Workload(tokens_global=8192), hooks=hooks,
+              params=params,
+              oracle=_DeterministicMeasuredOracle(
+                  _FAST, record=MeasurementLog(_FAST)),
+              pcfg=CPruneConfig(a_g=0.0, seq_len=64),
+              strategy_kwargs={"uniform_l1": {"ratio": 0.6},
+                               "fpgm": {"ratio": 0.1}})
+    assert len(pl.frontier) == 2
+    path = tmp_path_factory.mktemp("autopilot")
+    cat = pl.export_catalog(str(path), max_batch=2, max_seq=24)
+    assert len(cat) == 2
+    clear_tuning_caches()
+    return str(path), cfg, pl
+
+
+def _clone(root, tmp_path, name="cat"):
+    dst = str(tmp_path / name)
+    shutil.copytree(root, dst)
+    return dst
+
+
+def _entries(cat):
+    fast = min(cat, key=lambda e: e.predicted_step_s)
+    accurate = max(cat, key=lambda e: e.accuracy)
+    return fast, accurate
+
+
+def _req(rng, cfg, rid, **kw):
+    return Request(rid=rid, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=4, **kw)
+
+
+def _stage_copy(store):
+    """Stage the next generation as a byte-identical copy of the current
+    root catalog (the cheap way to make a real, loadable generation
+    without re-running a plan)."""
+    gid, staged = store.stage()
+    for item in os.listdir(store.root):
+        if item in ("generations", "CURRENT") or item.endswith(".tmp"):
+            continue
+        src = os.path.join(store.root, item)
+        dst = os.path.join(staged, item)
+        if os.path.isdir(src):
+            shutil.copytree(src, dst)
+        else:
+            shutil.copy2(src, dst)
+    return gid, staged
+
+
+# -- GenerationStore: the atomic-swap substrate (no jax needed) -------------
+
+
+def _fake_gen(path):
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "catalog.json"), "w") as f:
+        json.dump({"version": 1, "entries": []}, f)
+
+
+def test_generation_store_lifecycle(tmp_path):
+    root = str(tmp_path / "cat")
+    _fake_gen(root)
+    store = GenerationStore(root, keep_last=1)
+    assert GenerationStore.read_pointer(root) is None
+    assert GenerationStore.resolve(root) == (0, root)
+
+    gid, staged = store.stage()
+    assert gid == 1 and os.path.isdir(staged)
+    # a stage with no manifest cannot become current
+    with pytest.raises(ArtifactError, match="no catalog manifest"):
+        store.commit(gid)
+    assert store.current[0] == 0        # refused commit changed nothing
+    _fake_gen(staged)
+    store.commit(gid)
+    assert store.current == (1, staged)
+    assert GenerationStore.resolve(root) == (1, staged)
+
+    gid2, staged2 = store.stage()
+    assert gid2 == 2
+    _fake_gen(staged2)
+    store.commit(gid2)
+    assert store.current[0] == 2
+    assert sorted(store.generations()) == [0, 1, 2]
+
+    # rollback walks back one complete generation at a time, down to the
+    # never-deleted generation 0
+    assert store.rollback()[0] == 1
+    assert store.rollback()[0] == 0
+    with pytest.raises(ArtifactError, match="no prior generation"):
+        store.rollback()
+
+    # retire keeps generation 0, the current one, and keep_last others
+    store.commit(2)
+    assert store.retire() == []         # keep_last=1 retains gen 1
+    removed = store.retire(keep_last=0)
+    assert removed == [1] and sorted(store.generations()) == [0, 2]
+    # retired ids are never reused
+    gid3, _ = store.stage()
+    assert gid3 == 3
+
+    # a malformed pointer is refused loudly, not silently ignored
+    with open(os.path.join(root, "CURRENT"), "w") as f:
+        f.write("not json{")
+    with pytest.raises(ArtifactError, match="malformed generation pointer"):
+        GenerationStore.resolve(root)
+    # a pointer naming a missing generation is refused too
+    with open(os.path.join(root, "CURRENT"), "w") as f:
+        json.dump({"generation": 99, "path": "generations/gen-0099"}, f)
+    with pytest.raises(ArtifactError, match="no catalog manifest"):
+        GenerationStore.resolve(root)
+
+
+def test_generation_store_crash_at_commit_is_atomic(tmp_path):
+    """A kill immediately before the pointer flip (the only commit
+    point) leaves the old generation current; retrying the commit
+    afterwards completes the swap."""
+    root = str(tmp_path / "cat")
+    _fake_gen(root)
+    inj = FaultInjector(specs=[crash_at("swap_commit")])
+    store = GenerationStore(root, faults=inj)
+    gid, staged = store.stage()
+    _fake_gen(staged)
+    with pytest.raises(InjectedFault):
+        store.commit(gid)
+    assert GenerationStore.read_pointer(root) is None
+    assert store.current[0] == 0        # old generation fully current
+    # the crash fired once; the retried commit goes through
+    store.commit(gid)
+    assert store.current[0] == gid
+
+
+# -- MeasurementLog edge cases behind recalibration -------------------------
+
+
+def test_recalibrated_oracle_empty_and_single_entry_logs():
+    """An artifact whose bundled replay log records no kernel
+    measurements cannot be rescaled (clear error, not a zero-division);
+    a single-entry log warns and returns the original oracle unscaled."""
+    art = DeploymentArtifact(
+        cfg=None, params={}, sites=[], target=None,
+        oracle=ReplayOracle(MeasurementLog()), workload=None,
+        seq_len=0, table=None, metadata={})
+    with pytest.raises(ArtifactError, match="no kernel"):
+        art.recalibrated_oracle(1e-3)
+
+    log = MeasurementLog()
+    log.record("gemm:1:1:1:1:2:8:8:8", 1e-3)
+    art2 = dataclasses.replace(art, oracle=ReplayOracle(log))
+    with pytest.warns(RuntimeWarning, match="single kernel measurement"):
+        out = art2.recalibrated_oracle(1e-3)
+    assert out is art2.oracle
+
+
+# -- drain + drift signals at the fleet/router layer ------------------------
+
+
+def test_fleet_drain_sheds_new_work_and_finishes_admitted(fleet_plan):
+    path, cfg, _ = fleet_plan
+    cat = ArtifactCatalog.load(path)
+    fast, _ = _entries(cat)
+    sup = ReplicaSupervisor.from_artifact(
+        lambda: cat.artifact(fast.name), name=fast.name,
+        engine_kwargs=dict(max_batch=2, max_seq=24))
+    rng = np.random.default_rng(0)
+    r0 = _req(rng, cfg, 0)
+    sup.submit(r0)
+    sup.drain()
+    assert sup.draining and not sup.idle
+    with pytest.raises(RouteError, match="draining"):
+        sup.submit(_req(rng, cfg, 1))
+    st = sup.run()
+    assert r0.done and not r0.failed
+    assert sup.idle
+    assert st["draining"] and st["shed"] == 1
+    assert st["accounting"]["submitted"] == 1 and st["requests"] == 1
+
+
+def test_router_stats_expose_drift_signals(fleet_plan, tmp_path):
+    path, cfg, _ = fleet_plan
+    cat = ArtifactCatalog.load(_clone(path, tmp_path))
+    fast, accurate = _entries(cat)
+    router = Router(cat)
+    rng = np.random.default_rng(0)
+    loose = 60.0                        # wall-clock loose, always met
+    router.submit(_req(rng, cfg, 0, latency_budget_s=loose))
+    router.submit(_req(rng, cfg, 1))
+    st = router.run()
+    assert st["generation"] == 0 and st["swaps"] == 0
+    assert st["submitted"] == 2 and st["requests"] == 2
+    per = st["per_artifact"][accurate.name]
+    # the autopilot's inputs: predicted-vs-measured drift and the
+    # per-entry budget-violation record, straight from stats()
+    assert per["measurement_window"] > 0
+    assert isinstance(per["oracle_rel_error"], float)
+    assert per["budgeted_requests"] == 1
+    assert per["budget_violations"] == 0
+    assert per["budget_violation_rate"] == 0.0
+    assert per["draining"] is False
+
+
+# -- hot swap: zero loss, bit-identical drain -------------------------------
+
+
+def test_swap_drains_in_flight_bit_identical(fleet_plan, tmp_path):
+    """A request admitted before the swap completes on the old
+    generation with the exact output it would have produced without the
+    swap; a request submitted after routes on the new generation; the
+    accounting stays zero-loss across the swap."""
+    path, cfg, _ = fleet_plan
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+
+    ref_router = Router(ArtifactCatalog.load(_clone(path, tmp_path, "ref")))
+    ref = Request(rid=0, prompt=prompt.copy(), max_new_tokens=4)
+    ref_router.submit(ref)
+    ref_router.run()
+    assert ref.done
+
+    root = _clone(path, tmp_path, "live")
+    router = Router(ArtifactCatalog.load(root))
+    r_old = Request(rid=0, prompt=prompt.copy(), max_new_tokens=4)
+    router.submit(r_old)
+    for _ in range(3):                  # prefill + partial decode
+        router.step()
+    assert not r_old.done
+
+    store = GenerationStore(root)
+    gid, _ = _stage_copy(store)
+    store.commit(gid)
+    cat1 = ArtifactCatalog.load(root, lazy=True)
+    assert cat1.generation == gid == 1
+    info = router.swap(cat1)
+    assert info["generation"] == 1
+    assert r_old.routed_to in info["draining"]
+
+    r_new = Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)
+    router.submit(r_new)
+    st = router.run()
+    assert r_old.done and r_old.output == ref.output    # bit-identical
+    assert r_old.retries == 0           # never re-routed or re-prefilled
+    assert r_new.done
+    assert st["submitted"] == 2 and st["requests"] == 2
+    assert st["failed"] == 0 and st["shed"] == 0 and st["rejected"] == 0
+    assert st["generation"] == 1 and st["swaps"] == 1
+    assert st["retired_fleets"] >= 1 and st["retiring"] == []
+
+
+# -- the autopilot loop -----------------------------------------------------
+
+
+def _autopilot_cfg(**over):
+    base = dict(check_every=4, rel_error_threshold=1.0,
+                violation_threshold=0.5, min_window=2, min_budgeted=1,
+                probation_steps=25, cooldown_steps=50, max_swaps=1)
+    base.update(over)
+    return AutopilotConfig(**base)
+
+
+def test_autopilot_contains_replan_failure(fleet_plan, tmp_path):
+    """A replan that blows up must never take serving down: the trigger
+    is recorded as a skip, the old generation keeps serving."""
+    path, cfg, _ = fleet_plan
+    root = _clone(path, tmp_path)
+    cat = ArtifactCatalog.load(root)
+    _, accurate = _entries(cat)
+    router = Router(cat)
+
+    def exploding_replan(trigger, oracle):
+        raise ValueError("planner exploded")
+
+    # check_every=0: sweeps only when the test calls them, so the
+    # trigger below is the only one
+    ap = Autopilot(router, replan=exploding_replan,
+                   config=_autopilot_cfg(check_every=0))
+    rng = np.random.default_rng(0)
+    router.submit(_req(rng, cfg, 0))    # builds the accurate fleet
+    ap.run(deadline_s=120)
+    # fake a drifted observation window: measured 10x the prediction
+    art = cat.artifact(accurate.name)
+    key = MeasurementLog.step_key(art.measurement_tag, 2, 24)
+    for _ in range(2):
+        ap.log.record(key, accurate.predicted_step_s * 10)
+    trigger = ap.sweep()
+    assert trigger is not None and trigger["name"] == accurate.name
+    st = ap.stats()
+    assert st["skips"].get("replan") == 1
+    assert st["swaps"] == 0 and st["generation"] == 0
+    assert st["replans"] == 1
+    # serving is unharmed
+    r = _req(rng, cfg, 1)
+    router.submit(r)
+    router.run()
+    assert r.done
+
+
+def test_autopilot_probation_rollback_restores_prior_generation(
+        fleet_plan, tmp_path):
+    """The judge half of the loop: a new generation whose budget
+    violations are strictly worse than pre-swap fails probation and is
+    rolled back — pointer, router, and serving all return to the prior
+    generation."""
+    path, cfg, pl = fleet_plan
+    root = _clone(path, tmp_path)
+    inj = FaultInjector()
+    cat = ArtifactCatalog.load(root)
+    fast, accurate = _entries(cat)
+    router = Router(cat, faults=inj)
+    ap = Autopilot(router, replan=pl, faults=inj,
+                   config=_autopilot_cfg(cooldown_steps=10))
+
+    # install generation 1 by hand and put it on probation against a
+    # clean pre-swap record
+    gid, _ = _stage_copy(ap.store)
+    ap.store.commit(gid)
+    cat1 = ArtifactCatalog.load(root, lazy=True)
+    router.swap(cat1)
+    ap._probation = {"until": ap._steps + 30,
+                     "pre": {"budgeted": 1, "violations": 0, "rate": 0.0},
+                     "generation": cat1.generation, "trigger": "manual"}
+
+    # generation 1 violates its budgets: every decode tick is delayed
+    pred_f = fast.predicted_step_s
+    pred_a = accurate.predicted_step_s
+    delay = max(0.05, 4 * pred_a)
+    inj.specs.append(delay_at("decode", delay, *range(4000)))
+    r = _req(np.random.default_rng(0), cfg, 0,
+             latency_budget_s=pred_f * 4 * 1.2)
+    router.submit(r)
+    for _ in range(400):
+        ap.step()
+        if ap.stats()["probation"] is None and not router.has_work:
+            break
+    assert r.done
+    assert r.t_done - r.t_submit > r.latency_budget_s   # it did violate
+    st = ap.stats()
+    assert st["rollbacks"] == 1
+    assert st["generation"] == 0 and router.generation == 0
+    assert ap.store.current[0] == 0
+    assert st["cooldown_until"] > st["steps"]           # backed off hard
+    # the rolled-back fleet still serves
+    r2 = _req(np.random.default_rng(1), cfg, 1)
+    router.submit(r2)
+    router.run()
+    assert r2.done
+    rst = router.stats()
+    assert rst["submitted"] == 2 and rst["requests"] == 2
+    assert rst["failed"] == 0
+
+
+def test_autopilot_crash_mid_swap_leaves_loadable_catalog(
+        fleet_plan, tmp_path):
+    """The chaos half of the acceptance test: a kill injected at the
+    commit point of a real (exported) staged generation leaves the old
+    generation loadable and validated; the retried commit completes."""
+    path, _, _ = fleet_plan
+    root = _clone(path, tmp_path)
+    inj = FaultInjector(specs=[crash_at("swap_commit")])
+    store = GenerationStore(root, faults=inj)
+    gid, _ = _stage_copy(store)
+    with pytest.raises(InjectedFault):
+        store.commit(gid)
+    # the kill left the old generation fully current — eager load
+    # validates every member artifact
+    cat = ArtifactCatalog.load(root)
+    assert cat.generation == 0 and len(cat) == 2
+    # recovery: the same staged generation commits cleanly afterwards
+    store.commit(gid)
+    cat1 = ArtifactCatalog.load(root)
+    assert cat1.generation == gid and len(cat1) == 2
+
+
+def test_autopilot_end_to_end_drift_replan_hot_swap(fleet_plan, tmp_path):
+    """The acceptance test: inject a decode-step drift on the accurate
+    entry, let the autopilot run the whole loop autonomously —
+    detect → recalibrate → background replan → export generation →
+    atomic commit → hot-swap — with zero dropped requests, and verify
+    the post-swap budget-violation rate is strictly lower."""
+    path, cfg, pl = fleet_plan
+    root = _clone(path, tmp_path)
+    cat = ArtifactCatalog.load(root)
+    fast, accurate = _entries(cat)
+
+    # the accurate entry's decode step drifts to >= 5x its prediction
+    delay = max(0.08, 5 * accurate.predicted_step_s)
+    inj = FaultInjector(specs=[
+        delay_at(f"decode:{accurate.name}#r0", delay, *range(4000))])
+    router = Router(cat, faults=inj)
+    # min_budgeted=999: the violation-rate signal cannot fire with only
+    # 4 budgeted requests, so the trigger must be the windowed
+    # predicted-vs-measured oracle drift
+    ap = Autopilot(router, replan=pl, faults=inj, background=True,
+                   config=_autopilot_cfg(min_budgeted=999))
+
+    # phase 1: budgets the (pre-drift) oracle says the accurate entry
+    # satisfies easily — the drift makes every one of them violate
+    rng = np.random.default_rng(0)
+    b1 = delay
+    assert accurate.predicted_step_s * 4 < b1   # routable pre-drift
+    phase1 = [_req(rng, cfg, i, latency_budget_s=b1) for i in range(4)]
+    for r in phase1:
+        assert router.submit(r) == accurate.name
+    ap.run(deadline_s=600)
+
+    st = ap.stats()
+    assert st["replans"] >= 1 and st["swaps"] == 1, st["events"]
+    assert st["rollbacks"] == 0
+    assert st["last_trigger"]["name"] == accurate.name
+    assert any("oracle_rel_error" in why
+               for why in st["last_trigger"]["reasons"])
+    assert router.generation == 1
+    # zero loss: every pre-swap request completed on the old generation
+    assert all(r.done and not r.failed for r in phase1)
+    assert all(r.routed_to == accurate.name for r in phase1)
+    pre_rate = sum(r.t_done - r.t_submit > b1 for r in phase1) / len(phase1)
+    assert pre_rate == 1.0
+
+    # the swap is durable: an eager reload from disk validates the new
+    # generation, whose accurate entry absorbed the observed drift
+    cat1 = ArtifactCatalog.load(root)
+    assert cat1.generation == 1 and len(cat1) == 2
+    new_fast, new_acc = _entries(cat1)
+    assert new_acc.predicted_step_s > accurate.predicted_step_s
+
+    # phase 2: budgets in the *new* catalog's language — the recalibrated
+    # predictions route them to the fast entry, which actually meets them
+    est_f = new_fast.predicted_step_s * 4
+    est_a = new_acc.predicted_step_s * 4
+    assert est_f < est_a
+    b2 = (est_f + est_a) / 2
+    warm = [_req(rng, cfg, 10 + i, latency_budget_s=b2) for i in range(2)]
+    for r in warm:                      # compile the new engines
+        assert router.submit(r) == new_fast.name
+    ap.run(deadline_s=600)
+    phase2 = [_req(rng, cfg, 20 + i, latency_budget_s=b2) for i in range(2)]
+    for r in phase2:
+        assert router.submit(r) == new_fast.name
+    ap.run(deadline_s=600)
+
+    assert all(r.done and not r.failed for r in phase2)
+    post_rate = sum(r.t_done - r.t_submit > b2 for r in phase2) / len(phase2)
+    assert post_rate < pre_rate
+
+    # zero loss across the whole run, swap included
+    rst = router.stats()
+    assert rst["submitted"] == 8 and rst["requests"] == 8
+    assert rst["failed"] == 0 and rst["shed"] == 0 and rst["rejected"] == 0
+    assert rst["swaps"] == 1 and rst["retired_fleets"] >= 1
+
+    # probation resolves in the new generation's favor (its violation
+    # rate cannot exceed the pre-swap 1.0)
+    for _ in range(200):
+        if ap.stats()["probation"] is None:
+            break
+        ap.step()
+    st = ap.stats()
+    assert st["probation"] is None and st["rollbacks"] == 0
+    assert st["generation"] == 1

@@ -307,3 +307,50 @@ def test_fixed_latency_cache_is_bounded_with_eviction_counter():
         latency.set_fixed_latency_cache_limit(old)
     with pytest.raises(ValueError):
         latency.set_fixed_latency_cache_limit(0)
+
+
+def test_measurement_log_bounded_lru_with_observation_windows():
+    """Serve-time logs are bounded: LRU eviction with a counter (the
+    same discipline as latency._FIXED_CACHE), and a per-key observation
+    window so drift scoring sees recent behaviour, not one scalar."""
+    log = MeasurementLog(max_entries=3, window_size=2)
+    for i in range(3):
+        log.record(f"k{i}", float(i))
+    assert log.lookup("k0") == 0.0      # refreshes k0's recency
+    log.record("k3", 3.0)               # evicts k1, the actual LRU
+    assert len(log) == 3 and log.evicted == 1
+    assert log.lookup("k1") is None
+    assert log.lookup("k0") == 0.0
+    # windows keep the newest window_size samples, newest last
+    log.record("k3", 4.0)
+    log.record("k3", 5.0)
+    assert log.window("k3") == [4.0, 5.0]
+    assert log.window("k1") == []       # evicted key's window went too
+    # copy preserves bounds, windows, and the entries themselves
+    dup = log.copy()
+    assert dup.max_entries == 3 and dup.window("k3") == [4.0, 5.0]
+    # an unbounded log never evicts
+    unbounded = MeasurementLog()
+    for i in range(64):
+        unbounded.record(f"k{i}", 1.0)
+    assert len(unbounded) == 64 and unbounded.evicted == 0
+
+
+def test_score_drift_windowed_rel_error():
+    log = MeasurementLog(window_size=4)
+    key = MeasurementLog.step_key("m", 2, 24)
+    # no evidence / not enough evidence / meaningless prediction -> None
+    assert oracle.score_drift(log, key, 1.0) is None
+    log.record(key, 2.0)
+    assert oracle.score_drift(log, key, 1.0, min_window=2) is None
+    log.record(key, 3.0)
+    assert oracle.score_drift(log, key, 0.0, min_window=2) is None
+    rep = oracle.score_drift(log, key, 1.0, min_window=2)
+    assert rep is not None
+    assert rep.window == 2 and rep.measured_s == 2.5
+    # rel_error is signed: positive = slower than predicted
+    assert rep.rel_error == pytest.approx(1.5)
+    assert rep.magnitude == pytest.approx(1.5)
+    fast = oracle.score_drift(log, key, 10.0, min_window=2)
+    assert fast.rel_error == pytest.approx(-0.75)
+    assert fast.magnitude == pytest.approx(0.75)
