@@ -55,6 +55,24 @@ def run():
                 f"BSHD={B}x{S}x{Hq}x{D};"
                 f"v5e_cost_us={attention_cost(B,S,S,Hq,D)*1e6:.2f}")
 
+    # paged decode attention (block-table KV, the serve engine's kernel)
+    import numpy as np
+    from repro.kernels.paged_attention import paged_attention
+    B, ncols, bs, Hq, Hkv, D = 4, 4, 16, 4, 2, 64
+    n_blocks = B * ncols + 2  # + reserved zero/scratch ids
+    kp = jax.random.normal(ks[5], (n_blocks, bs, Hkv, D))
+    vp = jax.random.normal(ks[6], (n_blocks, bs, Hkv, D))
+    tbl = jnp.asarray(
+        np.random.default_rng(0).permutation(np.arange(2, n_blocks))
+        .reshape(B, ncols), jnp.int32)
+    qd = jax.random.normal(ks[7], (B, Hq, D))
+    lens = jnp.full((B,), ncols * bs, jnp.int32)
+    us = _time(lambda *x: paged_attention(*x, interpret=True),
+               qd, kp, vp, tbl, lens)
+    common.emit("kernel_paged_attention", us,
+                f"B={B};kv_len={ncols * bs};bs={bs};HqHkvD={Hq}x{Hkv}x{D};"
+                f"v5e_cost_us={attention_cost(B, 1, ncols * bs, Hq, D)*1e6:.2f}")
+
     # rglru scan
     aa = jax.nn.sigmoid(jax.random.normal(ks[5], (2, 256, 128)))
     xx = jax.random.normal(ks[6], (2, 256, 128))

@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serve_autopilot    drift-triggered autopilot: injected decode drift ->
                      recalibrated replan -> atomic hot-swap (swap must
                      happen, violation rate must drop, zero dropped)
+  serve_paged        paged KV cache vs the contiguous layout at batch 64
+                     on a heavy-tailed mix (throughput + strict peak-KV
+                     gates, zero compaction copies, bit-identical greedy
+                     outputs, prefix sharing must cut prefill work)
   tuner_bench        vectorized+memoized tuning engine vs the scalar
                      reference engine (identical histories, wall-clock)
   kernel_*           Pallas kernel microbenches (interpret + v5e cost)
@@ -54,6 +58,7 @@ def main() -> None:
         ("serve_bench", serve_bench.run),
         ("serve_chaos", serve_bench.run_chaos),
         ("serve_autopilot", serve_bench.run_autopilot),
+        ("serve_paged", serve_bench.run_paged),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),
         ("kernels", kernels_bench.run),

@@ -37,8 +37,16 @@ and hot-swap the new catalog generation in. Gates: at least one swap, a
 post-swap budget-violation rate strictly below pre-swap, and **zero
 dropped requests** across the swap.
 
+A fifth arm (CI ``paged-smoke``, ``--paged``) drains a heavy-tailed
+batch-64 workload through the paged KV cache and through the legacy
+contiguous layout. Gates: paged tokens/s >= contiguous
+(``SERVE_PAGED_MIN_RATIO``), paged peak KV bytes strictly lower, zero
+compaction cache-row copies, bit-identical greedy outputs — and prefix
+sharing must strictly reduce prefill tokens and peak blocks on a
+duplicate-heavy workload.
+
 Run: ``PYTHONPATH=src:. python benchmarks/serve_bench.py
-[--chaos|--autopilot]``
+[--chaos|--autopilot|--paged]``
 """
 from __future__ import annotations
 
@@ -181,6 +189,142 @@ def run():
             f"router throughput fell below the wave baseline: "
             f"{r_ratio:.2f} < {min_ratio}")
     return {"sched": sched, "wave": wave, "router": routed, "solo": solo}
+
+
+def _paged_workload(cfg, *, n=96, seed=0, duplicates=1):
+    """Heavy-tailed serve mix for the paged arm: mostly short prompts,
+    a long tail of deep prompts and long decodes — the shape on which a
+    full-depth contiguous reservation wastes the most KV. Decode budgets
+    are deep enough (8-16 typical, 48 tail) that the drain spends its
+    time in sustained multi-row decode ticks, where the KV layout is
+    what's being measured — not in single-row dispatch overhead.
+    ``duplicates`` repeats each distinct prompt (the prefix-sharing
+    arm's knob)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    rid = 0
+    while len(reqs) < n:
+        u = rng.random()
+        plen = 8 if u < 0.7 else (16 if u < 0.95 else 64)
+        n_new = int(rng.integers(8, 17)) if rng.random() < 0.85 else 48
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        for _ in range(duplicates):
+            if len(reqs) >= n:
+                break
+            reqs.append(Request(rid=rid, prompt=prompt.copy(),
+                                max_new_tokens=n_new))
+            rid += 1
+    return reqs
+
+
+def run_paged():
+    """CI ``paged-smoke``: the paged KV cache vs the contiguous layout.
+
+    Same scheduler policy, same params, batch 64, heavy-tailed prompts
+    and decode budgets. Gates: paged tokens/s >= contiguous
+    (``SERVE_PAGED_MIN_RATIO``, default 1.0), paged peak KV bytes
+    *strictly* below contiguous, **zero** compaction cache-row copies on
+    the paged arm, bit-identical greedy outputs per request — and, on a
+    duplicate-heavy workload, prefix sharing must strictly reduce both
+    prefill tokens and peak blocks.
+    """
+    from repro.serve.scheduler import SchedulerConfig
+
+    min_ratio = float(os.environ.get("SERVE_PAGED_MIN_RATIO", "1.0"))
+    cfg = _bench_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_batch, max_seq = 64, 128     # deepest prompt (64) + longest decode
+
+    def _mk(layout, *, share=True):
+        return ServeEngine(
+            cfg, params, max_batch=max_batch, max_seq=max_seq,
+            scheduler=SchedulerConfig(kv_layout=layout, page_size=16,
+                                      share_prefix=share))
+
+    def _round(eng, *, duplicates=1, n=96):
+        for r in _paged_workload(cfg, n=n, duplicates=duplicates):
+            eng.submit(r)
+        stats = eng.run()
+        outputs = {r.rid: list(r.output) for r in eng.done}
+        eng.reset_stats()
+        return stats, outputs
+
+    def drain(layout, *, share=True, duplicates=1, n=96):
+        eng = _mk(layout, share=share)
+        _round(eng, duplicates=duplicates, n=n)     # warmup/compile
+        stats, outputs = _round(eng, duplicates=duplicates, n=n)
+        return stats, outputs
+
+    # -- arm 1: throughput + memory, paged vs contiguous --------------------
+    # one drain is only a few hundred ms, so a single timed pass is at the
+    # mercy of host noise (and of the CPU still cooling off from the
+    # compile burst): warm both engines first, then alternate timed rounds
+    # and score each arm by its best round.
+    t = common.Timer()
+    c_eng, p_eng = _mk("contiguous"), _mk("paged")
+    _round(c_eng)
+    _round(p_eng)
+    contig, c_out = _round(c_eng)
+    paged, p_out = _round(p_eng)
+    for _ in range(2):
+        s, _ = _round(c_eng)
+        if s["tokens_per_s"] > contig["tokens_per_s"]:
+            contig = s
+        s, _ = _round(p_eng)
+        if s["tokens_per_s"] > paged["tokens_per_s"]:
+            paged = s
+    assert paged["total_new_tokens"] == contig["total_new_tokens"]
+    ratio = paged["tokens_per_s"] / max(contig["tokens_per_s"], 1e-9)
+    common.emit(
+        "serve_paged_vs_contiguous", t.us(),
+        f"tokens_per_s={paged['tokens_per_s']:.1f}"
+        f";contig_tokens_per_s={contig['tokens_per_s']:.1f}"
+        f";ratio={ratio:.2f}"
+        f";peak_kv_mb={paged['peak_kv_bytes']/2**20:.2f}"
+        f";contig_peak_kv_mb={contig['peak_kv_bytes']/2**20:.2f}"
+        f";kv_blocks_peak={paged['kv_blocks_peak']}"
+        f";kv_row_copies={paged['kv_row_copies']}")
+    if p_out != c_out:
+        bad = [rid for rid in c_out if p_out.get(rid) != c_out[rid]]
+        raise RuntimeError(
+            f"paged outputs diverged from contiguous for rids {bad[:8]}")
+    if paged["kv_row_copies"] != 0:
+        raise RuntimeError(
+            f"paged compaction copied {paged['kv_row_copies']} cache rows "
+            f"(must be a pure block-table rewrite)")
+    if not paged["peak_kv_bytes"] < contig["peak_kv_bytes"]:
+        raise RuntimeError(
+            f"paged peak KV {paged['peak_kv_bytes']} is not strictly below "
+            f"contiguous {contig['peak_kv_bytes']}")
+    if ratio < min_ratio:
+        raise RuntimeError(
+            f"paged throughput fell below contiguous: ratio {ratio:.2f} "
+            f"< {min_ratio}")
+
+    # -- arm 2: prefix sharing on a duplicate-heavy workload ----------------
+    t = common.Timer()
+    solo, solo_out = drain("paged", share=False, duplicates=4, n=32)
+    shared, shared_out = drain("paged", share=True, duplicates=4, n=32)
+    common.emit(
+        "serve_paged_sharing", t.us(),
+        f"prefill_tokens={shared['prefill_tokens']}"
+        f";unshared_prefill_tokens={solo['prefill_tokens']}"
+        f";kv_blocks_peak={shared['kv_blocks_peak']}"
+        f";unshared_kv_blocks_peak={solo['kv_blocks_peak']}"
+        f";shared_blocks={shared['kv_shared_blocks']}")
+    if shared_out != solo_out:
+        raise RuntimeError("prefix sharing changed greedy outputs")
+    if not (shared["prefill_tokens"] < solo["prefill_tokens"]
+            and shared["kv_blocks_peak"] < solo["kv_blocks_peak"]
+            and shared["kv_shared_blocks"] > 0):
+        raise RuntimeError(
+            f"prefix sharing did not reduce prefill work: "
+            f"prefill_tokens {shared['prefill_tokens']} vs "
+            f"{solo['prefill_tokens']}, blocks {shared['kv_blocks_peak']} "
+            f"vs {solo['kv_blocks_peak']} "
+            f"(shared={shared['kv_shared_blocks']})")
+    return {"paged": paged, "contiguous": contig, "shared": shared,
+            "unshared": solo}
 
 
 def _export_catalog(td, cfg, params):
@@ -438,5 +582,7 @@ if __name__ == "__main__":
         run_chaos()
     elif "--autopilot" in sys.argv:
         run_autopilot()
+    elif "--paged" in sys.argv:
+        run_paged()
     else:
         run()

@@ -116,18 +116,22 @@ def _canon(x):
 
 
 def _decode_step_report(cfg: ModelConfig, sites, wl: Workload,
-                        max_batch: int, max_seq: int
+                        max_batch: int, max_seq: int, *,
+                        kv_layout: str = "contiguous"
                         ) -> latency.LatencyReport:
     """One decode step of this model at ``max_batch``: per-token GEMMs for
     ``max_batch`` tokens plus attention against a ``max_seq``-deep KV
     cache — under the *already active* target and oracle. Returns the
     full report (the task/fixed split parameterizes serve-time
-    recalibration, not just the total)."""
+    recalibration, not just the total). ``kv_layout="paged"`` prices the
+    attention term through the paged-decode kernel when the oracle can
+    measure it."""
     wl_d = Workload(tokens_global=max_batch, dp=1, tp=1,
                     dtype_bytes=wl.dtype_bytes)
     table = tuner.build_tuned_table(sites, wl_d)
     return latency.model_latency(cfg, sites, table, seq_len=1,
-                                 decode_kv_len=max_seq)
+                                 decode_kv_len=max_seq,
+                                 kv_layout=kv_layout)
 
 
 @dataclasses.dataclass
@@ -458,18 +462,22 @@ class DeploymentArtifact:
         return f"{self.cfg.name}@{self.params_digest}"
 
     def predict_step_s(self, max_batch: int, max_seq: int, *,
-                       oracle: Optional[LatencyOracle] = None
+                       oracle: Optional[LatencyOracle] = None,
+                       kv_layout: str = "contiguous"
                        ) -> Optional[float]:
         """Oracle-predicted seconds per decode step at ``max_batch`` with a
         ``max_seq``-deep KV cache (None when a replay log cannot score the
         decode shapes). ``oracle`` overrides the artifact's own backend —
-        e.g. a recalibrated replay oracle."""
+        e.g. a recalibrated replay oracle. ``kv_layout="paged"`` predicts
+        the paged-decode step — a measuring oracle times the paged kernel
+        itself, so the prediction tracks the engine's actual layout."""
         with tuner.target_activation(self.target), \
                 oracle_mod.use_oracle(oracle or self.oracle):
             try:
                 return _decode_step_report(self.cfg, self.sites,
                                            self.workload, max_batch,
-                                           max_seq).total_s
+                                           max_seq,
+                                           kv_layout=kv_layout).total_s
             except KeyError:
                 return None
 

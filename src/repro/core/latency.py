@@ -83,10 +83,10 @@ def _fixed_cache_trim() -> None:
 
 
 def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning,
-                     decode_kv_len) -> Optional[Tuple]:
+                     decode_kv_len, kv_layout) -> Optional[Tuple]:
     heads = tuple(sorted((s.block_path, s.dim)
                          for s in sites if s.kind == "heads"))
-    key = (cfg, heads, wl, seq_len, use_tuning, decode_kv_len) \
+    key = (cfg, heads, wl, seq_len, use_tuning, decode_kv_len, kv_layout) \
         + tuning_cache.target_fingerprint() \
         + oracle_mod.active_oracle().fingerprint()
     try:
@@ -99,7 +99,8 @@ def _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning,
 def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                   *, seq_len: int, use_tuning: bool = True,
                   stats: Optional[tuner.TunerStats] = None, target=None,
-                  oracle=None, decode_kv_len: Optional[int] = None
+                  oracle=None, decode_kv_len: Optional[int] = None,
+                  kv_layout: str = "contiguous"
                   ) -> Tuple[float, Dict[str, float]]:
     """Latency of the non-prunable ops, per step, per shard. ``target``
     evaluates under a registered target, ``oracle`` under a scoring
@@ -107,22 +108,27 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
     fingerprints). ``decode_kv_len`` prices attention against a KV cache
     of that many keys instead of ``seq_len`` — with ``seq_len=1`` this
     turns the estimate into one *decode step* (per-token GEMMs + cached-
-    key attention) rather than a prefill."""
+    key attention) rather than a prefill. ``kv_layout="paged"`` prices
+    decode attention through the paged kernel instead (oracles without a
+    ``paged_attention_cost`` fall back to the dense estimate, which is
+    analytically identical)."""
     if target is not None:
         with target.activate():
             return fixed_latency(cfg, sites, wl, seq_len=seq_len,
                                  use_tuning=use_tuning, stats=stats,
-                                 oracle=oracle, decode_kv_len=decode_kv_len)
+                                 oracle=oracle, decode_kv_len=decode_kv_len,
+                                 kv_layout=kv_layout)
     if oracle is not None:
         with oracle_mod.use_oracle(oracle):
             return fixed_latency(cfg, sites, wl, seq_len=seq_len,
                                  use_tuning=use_tuning, stats=stats,
-                                 decode_kv_len=decode_kv_len)
+                                 decode_kv_len=decode_kv_len,
+                                 kv_layout=kv_layout)
     orc = oracle_mod.active_oracle()
     memo_key = None
     if tuner.engine() != "reference":
         memo_key = _fixed_cache_key(cfg, sites, wl, seq_len, use_tuning,
-                                    decode_kv_len)
+                                    decode_kv_len, kv_layout)
         if memo_key is not None and memo_key in _FIXED_CACHE:
             total, bd = _FIXED_CACHE[memo_key]
             _FIXED_CACHE.move_to_end(memo_key)
@@ -164,11 +170,20 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                 add("qo_proj", (qp.latency + op.latency) * mult)
             window = cfg.sliding_window if (kind == LOCAL_ATTN or
                                             cfg.sliding_window > 0) else 0
-            att = orc.attention_cost(
-                batch_local, seq_len,
-                decode_kv_len if decode_kv_len is not None else seq_len,
-                max(1, hq // tp), hd,
-                window=window, dtype_bytes=wl.dtype_bytes)
+            kv_len = decode_kv_len if decode_kv_len is not None else seq_len
+            paged_cost = getattr(orc, "paged_attention_cost", None) \
+                if (kv_layout == "paged" and seq_len == 1 and window == 0) \
+                else None
+            if paged_cost is not None:
+                # one decode step through the block table — a measuring
+                # oracle times the paged kernel itself here
+                att = paged_cost(batch_local, kv_len, max(1, hq // tp), hd,
+                                 n_kv_heads=max(1, hkv),
+                                 dtype_bytes=wl.dtype_bytes)
+            else:
+                att = orc.attention_cost(
+                    batch_local, seq_len, kv_len, max(1, hq // tp), hd,
+                    window=window, dtype_bytes=wl.dtype_bytes)
             add("attention", att * mult)
         elif kind == RGLRU:
             w = cfg.rglru_width
@@ -207,21 +222,25 @@ def model_latency(cfg: ModelConfig, sites: Sequence[PruneSite],
                   table: TaskTable, *, seq_len: int, use_tuning: bool = True,
                   stats: Optional[tuner.TunerStats] = None,
                   target=None, oracle=None,
-                  decode_kv_len: Optional[int] = None) -> LatencyReport:
+                  decode_kv_len: Optional[int] = None,
+                  kv_layout: str = "contiguous") -> LatencyReport:
     if target is not None:
         with target.activate():
             return model_latency(cfg, sites, table, seq_len=seq_len,
                                  use_tuning=use_tuning, stats=stats,
-                                 oracle=oracle, decode_kv_len=decode_kv_len)
+                                 oracle=oracle, decode_kv_len=decode_kv_len,
+                                 kv_layout=kv_layout)
     if oracle is not None:
         with oracle_mod.use_oracle(oracle):
             return model_latency(cfg, sites, table, seq_len=seq_len,
                                  use_tuning=use_tuning, stats=stats,
-                                 decode_kv_len=decode_kv_len)
+                                 decode_kv_len=decode_kv_len,
+                                 kv_layout=kv_layout)
     task_s = table.total_task_latency()
     fixed_s, bd = fixed_latency(cfg, sites, table.wl, seq_len=seq_len,
                                 use_tuning=use_tuning, stats=stats,
-                                decode_kv_len=decode_kv_len)
+                                decode_kv_len=decode_kv_len,
+                                kv_layout=kv_layout)
     bd = dict(bd)
     for t in table.tasks:
         key = f"task_{t.sites[0].kind}"

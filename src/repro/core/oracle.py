@@ -116,6 +116,21 @@ class AnalyticOracle:
                                          window=window,
                                          dtype_bytes=dtype_bytes)
 
+    def paged_attention_cost(self, batch, kv_len, n_heads, head_dim, *,
+                             n_kv_heads=1, block_size=16,
+                             dtype_bytes=2) -> float:
+        """Decode attention through a block table (one query token per
+        row, ``kv_len`` cached positions). Analytically identical to the
+        dense decode estimate — paging changes *where* KV rows live, not
+        how many bytes/FLOPs one step touches — so analytic fingerprints
+        (and every tuning cache keyed on them) are unchanged.
+        ``n_kv_heads``/``block_size`` only matter to measuring backends,
+        which time the real kernel under those shapes."""
+        del n_kv_heads, block_size
+        return cost_model.attention_cost(batch, 1, kv_len, n_heads,
+                                         head_dim, window=0,
+                                         dtype_bytes=dtype_bytes)
+
     def scan_cost(self, batch, seq, width, state_bytes) -> float:
         return cost_model.scan_cost(batch, seq, width, state_bytes)
 
@@ -189,6 +204,13 @@ class MeasurementLog:
                  block: Block) -> str:
         return (f"gemm:{m}:{k}:{n}:{batch}:{dtype_bytes}:"
                 f"{block.bm}:{block.bk}:{block.bn}")
+
+    @staticmethod
+    def paged_attention_key(batch: int, kv_len: int, n_heads: int,
+                            head_dim: int, n_kv_heads: int, block_size: int,
+                            dtype_bytes: int) -> str:
+        return (f"paged_attn:{batch}:{kv_len}:{n_heads}:{head_dim}:"
+                f"{n_kv_heads}:{block_size}:{dtype_bytes}")
 
     @staticmethod
     def step_key(tag: str, max_batch: int, max_seq: int) -> str:
@@ -369,6 +391,9 @@ class _MeasurementOracle:
     def attention_cost(self, *a, **kw) -> float:
         return self._analytic.attention_cost(*a, **kw)
 
+    def paged_attention_cost(self, *a, **kw) -> float:
+        return self._analytic.paged_attention_cost(*a, **kw)
+
     def scan_cost(self, *a, **kw) -> float:
         return self._analytic.scan_cost(*a, **kw)
 
@@ -478,6 +503,60 @@ class MeasuredOracle(_MeasurementOracle):
             self.record.record(key, secs)
         return secs
 
+    def _time_paged_attention(self, batch, n_chunks, n_heads, head_dim,
+                              n_kv_heads, block_size, dtype_bytes) -> float:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.paged_attention import paged_attention
+
+        dtype = jnp.bfloat16 if dtype_bytes <= 2 else jnp.float32
+        interpret = self._interpret()
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (batch, n_heads, head_dim),
+                              jnp.float32).astype(dtype)
+        n_blocks = batch * n_chunks
+        k_pool = jax.random.normal(key, (n_blocks, block_size, n_kv_heads,
+                                         head_dim), jnp.float32).astype(dtype)
+        v_pool = jnp.ones_like(k_pool)
+        table = jnp.arange(n_blocks, dtype=jnp.int32).reshape(batch, n_chunks)
+        lens = jnp.full((batch,), n_chunks * block_size, jnp.int32)
+        fn = jax.jit(lambda *a: paged_attention(*a, interpret=interpret))
+        for _ in range(max(0, self.config.warmup)):
+            jax.block_until_ready(fn(q, k_pool, v_pool, table, lens))
+        times = []
+        for _ in range(max(1, self.config.repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, k_pool, v_pool, table, lens))
+            times.append(time.perf_counter() - t0)
+        return _trimmed_median(times, self.config.trim)
+
+    def paged_attention_cost(self, batch, kv_len, n_heads, head_dim, *,
+                             n_kv_heads=1, block_size=16,
+                             dtype_bytes=2) -> float:
+        """Times the real paged-decode kernel (the grid is (batch, heads,
+        kv chunks) — clip chunks and batch, extrapolate by the exact
+        step-count ratio, exactly like :meth:`_clipped` for GEMMs).
+        Memoized under the full-dimension key in ``record``, so a replay
+        of this run reproduces the same step predictions."""
+        mkey = MeasurementLog.paged_attention_key(
+            batch, kv_len, n_heads, head_dim, n_kv_heads, block_size,
+            dtype_bytes)
+        if self.record is not None:
+            hit = self.record.lookup(mkey)
+            if hit is not None:
+                return hit
+        cap = max(1, self.config.max_grid_steps)
+        n_chunks = max(1, -(-int(kv_len) // block_size))
+        nc_c, b_c = min(n_chunks, cap), min(batch, 2)
+        scale = (n_chunks * batch) / (nc_c * b_c)
+        secs = self._time_paged_attention(
+            b_c, nc_c, n_heads, head_dim, n_kv_heads, block_size,
+            dtype_bytes) * scale
+        if self.record is not None:
+            self.record.record(mkey, secs)
+        return secs
+
 
 class ReplayOracle(_MeasurementOracle):
     """Plays a recorded :class:`MeasurementLog` back deterministically:
@@ -514,6 +593,22 @@ class ReplayOracle(_MeasurementOracle):
         if stats is not None:
             stats.replay_hits += 1
         return secs
+
+    def paged_attention_cost(self, batch, kv_len, n_heads, head_dim, *,
+                             n_kv_heads=1, block_size=16,
+                             dtype_bytes=2) -> float:
+        """Replays a recorded paged-kernel timing when the log has one;
+        falls back to the analytic estimate otherwise. Unlike ``gemm:``
+        keys this is a soft lookup — logs recorded before the paged
+        layout existed (or on contiguous-only workloads) stay valid."""
+        secs = self.log.lookup(MeasurementLog.paged_attention_key(
+            batch, kv_len, n_heads, head_dim, n_kv_heads, block_size,
+            dtype_bytes))
+        if secs is not None:
+            return secs
+        return self._analytic.paged_attention_cost(
+            batch, kv_len, n_heads, head_dim, n_kv_heads=n_kv_heads,
+            block_size=block_size, dtype_bytes=dtype_bytes)
 
 
 # ---------------------------------------------------------------------------

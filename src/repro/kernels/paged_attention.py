@@ -1,0 +1,111 @@
+"""Paged decode attention Pallas kernel: single-token queries reading K/V
+through a block table (vLLM-style), online-softmax.
+
+Grid: (B, Hq, n_cols) with the block-table column minor. The table and the
+per-row sequence lengths ride in as scalar-prefetch operands
+(``PrefetchScalarGridSpec``) so the KV BlockSpec index map can chase the
+indirection — grid step (b, h, ki) DMAs pool block ``table[b, ki]`` for KV
+head ``h // (Hq // Hkv)``; the pool itself never moves. Running max / sum /
+accumulator live in VMEM scratch across column steps, exactly the
+``flash_attention`` schedule with the KV walk order given by the table.
+
+Numerics match ``blockwise_attention`` / ``ref.paged_attention_ref`` (the
+oracle); positions are implicit — slot (c, o) holds absolute position
+c * block_size + o, so masking ``c*bs + o >= seq_len`` is the causal mask.
+
+``seq_lens`` must be >= 1 everywhere (a decode query always has at least
+its own freshly written position; an all-masked *first* column would poison
+the running max).
+
+Validated with interpret=True against ref.paged_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.matmul import vmem
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, scale: float, bs: int, n_c: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (1, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bs, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bs)
+
+    # slot o of column ki holds absolute position ki*bs + o; everything at
+    # or past seq_len is unwritten (zero block, pad garbage, future slots)
+    offs = ki * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(offs < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                        # (1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...][:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_c - 1)
+    def _flush():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_table: jax.Array, seq_lens: jax.Array, *,
+                    scale: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k/v_pool: (n_blocks, bs, Hkv, D);
+    block_table: (B, n_cols) int32; seq_lens: (B,) int32 (>= 1).
+    Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_pool.shape
+    g = Hq // Hkv
+    n_c = block_table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    grid = (B, Hq, n_c)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, ki, tbl, lens: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ki, tbl, lens: (tbl[b, ki], 0, h // g, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ki, tbl, lens: (tbl[b, ki], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ki, tbl, lens: (b, h, 0)),
+        scratch_shapes=[
+            vmem((1, 128), jnp.float32),   # running max (lane-replicated)
+            vmem((1, 128), jnp.float32),   # running sum
+            vmem((1, D), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_pa_kernel, scale=scale, bs=bs, n_c=n_c),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

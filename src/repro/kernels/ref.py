@@ -22,6 +22,32 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                                   scale=scale)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_table, seq_lens, *,
+                        scale=None):
+    """Decode-attention-through-a-block-table oracle (blockwise math).
+
+    q: (B, Hq, D); k/v_pool: (n_blocks, bs, Hkv, D); block_table: (B, n_cols)
+    int32; seq_lens: (B,) int32 >= 1. Gathers each row's blocks into a dense
+    (1, n_cols*bs, Hkv, D) sequence and runs ``blockwise_attention`` — slot
+    (c, o) holds absolute position c*bs + o, the query sits at seq_len - 1."""
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_pool.shape
+    n_c = block_table.shape[1]
+    outs = []
+    for b in range(B):
+        kg = k_pool[block_table[b]].reshape(1, n_c * bs, Hkv, D)
+        vg = v_pool[block_table[b]].reshape(1, n_c * bs, Hkv, D)
+        L = int(seq_lens[b])
+        iota = jnp.arange(n_c * bs, dtype=jnp.int32)
+        o = _attn.blockwise_attention(
+            q[b][None, None], kg, vg, causal=True,
+            q_positions=jnp.asarray([L - 1], jnp.int32),
+            k_positions=jnp.where(iota < L, iota, -1),
+            scale=scale)
+        outs.append(o[0, 0])
+    return jnp.stack(outs)
+
+
 def rglru_scan_ref(a: jax.Array, x: jax.Array, s0: jax.Array):
     """Elementwise linear recurrence: s_t = a_t s_{t-1} + x_t.
 

@@ -263,6 +263,164 @@ def attention_prefill(params: dict, x: jax.Array, cfg, *, positions,
     return out, cache
 
 
+# ---------------------------------------------------------------------------
+# Paged attention layer — decode and chunked prefill through a block table
+# ---------------------------------------------------------------------------
+
+def _use_paged_kernel() -> bool:
+    """Pallas on TPU, XLA gather+``direct_attention`` elsewhere (the same
+    math; Pallas does not lower to the CPU backend). Overridable with
+    REPRO_PAGED_BACKEND=pallas|xla for kernel testing."""
+    import os
+    forced = os.environ.get("REPRO_PAGED_BACKEND", "auto")
+    if forced == "pallas":
+        return True
+    if forced == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _paged_attend(q: jax.Array, pool: "PagedKVCache", table: jax.Array,
+                  pos: jax.Array) -> jax.Array:
+    """Decode attention over pool blocks. q: (B, 1, Hq, D); table: (B, nc)
+    int32; pos: scalar absolute position of the (already written) query
+    token. Slot (c, o) of a row holds absolute position c*bs + o, so the
+    causal mask alone rejects every not-yet-written slot — including the
+    zero block behind padded table columns."""
+    B, _, Hq, D = q.shape
+    bs = pool.k.shape[-3]
+    nc = table.shape[1]
+    if _use_paged_kernel():
+        from repro.kernels.paged_attention import paged_attention
+        lens = jnp.broadcast_to(pos.astype(jnp.int32) + 1, (B,))
+        out = paged_attention(q[:, 0], pool.k, pool.v, table, lens)
+        return out[:, None]
+    kg = pool.k[table].reshape(B, nc * bs, *pool.k.shape[-2:])
+    vg = pool.v[table].reshape(B, nc * bs, *pool.v.shape[-2:])
+    return direct_attention(
+        q, kg, vg, causal=True,
+        q_positions=pos[None].astype(jnp.int32),
+        k_positions=jnp.arange(nc * bs, dtype=jnp.int32))
+
+
+def attention_decode_paged(params: dict, x: jax.Array, pool: "PagedKVCache",
+                           cfg, *, pos: jax.Array, positions,
+                           table: jax.Array):
+    """One-token decode writing/reading KV through the block table.
+
+    x: (B, 1, d); pool k/v: (n_blocks, bs, Hkv, D) shared across rows;
+    table: (B, nc) int32. The new K/V lands in block ``table[b, pos//bs]``
+    at offset ``pos % bs`` (pad rows' tables point that column at the
+    scratch block)."""
+    from repro.models.paged_cache import PagedKVCache
+    q, k, v = qkv_project(params, x, cfg)
+    if cfg.rope != "none":
+        q = layers.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
+        k = layers.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
+    bs = pool.k.shape[1]
+    col = (pos // bs).astype(jnp.int32)
+    off = (pos % bs).astype(jnp.int32)
+    bids = jax.lax.dynamic_index_in_dim(table, col, axis=1, keepdims=False)
+    k_new = pool.k.at[bids, off].set(k[:, 0].astype(pool.k.dtype))
+    v_new = pool.v.at[bids, off].set(v[:, 0].astype(pool.v.dtype))
+    new_pool = PagedKVCache(k_new, v_new)
+    out = _paged_attend(q, new_pool, table, pos)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, new_pool
+
+
+def attention_decode_paged_gathered(params: dict, x: jax.Array,
+                                    kg: jax.Array, vg: jax.Array, cfg, *,
+                                    pos: jax.Array, positions):
+    """One-token decode over *pre-gathered* paged KV (XLA fallback path).
+
+    kg/vg: (B, nc*bs, Hkv, D) — the row's table-gathered KV as of *before*
+    this step. Carrying whole pools through ``lax.scan`` double-buffers
+    them (a full pool copy per layer per step), so on the XLA path the
+    caller gathers once outside the scan and this layer only *reads*: the
+    fresh K/V is appended at attend time (its stale pool slot masked with
+    position -1, which ``_mask_bias`` always rejects) and returned so the
+    caller can scatter every layer's new row with one post-scan update."""
+    q, k, v = qkv_project(params, x, cfg)
+    if cfg.rope != "none":
+        q = layers.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
+        k = layers.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
+    k1 = k[:, 0].astype(kg.dtype)
+    v1 = v[:, 0].astype(vg.dtype)
+    iota = jnp.arange(kg.shape[1], dtype=jnp.int32)
+    kpos = jnp.where(iota == pos, jnp.int32(-1), iota)
+    out = direct_attention(
+        q, jnp.concatenate([kg, k1[:, None]], axis=1),
+        jnp.concatenate([vg, v1[:, None]], axis=1), causal=True,
+        q_positions=pos[None].astype(jnp.int32),
+        k_positions=jnp.concatenate([kpos, pos[None].astype(jnp.int32)]))
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, (k1, v1)
+
+
+def attention_prefill_chunk_paged_gathered(params: dict, x: jax.Array,
+                                           kg: jax.Array, vg: jax.Array,
+                                           cfg, *, start: jax.Array,
+                                           positions):
+    """One chunk of a paged prefill over pre-gathered KV (same pool-copy
+    avoidance as :func:`attention_decode_paged_gathered`). Gathered slots
+    at/after ``start`` are this chunk's own stale storage — masked with
+    position -1 — and the chunk's fresh K/V is appended at positions
+    ``start + [0, C)``; the caller scatters the returned chunk K/V into
+    the pools after the layer scan."""
+    q, k, v = qkv_project(params, x, cfg)
+    if cfg.rope != "none":
+        q = layers.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
+        k = layers.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
+    C = x.shape[1]
+    kc = k.astype(kg.dtype)
+    vc = v.astype(vg.dtype)
+    iota = jnp.arange(kg.shape[1], dtype=jnp.int32)
+    kpos = jnp.where(iota < start, iota, jnp.int32(-1))
+    qpos = (start + jnp.arange(C)).astype(jnp.int32)
+    out = direct_attention(
+        q, jnp.concatenate([kg, kc], axis=1),
+        jnp.concatenate([vg, vc], axis=1), causal=True,
+        q_positions=qpos, k_positions=jnp.concatenate([kpos, qpos]))
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, (kc, vc)
+
+
+def attention_prefill_chunk_paged(params: dict, x: jax.Array,
+                                  pool: "PagedKVCache", cfg, *,
+                                  start: jax.Array, positions,
+                                  table: jax.Array):
+    """One chunk of a paged prefill. x: (B, C, d) with C a multiple of the
+    block size and ``start`` (the chunk's first absolute position) a
+    block multiple; writes the chunk's C/bs blocks through the table and
+    attends causally over everything written so far. Chunk-padding tokens
+    past the prompt land at positions the causal mask hides from every
+    real query, and decode overwrites them before they become visible."""
+    from repro.models.paged_cache import PagedKVCache
+    q, k, v = qkv_project(params, x, cfg)
+    if cfg.rope != "none":
+        q = layers.apply_positional(cfg.rope, q, positions, cfg.rope_theta)
+        k = layers.apply_positional(cfg.rope, k, positions, cfg.rope_theta)
+    B, C = x.shape[0], x.shape[1]
+    bs = pool.k.shape[1]
+    nc = table.shape[1]
+    ncb = C // bs
+    c0 = (start // bs).astype(jnp.int32)
+    bids = jax.lax.dynamic_slice_in_dim(table, c0, ncb, axis=1)  # (B, ncb)
+    k_new = pool.k.at[bids].set(
+        k.reshape(B, ncb, bs, *k.shape[-2:]).astype(pool.k.dtype))
+    v_new = pool.v.at[bids].set(
+        v.reshape(B, ncb, bs, *v.shape[-2:]).astype(pool.v.dtype))
+    kg = k_new[table].reshape(B, nc * bs, *k_new.shape[-2:])
+    vg = v_new[table].reshape(B, nc * bs, *v_new.shape[-2:])
+    out = direct_attention(
+        q, kg, vg, causal=True,
+        q_positions=(start + jnp.arange(C)).astype(jnp.int32),
+        k_positions=jnp.arange(nc * bs, dtype=jnp.int32))
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, PagedKVCache(k_new, v_new)
+
+
 def init_attention_params(key, cfg, dtype) -> dict:
     d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 4)

@@ -156,6 +156,77 @@ def apply_block_prefill(kind: str, bp: dict, x: jax.Array, cfg, positions,
 # Decode path (single token)
 # ---------------------------------------------------------------------------
 
+def apply_block_decode_paged(bp: dict, x: jax.Array, pool, cfg,
+                             pos: jax.Array, positions, table: jax.Array
+                             ) -> Tuple[jax.Array, Any]:
+    """ATTN-only decode block over paged KV (``paged_compatible`` gates
+    the other kinds to the contiguous path)."""
+    h = layers.apply_norm(cfg.norm, bp["norm1"], x)
+    mix, pool = attention.attention_decode_paged(
+        bp["mixer"], h, pool, cfg, pos=pos, positions=positions, table=table)
+    x = x + mix
+    h = layers.apply_norm(cfg.norm, bp["norm2"], x)
+    if cfg.n_experts > 0:
+        ff, _ = moe.moe_ffn(bp["ffn"], h, cfg)
+    else:
+        ff = dense_ffn(bp["ffn"], h, cfg)
+    return x + ff, pool
+
+
+def apply_block_decode_paged_gathered(bp: dict, x: jax.Array,
+                                      kg: jax.Array, vg: jax.Array, cfg,
+                                      pos: jax.Array, positions
+                                      ) -> Tuple[jax.Array, Any]:
+    """Decode block over pre-gathered paged KV (the XLA path: pools stay
+    outside the layer scan; this returns the layer's new K/V row for one
+    post-scan scatter instead of a rewritten pool)."""
+    h = layers.apply_norm(cfg.norm, bp["norm1"], x)
+    mix, kv = attention.attention_decode_paged_gathered(
+        bp["mixer"], h, kg, vg, cfg, pos=pos, positions=positions)
+    x = x + mix
+    h = layers.apply_norm(cfg.norm, bp["norm2"], x)
+    if cfg.n_experts > 0:
+        ff, _ = moe.moe_ffn(bp["ffn"], h, cfg)
+    else:
+        ff = dense_ffn(bp["ffn"], h, cfg)
+    return x + ff, kv
+
+
+def apply_block_chunk_paged_gathered(bp: dict, x: jax.Array,
+                                     kg: jax.Array, vg: jax.Array, cfg,
+                                     start: jax.Array, positions
+                                     ) -> Tuple[jax.Array, Any]:
+    """Chunked-prefill block over pre-gathered paged KV (returns the
+    chunk's K/V for the caller's post-scan scatter)."""
+    h = layers.apply_norm(cfg.norm, bp["norm1"], x)
+    mix, kv = attention.attention_prefill_chunk_paged_gathered(
+        bp["mixer"], h, kg, vg, cfg, start=start, positions=positions)
+    x = x + mix
+    h = layers.apply_norm(cfg.norm, bp["norm2"], x)
+    if cfg.n_experts > 0:
+        ff, _ = moe.moe_ffn(bp["ffn"], h, cfg)
+    else:
+        ff = dense_ffn(bp["ffn"], h, cfg)
+    return x + ff, kv
+
+
+def apply_block_chunk_paged(bp: dict, x: jax.Array, pool, cfg,
+                            start: jax.Array, positions, table: jax.Array
+                            ) -> Tuple[jax.Array, Any]:
+    """ATTN-only chunked-prefill block over paged KV."""
+    h = layers.apply_norm(cfg.norm, bp["norm1"], x)
+    mix, pool = attention.attention_prefill_chunk_paged(
+        bp["mixer"], h, pool, cfg, start=start, positions=positions,
+        table=table)
+    x = x + mix
+    h = layers.apply_norm(cfg.norm, bp["norm2"], x)
+    if cfg.n_experts > 0:
+        ff, _ = moe.moe_ffn(bp["ffn"], h, cfg)
+    else:
+        ff = dense_ffn(bp["ffn"], h, cfg)
+    return x + ff, pool
+
+
 def apply_block_decode(kind: str, bp: dict, x: jax.Array, cache, cfg,
                        pos: jax.Array, positions) -> Tuple[jax.Array, Any]:
     h = layers.apply_norm(cfg.norm, bp["norm1"], x)

@@ -440,6 +440,191 @@ class Model:
         logits = self.unembed(params, x)
         return logits, {"stack": new_stack, "tail": new_tail, "pos": pos + 1}
 
+    # -- paged decode / chunked prefill (block-table KV) --------------------
+
+    def decode_step_paged(self, params, token: jax.Array, pools: Dict[str, Any],
+                          table: jax.Array, pos: jax.Array
+                          ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One decode step over block pools from ``init_paged_pools``.
+
+        token: (B, 1) int32; table: (B, nc) int32 block table shared by
+        every layer; pos: scalar int32 absolute position. Position state
+        lives on the host (the slot group), not in the cache pytree.
+
+        Two lowerings of the same math: the Pallas path writes then
+        attends inside the layer scan (the kernel reads through the
+        table, and TPU scans don't pay for the pool carry); the XLA path
+        gathers every layer's KV through the table *before* the scan and
+        scatters the new rows *after* it, because a ``lax.scan``-carried
+        pool is double-buffered — a full pool copy per layer per step."""
+        from repro.models.attention import _use_paged_kernel
+        from repro.models.paged_cache import PagedKVCache
+        cfg = self.cfg
+        positions = decode_positions(cfg, pos)
+        if token.ndim == 2:
+            x = self.embed(params, token)
+        else:
+            x = token.astype(_dtype_of(cfg))
+
+        if _use_paged_kernel():
+            new_stack: Dict[str, Any] = {}
+            if self.n_periods > 0:
+                def body(x, inp):
+                    p_params, p_pool = inp
+                    new_p = {}
+                    for p, _ in enumerate(self.pattern):
+                        bp = self.gather_fn(p_params[f"pos{p}"])
+                        x, c = blocks.apply_block_decode_paged(
+                            bp, x, p_pool[f"pos{p}"], cfg, pos, positions,
+                            table)
+                        new_p[f"pos{p}"] = c
+                    return x, new_p
+                x, new_stack = jax.lax.scan(
+                    body, x, (params["stack"], pools["stack"]))
+
+            new_tail: Dict[str, Any] = {}
+            for i, _ in enumerate(self.tail_kinds):
+                x, c = blocks.apply_block_decode_paged(
+                    params["tail"][str(i)], x, pools["tail"][str(i)], cfg,
+                    pos, positions, table)
+                new_tail[str(i)] = c
+
+            x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+            logits = self.unembed(params, x)
+            return logits, {"stack": new_stack, "tail": new_tail}
+
+        B = table.shape[0]
+        some_pool = (next(iter(pools["stack"].values())) if pools["stack"]
+                     else next(iter(pools["tail"].values())))
+        bs = some_pool.k.shape[-3]
+        col = (pos // bs).astype(jnp.int32)
+        off = (pos % bs).astype(jnp.int32)
+        bids = jax.lax.dynamic_index_in_dim(table, col, axis=1,
+                                            keepdims=False)  # (B,)
+
+        new_stack = {}
+        if self.n_periods > 0:
+            gathered = {}
+            for p, _ in enumerate(self.pattern):
+                pc = pools["stack"][f"pos{p}"]
+                kg = pc.k[:, table]  # (n_p, B, nc, bs, Hkv, D)
+                vg = pc.v[:, table]
+                gathered[f"pos{p}"] = (
+                    kg.reshape(kg.shape[0], B, -1, *pc.k.shape[-2:]),
+                    vg.reshape(vg.shape[0], B, -1, *pc.v.shape[-2:]))
+
+            def body(x, inp):
+                p_params, p_g = inp
+                kvs = {}
+                for p, _ in enumerate(self.pattern):
+                    bp = self.gather_fn(p_params[f"pos{p}"])
+                    kg, vg = p_g[f"pos{p}"]
+                    x, kv = blocks.apply_block_decode_paged_gathered(
+                        bp, x, kg, vg, cfg, pos, positions)
+                    kvs[f"pos{p}"] = kv
+                return x, kvs
+            x, kvs = jax.lax.scan(body, x, (params["stack"], gathered))
+            for p, _ in enumerate(self.pattern):
+                pc = pools["stack"][f"pos{p}"]
+                k1, v1 = kvs[f"pos{p}"]  # (n_p, B, Hkv, D)
+                new_stack[f"pos{p}"] = PagedKVCache(
+                    k=pc.k.at[:, bids, off].set(k1),
+                    v=pc.v.at[:, bids, off].set(v1))
+
+        new_tail = {}
+        for i, _ in enumerate(self.tail_kinds):
+            pc = pools["tail"][str(i)]
+            kg = pc.k[table].reshape(B, -1, *pc.k.shape[-2:])
+            vg = pc.v[table].reshape(B, -1, *pc.v.shape[-2:])
+            x, (k1, v1) = blocks.apply_block_decode_paged_gathered(
+                params["tail"][str(i)], x, kg, vg, cfg, pos, positions)
+            new_tail[str(i)] = PagedKVCache(k=pc.k.at[bids, off].set(k1),
+                                            v=pc.v.at[bids, off].set(v1))
+
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = self.unembed(params, x)
+        return logits, {"stack": new_stack, "tail": new_tail}
+
+    def prefill_chunk_paged(self, params, tokens: jax.Array,
+                            pools: Dict[str, Any], table: jax.Array,
+                            start: jax.Array, last_index: jax.Array
+                            ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One fixed-size chunk of a paged prefill.
+
+        tokens: (B, C) int32 (chunk-padded past the prompt); start: scalar
+        block-multiple absolute position of the chunk; last_index: index
+        *within the chunk* whose logits to return (the prompt's final
+        token on the last chunk — meaningless earlier, cheap either way).
+        Text-only (no mrope / frontends — the engine enforces this).
+
+        Like the XLA decode path, KV is gathered through the table before
+        the layer scan and the chunk's blocks are scattered after it, so
+        the pools never ride the scan carry (which would double-buffer a
+        full pool copy per layer per chunk)."""
+        from repro.models.paged_cache import PagedKVCache
+        cfg = self.cfg
+        B, C = tokens.shape
+        positions = (start + jnp.arange(C)).astype(jnp.int32)
+        x = self.embed(params, tokens)
+
+        some_pool = (next(iter(pools["stack"].values())) if pools["stack"]
+                     else next(iter(pools["tail"].values())))
+        bs = some_pool.k.shape[-3]
+        ncb = C // bs
+        c0 = (start // bs).astype(jnp.int32)
+        bids = jax.lax.dynamic_slice_in_dim(table, c0, ncb, axis=1)  # (B,ncb)
+
+        new_stack: Dict[str, Any] = {}
+        if self.n_periods > 0:
+            gathered = {}
+            for p, _ in enumerate(self.pattern):
+                pc = pools["stack"][f"pos{p}"]
+                kg = pc.k[:, table]
+                vg = pc.v[:, table]
+                gathered[f"pos{p}"] = (
+                    kg.reshape(kg.shape[0], B, -1, *pc.k.shape[-2:]),
+                    vg.reshape(vg.shape[0], B, -1, *pc.v.shape[-2:]))
+
+            def body(x, inp):
+                p_params, p_g = inp
+                kvs = {}
+                for p, _ in enumerate(self.pattern):
+                    bp = self.gather_fn(p_params[f"pos{p}"])
+                    kg, vg = p_g[f"pos{p}"]
+                    x, kv = blocks.apply_block_chunk_paged_gathered(
+                        bp, x, kg, vg, cfg, start, positions)
+                    kvs[f"pos{p}"] = kv
+                return self.shard_fn(x), kvs
+            x, kvs = jax.lax.scan(body, x, (params["stack"], gathered))
+            for p, _ in enumerate(self.pattern):
+                pc = pools["stack"][f"pos{p}"]
+                kc, vc = kvs[f"pos{p}"]  # (n_p, B, C, Hkv, D)
+                n_p = kc.shape[0]
+                new_stack[f"pos{p}"] = PagedKVCache(
+                    k=pc.k.at[:, bids].set(
+                        kc.reshape(n_p, B, ncb, bs, *pc.k.shape[-2:])),
+                    v=pc.v.at[:, bids].set(
+                        vc.reshape(n_p, B, ncb, bs, *pc.v.shape[-2:])))
+
+        new_tail: Dict[str, Any] = {}
+        for i, _ in enumerate(self.tail_kinds):
+            pc = pools["tail"][str(i)]
+            kg = pc.k[table].reshape(B, -1, *pc.k.shape[-2:])
+            vg = pc.v[table].reshape(B, -1, *pc.v.shape[-2:])
+            x, (kc, vc) = blocks.apply_block_chunk_paged_gathered(
+                params["tail"][str(i)], x, kg, vg, cfg, start, positions)
+            new_tail[str(i)] = PagedKVCache(
+                k=pc.k.at[bids].set(
+                    kc.reshape(B, ncb, bs, *pc.k.shape[-2:])),
+                v=pc.v.at[bids].set(
+                    vc.reshape(B, ncb, bs, *pc.v.shape[-2:])))
+
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        xi = jax.lax.dynamic_index_in_dim(x, last_index, axis=1,
+                                          keepdims=True)
+        logits = self.unembed(params, xi)
+        return logits, {"stack": new_stack, "tail": new_tail}
+
 
 # ---------------------------------------------------------------------------
 # Chunked cross-entropy (never materializes full (B, S, V) logits)

@@ -1,0 +1,214 @@
+"""Block-paged KV storage for the serving engine (vLLM-style).
+
+The contiguous serve path gives every decode slot a private
+``(max_seq, n_kv, head_dim)`` cache per layer, so admission copies the
+prefill cache in, compaction physically gathers rows, and short requests
+pay for ``max_seq`` keys on every decode step. This module replaces that
+with an indirection the attention kernel reads through:
+
+* one shared **pool** of fixed-size blocks per attention stack — block
+  ``b`` of every layer belongs to the same logical block, so a single
+  per-slot **block table** (host-side ``(width, n_cols)`` int32) covers
+  the whole model;
+* admission/refill/compaction rewrite the table (pointer moves +
+  refcount updates) instead of gathering cache rows;
+* requests with a common prompt head share their full prefix blocks
+  copy-on-write: blocks are refcounted, freed at zero, and the *frontier*
+  (partially filled) block is always private per row — so the "write"
+  half of copy-on-write never has to copy.
+
+Two block ids are reserved pool-wide:
+
+``ZERO_BLOCK`` (0)
+    never written; padded table columns point here so a power-of-two
+    padded device table stays valid (reads are masked by position).
+``SCRATCH_BLOCK`` (1)
+    the pad-row sink: rows left behind by power-of-two compaction still
+    execute the decode kernel, and their writes land here (reads of the
+    resulting garbage are discarded with the pad row's output).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Dict, Hashable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN
+
+#: ids below this are never allocated: 0 = zero/dummy, 1 = pad scratch
+RESERVED_BLOCKS = 2
+ZERO_BLOCK = 0
+SCRATCH_BLOCK = 1
+
+
+class PagedKVCache(NamedTuple):
+    """One attention stack's block pool.
+
+    k, v: ``(n_blocks, block_size, n_kv, head_dim)`` — or with a leading
+    ``n_periods`` axis for scanned (stacked) layers. Block ``b`` holds
+    ``block_size`` consecutive token positions of whichever row the block
+    table maps to it; absolute positions are implicit (column ``c``,
+    offset ``o`` is position ``c * block_size + o``)."""
+
+    k: jax.Array
+    v: jax.Array
+
+
+class BlockAllocator:
+    """Host-side free list + refcounts + prefix-share registry.
+
+    The registry maps a hashable prefix key to a block id so cohorts with
+    a common prompt head reuse blocks instead of recomputing/storing
+    them; ``decref`` to zero returns the block to the free list and
+    unpublishes it. Purely host-side bookkeeping — device pools are only
+    ever *indexed* by the ids this hands out."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks <= RESERVED_BLOCKS:
+            raise ValueError(f"need more than {RESERVED_BLOCKS} blocks "
+                             f"(got {n_blocks}); ids 0/1 are reserved")
+        self.n_blocks = n_blocks
+        self._free: deque = deque(range(RESERVED_BLOCKS, n_blocks))
+        self._ref = np.zeros(n_blocks, np.int64)
+        self._registry: Dict[Hashable, int] = {}
+        self._block_key: Dict[int, Hashable] = {}
+        self.peak_blocks = 0
+        self.shared_hits = 0
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - RESERVED_BLOCKS - len(self._free)
+
+    @property
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        """A fresh private block (refcount 1)."""
+        if not self._free:
+            raise RuntimeError(
+                f"KV block pool exhausted ({self.n_blocks} blocks); size "
+                f"the engine's pool for max_batch x ceil(max_seq/page_size)")
+        bid = self._free.popleft()
+        self._ref[bid] = 1
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+        return bid
+
+    def incref(self, bid: int, *, shared: bool = False) -> None:
+        """Add a reference. ``shared=True`` also counts a shared hit —
+        intra-cohort dedup increfs directly (no registry round-trip) but
+        is prefix sharing all the same."""
+        self._ref[bid] += 1
+        if shared:
+            self.shared_hits += 1
+
+    def decref(self, bid: int) -> None:
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            key = self._block_key.pop(bid, None)
+            if key is not None:
+                self._registry.pop(key, None)
+            self._free.append(bid)
+        elif self._ref[bid] < 0:
+            raise RuntimeError(f"block {bid} decref'd below zero")
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    def share(self, key: Hashable) -> Optional[int]:
+        """Reuse the block published under ``key``: bumps its refcount
+        and the shared-hit counter. None when nothing is published."""
+        bid = self._registry.get(key)
+        if bid is None:
+            return None
+        self._ref[bid] += 1
+        self.shared_hits += 1
+        return bid
+
+    def publish(self, key: Hashable, bid: int) -> None:
+        """Make ``bid`` reusable by later cohorts under ``key`` (the
+        registry holds no refcount of its own — the entry dies with the
+        block's last reference)."""
+        self._registry[key] = bid
+        self._block_key[bid] = key
+
+    def reset_stats(self) -> None:
+        """Restart peak/shared accounting from the current occupancy
+        (benchmarks call this between a warmup drain and a timed one)."""
+        self.peak_blocks = self.blocks_in_use
+        self.shared_hits = 0
+
+
+def paged_compatible(cfg) -> bool:
+    """Whether this model can serve from paged KV: every mixer is global
+    causal attention (recurrent states and rolling sliding-window caches
+    have no block-table analogue here — those configs keep the
+    contiguous layout)."""
+    return (all(k == ATTN for k in cfg.layer_kinds())
+            and cfg.sliding_window == 0 and cfg.causal)
+
+
+def init_paged_pools(model, n_blocks: int, block_size: int
+                     ) -> Dict[str, Any]:
+    """Zeroed block pools shaped like the model's cache pytree: one
+    :class:`PagedKVCache` per scanned pattern position (leading
+    ``n_periods`` axis, so ``lax.scan`` can carry it) plus one per tail
+    layer. Block ``b`` in every pool belongs to the same logical block."""
+    cfg = model.cfg
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+
+    def pool(lead=()):
+        # distinct zero buffers: the engine donates the pools into jitted
+        # steps, and aliased k/v would be the same donated buffer twice
+        return PagedKVCache(k=jnp.zeros(lead + shape, dtype),
+                            v=jnp.zeros(lead + shape, dtype))
+
+    stack: Dict[str, Any] = {}
+    if model.n_periods > 0:
+        for p, _ in enumerate(model.pattern):
+            stack[f"pos{p}"] = pool((model.n_periods,))
+    tail = {str(i): pool() for i, _ in enumerate(model.tail_kinds)}
+    return {"stack": stack, "tail": tail}
+
+
+def scatter_prefill_blocks(pools: Dict[str, Any], caches: Dict[str, Any],
+                           rows: Sequence[int], cols: Sequence[int],
+                           bids: Sequence[int], *, block_size: int
+                           ) -> Dict[str, Any]:
+    """Copy whole blocks out of a dense prefill cache into the pools.
+
+    ``caches`` comes from ``Model.prefill`` run at a block-multiple cache
+    length; entry ``m`` copies block ``cols[m]`` of prefill row
+    ``rows[m]`` into pool block ``bids[m]`` — in every layer at once
+    (one block table serves the whole model). Shared (registry-hit)
+    blocks simply don't appear in the worklist."""
+    if not len(bids):
+        return pools
+    rows = jnp.asarray(rows, jnp.int32)
+    cols = jnp.asarray(cols, jnp.int32)
+    bids = jnp.asarray(bids, jnp.int32)
+    bs = block_size
+
+    new_stack: Dict[str, Any] = {}
+    for name, pc in pools["stack"].items():
+        cc = caches["stack"][name]
+        n_p, U, S, H, D = cc.k.shape
+        kb = cc.k.reshape(n_p, U, S // bs, bs, H, D)
+        vb = cc.v.reshape(n_p, U, S // bs, bs, H, D)
+        new_stack[name] = PagedKVCache(
+            k=pc.k.at[:, bids].set(kb[:, rows, cols].astype(pc.k.dtype)),
+            v=pc.v.at[:, bids].set(vb[:, rows, cols].astype(pc.v.dtype)))
+    new_tail: Dict[str, Any] = {}
+    for name, pc in pools["tail"].items():
+        cc = caches["tail"][name]
+        U, S, H, D = cc.k.shape
+        kb = cc.k.reshape(U, S // bs, bs, H, D)
+        vb = cc.v.reshape(U, S // bs, bs, H, D)
+        new_tail[name] = PagedKVCache(
+            k=pc.k.at[bids].set(kb[rows, cols].astype(pc.k.dtype)),
+            v=pc.v.at[bids].set(vb[rows, cols].astype(pc.v.dtype)))
+    return {"stack": new_stack, "tail": new_tail}

@@ -1,10 +1,11 @@
 from repro.serve.engine import Engine, Request, ServeEngine
 from repro.serve.fleet import ReplicaSupervisor, RetryPolicy, RouteError
 from repro.serve.router import ArtifactCatalog, CatalogEntry, Router
-from repro.serve.scheduler import Scheduler, SchedulerConfig, SlotGroup
+from repro.serve.scheduler import (PagedSlotGroup, Scheduler,
+                                   SchedulerConfig, SlotGroup)
 from repro.serve.autopilot import Autopilot, AutopilotConfig, replan_from
 
 __all__ = ["ArtifactCatalog", "Autopilot", "AutopilotConfig",
-           "CatalogEntry", "Engine", "ReplicaSupervisor", "Request",
-           "RetryPolicy", "RouteError", "Router", "Scheduler",
+           "CatalogEntry", "Engine", "PagedSlotGroup", "ReplicaSupervisor",
+           "Request", "RetryPolicy", "RouteError", "Router", "Scheduler",
            "SchedulerConfig", "ServeEngine", "SlotGroup", "replan_from"]

@@ -36,10 +36,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN, LOCAL_ATTN, ModelConfig
 from repro.core.oracle import MeasurementLog
 from repro.models.model import Model
-from repro.serve.scheduler import Scheduler, SchedulerConfig, SlotGroup
+from repro.models.paged_cache import (RESERVED_BLOCKS, SCRATCH_BLOCK,
+                                      BlockAllocator, init_paged_pools,
+                                      paged_compatible,
+                                      scatter_prefill_blocks)
+from repro.serve.scheduler import (PagedSlotGroup, Scheduler,
+                                   SchedulerConfig, SlotGroup)
 from repro.util.faults import FaultInjector, StragglerMonitor
 
 
@@ -101,7 +106,8 @@ class ServeEngine:
                  measurement_tag: Optional[str] = None,
                  faults: Optional[FaultInjector] = None,
                  fault_tag: Optional[str] = None,
-                 straggler: Optional[StragglerMonitor] = None):
+                 straggler: Optional[StragglerMonitor] = None,
+                 kv_pool_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.model = Model(cfg)
@@ -112,9 +118,19 @@ class ServeEngine:
             scheduler = SchedulerConfig()
         elif isinstance(scheduler, str):
             scheduler = SchedulerConfig(policy=scheduler)
-        if scheduler.policy == "wave" and scheduler.compact != "off":
-            # the legacy baseline steps every slot to the wave's end
-            scheduler = dataclasses.replace(scheduler, compact="off")
+        if scheduler.policy == "wave" and (scheduler.compact != "off"
+                                          or scheduler.kv_layout != "contiguous"):
+            # the legacy baseline verbatim: no compaction, contiguous KV
+            scheduler = dataclasses.replace(scheduler, compact="off",
+                                            kv_layout="contiguous",
+                                            prefill_chunk=0)
+        if scheduler.kv_layout == "paged" and not paged_compatible(cfg):
+            # recurrent mixers / sliding windows have no block-table
+            # analogue here — serve them from the contiguous layout
+            scheduler = dataclasses.replace(scheduler,
+                                            kv_layout="contiguous",
+                                            prefill_chunk=0)
+        self.kv_layout = scheduler.kv_layout
         self.scheduler = Scheduler(scheduler)
         self.groups: List[SlotGroup] = []
         self.done: List[Request] = []
@@ -133,6 +149,40 @@ class ServeEngine:
         self.faults = faults
         self.fault_tag = fault_tag or self.measurement_tag
         self.straggler = straggler
+        # physically copied cache rows (engine-owned; every SlotGroup's
+        # compact() increments it — the paged layout's zero-copy gate)
+        self._copy_counter = {"rows": 0}
+        # peak-KV accounting: bytes one token position costs across every
+        # attention layer's K+V
+        n_attn = sum(1 for k in cfg.layer_kinds() if k in (ATTN, LOCAL_ATTN))
+        self._kv_row_bytes = (n_attn * 2 * cfg.n_kv_heads * cfg.head_dim
+                              * jnp.dtype(cfg.dtype).itemsize)
+        self._live_kv_slots = 0   # contiguous: currently allocated slots
+        self._peak_kv_slots = 0
+        self.kv_allocator: Optional[BlockAllocator] = None
+        if self.kv_layout == "paged":
+            sc = self.scheduler.config
+            if sc.prefill_chunk and (cfg.rope == "mrope"
+                                     or cfg.frontend != "none"):
+                raise ValueError(
+                    "prefill_chunk requires a text-only rope model (mrope "
+                    "positions and frontend inputs are not chunkable)")
+            bs = sc.page_size
+            n_blocks = kv_pool_blocks if kv_pool_blocks is not None else \
+                RESERVED_BLOCKS + max_batch * (-(-max_seq // bs))
+            self.kv_allocator = BlockAllocator(n_blocks)
+            self._pools = init_paged_pools(self.model, n_blocks, bs)
+            # donate the pools: the in-place block writes then update the
+            # buffers directly instead of copying the whole pool per step
+            self._decode_paged = jax.jit(self.model.decode_step_paged,
+                                         donate_argnums=2)
+            self._chunk_step = jax.jit(self.model.prefill_chunk_paged,
+                                       donate_argnums=2)
+            # prefill padded to the cohort's block multiple, not max_seq —
+            # short prompts don't pay full-length attention at admission
+            self._prefill_padded = jax.jit(
+                lambda p, b, ms: self.model.prefill(p, b, ms),
+                static_argnums=2)
         self.reset_stats()
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
@@ -282,6 +332,8 @@ class ServeEngine:
     def _admit(self, reqs: List[Request]) -> SlotGroup:
         if self.faults is not None:
             self.faults.fire("prefill", self.fault_tag)
+        if self.kv_layout == "paged":
+            return self._admit_paged(reqs)
         plen = len(reqs[0].prompt)
         toks = np.zeros((len(reqs), plen), np.int32)
         for i, r in enumerate(reqs):
@@ -295,23 +347,173 @@ class ServeEngine:
         for i, r in enumerate(reqs):
             r.output.append(int(cur[i, 0]))
         self._prefills += 1
+        self._prefill_tokens += len(reqs) * plen
+        self._live_kv_slots += len(reqs) * self.max_seq
+        self._peak_kv_slots = max(self._peak_kv_slots, self._live_kv_slots)
         group = SlotGroup(reqs, caches, cur, plen)
+        group.copy_counter = self._copy_counter
         self.groups.append(group)
         self._retire(group)
+        return group
+
+    def _admit_paged(self, reqs: List[Request]) -> SlotGroup:
+        """Paged admission: prefill each *distinct* prompt once at the
+        cohort's block-padded length, scatter whole KV blocks into the
+        pools, and point every row's block table at them — full prefix
+        blocks shared (refcounted) across identical prompt heads, the
+        partial frontier block always private per row."""
+        sc = self.scheduler.config
+        bs = sc.page_size
+        plen = len(reqs[0].prompt)
+        if sc.prefill_chunk and plen > sc.prefill_chunk:
+            return self._admit_chunked(reqs)
+        W = len(reqs)
+        alloc = self.kv_allocator
+        prompts = [np.asarray(r.prompt, np.int32) for r in reqs]
+        share = sc.share_prefix
+        if share:
+            # whole-prompt dedup within the cohort: prefill unique rows
+            # only, fan the last-token logits back out per request
+            uniq: Dict[bytes, int] = {}
+            u_prompts: List[np.ndarray] = []
+            row_to_u: List[int] = []
+            for p in prompts:
+                kb = p.tobytes()
+                if kb not in uniq:
+                    uniq[kb] = len(u_prompts)
+                    u_prompts.append(p)
+                row_to_u.append(uniq[kb])
+        else:
+            u_prompts, row_to_u = prompts, list(range(W))
+        U = len(u_prompts)
+        padded = -(-plen // bs) * bs
+        ncb = padded // bs
+        # tokens stay at plen (logits come from the true last position);
+        # only the returned cache is block-padded — its slots past plen
+        # hold garbage at absolute positions the causal mask hides until
+        # decode overwrites them
+        logits_u, caches = self._prefill_padded(
+            self.params, {"tokens": jnp.asarray(np.stack(u_prompts))},
+            padded)
+
+        # block tables: one canonical table per unique prompt, built
+        # column by column against the share registry; later rows with
+        # the same prompt incref the full columns and get a private
+        # frontier block (scattered from the same prefill row)
+        rows_s: List[int] = []   # scatter worklist into the U prefill rows
+        cols_s: List[int] = []
+        bids_s: List[int] = []
+        u_tables = np.zeros((U, ncb), np.int32)
+        for u, p in enumerate(u_prompts):
+            for j in range(ncb):
+                full = (j + 1) * bs <= plen
+                bid = None
+                if share and full:
+                    # plen and U are part of the key: k/v bits can differ
+                    # across padded lengths / batch widths, and a shared
+                    # block must be byte-for-byte one computation
+                    key = (plen, U, p[:(j + 1) * bs].tobytes())
+                    bid = alloc.share(key)
+                    if bid is None:
+                        bid = alloc.alloc()
+                        alloc.publish(key, bid)
+                        rows_s.append(u); cols_s.append(j); bids_s.append(bid)
+                else:
+                    bid = alloc.alloc()
+                    rows_s.append(u); cols_s.append(j); bids_s.append(bid)
+                u_tables[u, j] = bid
+        table = np.zeros((W, ncb), np.int32)
+        seen_u: Dict[int, int] = {}
+        frontier = ncb - 1 if plen % bs else None
+        for i in range(W):
+            u = row_to_u[i]
+            if u not in seen_u:
+                seen_u[u] = i
+                table[i] = u_tables[u]
+                continue
+            for j in range(ncb):
+                if j == frontier:
+                    bid = alloc.alloc()   # private frontier per duplicate
+                    rows_s.append(u); cols_s.append(j); bids_s.append(bid)
+                else:
+                    bid = int(u_tables[u, j])
+                    alloc.incref(bid, shared=True)
+                table[i, j] = bid
+        self._pools = scatter_prefill_blocks(
+            self._pools, caches, rows_s, cols_s, bids_s, block_size=bs)
+
+        t_first = time.time()
+        for r in reqs:
+            r.t_first_token = t_first
+        logits = logits_u if U == W else jnp.take(
+            logits_u, jnp.asarray(row_to_u, jnp.int32), axis=0)
+        cur = self._sample(logits, reqs)
+        for i, r in enumerate(reqs):
+            r.output.append(int(cur[i, 0]))
+        self._prefills += 1
+        self._prefill_tokens += U * plen
+        group = PagedSlotGroup(reqs, table, cur, plen, allocator=alloc,
+                               block_size=bs, pos=plen)
+        group.copy_counter = self._copy_counter
+        self.groups.append(group)
+        self._retire(group)
+        return group
+
+    def _admit_chunked(self, reqs: List[Request]) -> SlotGroup:
+        """Admit a long-prompt cohort for chunked prefill: allocate its
+        real blocks (chunk-padding columns point at the scratch block)
+        and let ``_decode_tick`` advance one chunk per tick, interleaved
+        with other groups' decode steps. The first token is sampled when
+        the last chunk lands. Chunked cohorts skip the share registry."""
+        sc = self.scheduler.config
+        bs, C = sc.page_size, sc.prefill_chunk
+        W = len(reqs)
+        plen = len(reqs[0].prompt)
+        alloc = self.kv_allocator
+        n_chunks = -(-plen // C)
+        total_cols = n_chunks * C // bs
+        ncb_real = -(-plen // bs)
+        table = np.full((W, total_cols), SCRATCH_BLOCK, np.int32)
+        for i in range(W):
+            for j in range(ncb_real):
+                table[i, j] = alloc.alloc()
+        prompt_padded = np.zeros((W, n_chunks * C), np.int32)
+        for i, r in enumerate(reqs):
+            prompt_padded[i, :plen] = r.prompt
+        group = PagedSlotGroup(reqs, table, None, plen, allocator=alloc,
+                               block_size=bs, pos=plen)
+        group.n_chunks = n_chunks
+        group.prompt_padded = prompt_padded
+        group.copy_counter = self._copy_counter
+        self._prefills += 1
+        self.groups.append(group)
         return group
 
     def _decode_tick(self) -> int:
         new_tokens = 0
         self._ticks += 1
         for group in list(self.groups):
+            if isinstance(group, PagedSlotGroup) and group.prefilling:
+                self._chunk_tick(group)
+                continue
             t0 = time.perf_counter()
             if self.faults is not None:
                 # inside the timed region: a delay spec shows up as a
                 # slow step (the straggler monitor must see it), a crash
                 # spec kills the tick with the group state untouched
                 self.faults.fire("decode", self.fault_tag)
-            logits, group.caches = self._decode(self.params, group.cur,
-                                                group.caches)
+            if isinstance(group, PagedSlotGroup):
+                if group.pos % group.block_size == 0:
+                    # decode is about to cross into a new block-table
+                    # column (prefill filled columns 0..ceil(plen/bs)-1)
+                    group.ensure_frontier()
+                logits, self._pools = self._decode_paged(
+                    self.params, group.cur, self._pools,
+                    group.device_table(), jnp.int32(group.pos))
+                group.pos += 1
+            else:
+                logits, group.caches = self._decode(self.params, group.cur,
+                                                    group.caches)
             jax.block_until_ready(logits)
             dt = time.perf_counter() - t0
             if self.straggler is not None:
@@ -331,6 +533,32 @@ class ServeEngine:
             self._retire(group)
         return new_tokens
 
+    def _chunk_tick(self, group: PagedSlotGroup) -> None:
+        """Advance one prefill chunk of a chunked-admission group (no
+        fault point: chunk work belongs to the admission's prefill)."""
+        C = self.scheduler.config.prefill_chunk
+        c = group.chunks_done
+        start = c * C
+        toks = jnp.asarray(group.prompt_padded[:, start:start + C])
+        last = min(group.plen - 1 - start, C - 1)
+        logits, self._pools = self._chunk_step(
+            self.params, toks, self._pools, group.device_table(),
+            jnp.int32(start), jnp.int32(last))
+        jax.block_until_ready(logits)
+        group.chunks_done += 1
+        self._chunk_steps += 1
+        self._prefill_tokens += group.width * C
+        if not group.prefilling:
+            t_first = time.time()
+            for r in group.requests:
+                if r is not None:
+                    r.t_first_token = t_first
+            group.cur = self._sample(logits, group.requests)
+            for i, r in enumerate(group.requests):
+                if r is not None:
+                    r.output.append(int(group.cur[i, 0]))
+            self._retire(group)
+
     def _retire(self, group: SlotGroup) -> None:
         """Move finished requests out of their rows, drop the group when
         empty, and compact the surviving rows (freed slots return to the
@@ -343,8 +571,14 @@ class ServeEngine:
                 group.requests[i] = None
         if all(r is None for r in group.requests):
             self.groups.remove(group)
+            if isinstance(group, PagedSlotGroup):
+                group.release()   # refcounts drop; orphaned blocks free
+            else:
+                self._live_kv_slots -= group.width * self.max_seq
             return
-        group.compact(self.scheduler.config.compact)
+        freed = group.compact(self.scheduler.config.compact)
+        if freed and not isinstance(group, PagedSlotGroup):
+            self._live_kv_slots -= freed * self.max_seq
 
     def _sample(self, logits: jax.Array,
                 rows: List[Optional[Request]]) -> jax.Array:
@@ -373,6 +607,15 @@ class ServeEngine:
         self._step_times: List[float] = []
         self._step_widths: List[int] = []
         self._wall_s = 0.0
+        self._prefill_tokens = 0
+        self._chunk_steps = 0
+        self._copy_counter["rows"] = 0
+        self._peak_kv_slots = self._live_kv_slots
+        if self.kv_allocator is not None:
+            self.kv_allocator.reset_stats()
+        if self.straggler is not None:
+            # post-swap stats must not inherit pre-swap medians
+            self.straggler.reset()
 
     def record_measurements(self, log: Optional[MeasurementLog] = None
                             ) -> Optional[str]:
@@ -447,6 +690,25 @@ class ServeEngine:
             "measured_step_s": self._decode_wall_s / self._decode_steps
             if self._decode_steps else 0.0,
             "predicted_step_s": self.predicted_step_s,
+            # KV storage accounting. kv_row_copies counts physically
+            # gathered cache rows (paged compaction rewrites tables, so
+            # it stays 0 there); peak_kv_bytes is the peak *used* KV —
+            # block-granular for paged, width x max_seq for contiguous
+            "kv_layout": self.kv_layout,
+            "kv_row_copies": self._copy_counter["rows"],
+            "prefill_tokens": self._prefill_tokens,
+            "chunk_steps": self._chunk_steps,
+            "kv_blocks_peak": (self.kv_allocator.peak_blocks
+                               if self.kv_allocator is not None else 0),
+            "kv_blocks_in_use": (self.kv_allocator.blocks_in_use
+                                 if self.kv_allocator is not None else 0),
+            "kv_shared_blocks": (self.kv_allocator.shared_hits
+                                 if self.kv_allocator is not None else 0),
+            "peak_kv_bytes": (
+                self.kv_allocator.peak_blocks
+                * self.scheduler.config.page_size * self._kv_row_bytes
+                if self.kv_layout == "paged"
+                else self._peak_kv_slots * self._kv_row_bytes),
         }
         if self.predicted_step_s is not None and self._decode_steps:
             meas = stats["measured_step_s"]

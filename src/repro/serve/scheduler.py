@@ -36,11 +36,14 @@ from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.attention import KVCache
+from repro.models.paged_cache import RESERVED_BLOCKS, SCRATCH_BLOCK
 
 POLICIES = ("bucketed", "fifo", "wave")
 COMPACTION = ("pow2", "exact", "off")
+KV_LAYOUTS = ("paged", "contiguous")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +65,37 @@ class SchedulerConfig:
     into the next power-of-two width once that halves the batch;
     ``exact`` compacts to the exact active count on every finish (one
     decode retrace per width); ``off`` never compacts (legacy).
+
+    ``kv_layout``:
+      * ``paged`` (default) — KV lives in fixed-size blocks from a shared
+        pool behind a per-row block table (:mod:`repro.models.paged_cache`);
+        compaction rewrites the table (zero cache-row copies), common
+        prompt heads share refcounted prefix blocks, and decode attention
+        reads through the table. Models ``paged_compatible`` rejects
+        (recurrent mixers, sliding windows) silently fall back to
+        contiguous; the ``wave`` policy always serves contiguous (it *is*
+        the legacy engine).
+      * ``contiguous`` — the legacy per-slot ``(max_seq, ...)`` caches,
+        ``gather_cache_rows`` compaction. Kept for bit-identical
+        comparison; outputs match ``paged`` token-for-token.
+
+    ``share_prefix``: reuse full prefix blocks (and the prefill compute)
+    across identical prompt heads; paged only. Off = every row private.
+
+    ``page_size``: tokens per KV block (paged only).
+
+    ``prefill_chunk``: 0 disables; otherwise a block-multiple chunk size —
+    prompts longer than this are prefilled ``prefill_chunk`` tokens per
+    engine tick, interleaved with other groups' decode ticks instead of
+    stalling them behind one long prefill (paged only, text-only models).
     """
 
     policy: str = "bucketed"
     compact: str = "pow2"
+    kv_layout: str = "paged"
+    share_prefix: bool = True
+    page_size: int = 16
+    prefill_chunk: int = 0
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -74,6 +104,18 @@ class SchedulerConfig:
         if self.compact not in COMPACTION:
             raise ValueError(f"unknown compaction mode {self.compact!r}; "
                              f"modes: {list(COMPACTION)}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"unknown kv layout {self.kv_layout!r}; "
+                             f"layouts: {list(KV_LAYOUTS)}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1 (got {self.page_size})")
+        if self.prefill_chunk < 0 or (
+                self.prefill_chunk and self.prefill_chunk % self.page_size):
+            raise ValueError(
+                f"prefill_chunk must be 0 or a positive multiple of "
+                f"page_size={self.page_size} (got {self.prefill_chunk})")
+        if self.prefill_chunk and self.kv_layout != "paged":
+            raise ValueError("prefill_chunk requires kv_layout='paged'")
 
 
 class Scheduler:
@@ -177,13 +219,19 @@ def gather_cache_rows(caches: Dict[str, Any], idx) -> Dict[str, Any]:
 
 
 def _pow2_at_least(n: int) -> int:
-    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+    if n <= 0:
+        return 0  # a zero-active group compacts away entirely, not to width 1
+    return 1 if n == 1 else 1 << (n - 1).bit_length()
 
 
 class SlotGroup:
     """One admitted cohort mid-decode. ``requests[row]`` is the request
     fed by that batch row, or ``None`` for a pad row left by power-of-two
     compaction (its tokens are computed and discarded)."""
+
+    #: engine-owned mutable dict {"rows": int} counting physically copied
+    #: cache rows (the paged layout's zero-copy claim is asserted on it)
+    copy_counter: Optional[Dict[str, int]] = None
 
     def __init__(self, requests: List[Any], caches: Dict[str, Any], cur,
                  plen: int):
@@ -205,12 +253,25 @@ class SlotGroup:
     def done(self) -> bool:
         return not self.active_rows
 
+    def release(self) -> None:
+        """Give the group's KV storage back (no-op for contiguous caches —
+        they die with the last reference)."""
+        self.caches = None
+        self.cur = None
+
     def compact(self, mode: str) -> int:
         """Shrink the batch to the still-active rows per ``mode``;
         returns the number of slots freed (0 when nothing changed)."""
-        if mode == "off" or self.done:
+        if mode == "off":
             return 0
         active = self.active_rows
+        if not active:
+            # every row finished (or was a pad row) mid-tick: free the
+            # whole group instead of gathering rows of an empty selection
+            freed = self.width
+            self.requests = []
+            self.release()
+            return freed
         target = len(active) if mode == "exact" else _pow2_at_least(
             len(active))
         if target >= self.width:
@@ -220,5 +281,109 @@ class SlotGroup:
         self.requests = [self.requests[i] for i in active] \
             + [None] * (target - len(active))
         self.caches = gather_cache_rows(self.caches, rows)
+        if self.copy_counter is not None:
+            self.copy_counter["rows"] += len(rows)
         self.cur = jnp.take(self.cur, jnp.asarray(rows, jnp.int32), axis=0)
         return freed
+
+
+class PagedSlotGroup(SlotGroup):
+    """A cohort whose KV lives in pool blocks behind a per-row block
+    table. ``table`` is host-side numpy ``(width, n_cols)`` int32 —
+    compaction is a row-select on it plus refcount decrefs for blocks
+    only the dropped rows referenced: zero cache-row copies. The device
+    copy of the table (padded to a power-of-two column count so decode
+    retraces O(log) shapes) is cached and rebuilt lazily on mutation."""
+
+    def __init__(self, requests: List[Any], table, cur, plen: int, *,
+                 allocator, block_size: int, pos: int):
+        super().__init__(requests, caches=None, cur=cur, plen=plen)
+        self.table = np.asarray(table, np.int32)
+        self.alloc = allocator
+        self.block_size = block_size
+        self.pos = int(pos)              # next absolute decode position
+        self._dev_table = None
+        self._released = False
+        # chunked-prefill bookkeeping (driven by the engine)
+        self.chunks_done = 0
+        self.n_chunks = 0
+        self.prompt_padded: Optional[np.ndarray] = None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.chunks_done < self.n_chunks
+
+    def device_table(self):
+        if self._dev_table is None:
+            W, nc = self.table.shape
+            ncp = max(1, _pow2_at_least(nc))
+            padded = np.zeros((W, ncp), np.int32)  # zero block: masked reads
+            padded[:, :nc] = self.table
+            self._dev_table = jnp.asarray(padded)
+        return self._dev_table
+
+    def ensure_frontier(self) -> None:
+        """Make the table column for ``pos`` writable before a decode
+        step lands there: a fresh private block per live row, the scratch
+        block for pad rows (their writes are discarded garbage). Also
+        upgrades chunk-padding scratch columns to real blocks as decode
+        reaches them."""
+        col = self.pos // self.block_size
+        W, nc = self.table.shape
+        changed = False
+        if col >= nc:
+            self.table = np.concatenate(
+                [self.table, np.zeros((W, col + 1 - nc), np.int32)], axis=1)
+            changed = True
+        for i, r in enumerate(self.requests):
+            if self.table[i, col] >= RESERVED_BLOCKS:
+                continue
+            self.table[i, col] = (self.alloc.alloc() if r is not None
+                                  else SCRATCH_BLOCK)
+            changed = True
+        if changed:
+            self._dev_table = None
+
+    def release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        for row in self.table:
+            for bid in row:
+                if bid >= RESERVED_BLOCKS:
+                    self.alloc.decref(int(bid))
+        self.table = self.table[:0]
+        self._dev_table = None
+        self.cur = None
+
+    def compact(self, mode: str) -> int:
+        if mode == "off":
+            return 0
+        active = self.active_rows
+        if not active:
+            freed = self.width
+            self.requests = []
+            self.release()
+            return freed
+        target = len(active) if mode == "exact" else _pow2_at_least(
+            len(active))
+        if target >= self.width:
+            return 0
+        W, nc = self.table.shape
+        keep = set(active)
+        for i in range(W):
+            if i in keep:
+                continue
+            for bid in self.table[i]:
+                if bid >= RESERVED_BLOCKS:
+                    self.alloc.decref(int(bid))
+        n_pad = target - len(active)
+        # pad rows write (and read back) only scratch garbage; their
+        # sampled tokens are discarded with the row
+        pad = np.full((n_pad, nc), SCRATCH_BLOCK, np.int32)
+        self.table = np.concatenate([self.table[active], pad], axis=0)
+        self.requests = [self.requests[i] for i in active] + [None] * n_pad
+        rows = active + [active[0]] * n_pad
+        self.cur = jnp.take(self.cur, jnp.asarray(rows, jnp.int32), axis=0)
+        self._dev_table = None
+        return W - target

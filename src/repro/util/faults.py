@@ -173,6 +173,15 @@ class StragglerMonitor:
             self.stragglers += 1
         return is_straggler
 
+    def reset(self) -> None:
+        """Forget the rolling window and straggler count — an engine's
+        ``reset_stats()`` calls this so post-swap/post-warmup medians
+        aren't polluted by earlier generations. The warmup skip stays
+        spent: compilation already happened, re-skipping would discard
+        real samples."""
+        self._times.clear()
+        self.stragglers = 0
+
     @property
     def samples(self) -> int:
         """Recorded (post-warmup) samples."""
