@@ -230,7 +230,12 @@ def run_paged():
     """
     from repro.serve.scheduler import SchedulerConfig
 
-    min_ratio = float(os.environ.get("SERVE_PAGED_MIN_RATIO", "1.0"))
+    # under REPRO_DEBUG_KV the paged arm pays an O(pool) sanitizer sweep
+    # per quantum that the contiguous arm doesn't, so the throughput gate
+    # is replaced by the sanitizer gate (>0 checks, 0 violations)
+    debug_kv = os.environ.get("REPRO_DEBUG_KV", "0") not in ("", "0")
+    min_ratio = float(os.environ.get("SERVE_PAGED_MIN_RATIO",
+                                     "0.0" if debug_kv else "1.0"))
     cfg = _bench_cfg()
     params = init_params(jax.random.PRNGKey(0), cfg)
     max_batch, max_seq = 64, 128     # deepest prompt (64) + longest decode
@@ -283,7 +288,11 @@ def run_paged():
         f";peak_kv_mb={paged['peak_kv_bytes']/2**20:.2f}"
         f";contig_peak_kv_mb={contig['peak_kv_bytes']/2**20:.2f}"
         f";kv_blocks_peak={paged['kv_blocks_peak']}"
-        f";kv_row_copies={paged['kv_row_copies']}")
+        f";kv_row_copies={paged['kv_row_copies']}"
+        # REPRO_DEBUG_KV=1 runs the paged-KV sanitizer every quantum
+        # (repro.analysis.kv_sanitizer); both stay 0 when it's off
+        f";kv_debug_checks={paged['kv_debug_checks']}"
+        f";kv_debug_violations={paged['kv_debug_violations']}")
     if p_out != c_out:
         bad = [rid for rid in c_out if p_out.get(rid) != c_out[rid]]
         raise RuntimeError(
@@ -300,6 +309,13 @@ def run_paged():
         raise RuntimeError(
             f"paged throughput fell below contiguous: ratio {ratio:.2f} "
             f"< {min_ratio}")
+    if debug_kv and not (paged["kv_debug_checks"] > 0
+                         and paged["kv_debug_violations"] == 0):
+        raise RuntimeError(
+            f"paged-KV sanitizer gate: expected >0 quantum-boundary "
+            f"checks and 0 violations, got "
+            f"checks={paged['kv_debug_checks']} "
+            f"violations={paged['kv_debug_violations']}")
 
     # -- arm 2: prefix sharing on a duplicate-heavy workload ----------------
     t = common.Timer()

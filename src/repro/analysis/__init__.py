@@ -1,0 +1,36 @@
+"""Static analysis & sanitizers: compiler-informed checks that run
+*before* (or alongside) device execution.
+
+Three passes, one front door:
+
+* :mod:`~repro.analysis.kernels` — static Pallas-kernel checker
+  (``K001``-``K004``): tile divisibility, grid bounds, dtype rules, and
+  per-call VMEM footprints against a ``TargetSpec``, without compiling.
+* :mod:`~repro.analysis.jaxpr_audit` — jaxpr auditor (``J001``-``J004``):
+  abstract traces of the decode/prefill/train steps walked for f32
+  promotions, host transfers, missed donation, recompile hazards.
+* :mod:`~repro.analysis.kv_sanitizer` — ASAN-style paged-KV sanitizer
+  (``V001``-``V005``): allocator refcounts vs live block tables, run at
+  every quantum when ``SchedulerConfig(debug_kv=True)``.
+
+Front door: ``python -m repro.analysis`` (or ``launch/check.py``) runs
+all passes over a config+target matrix and exits non-zero on errors.
+``session.export()`` / ``Plan.export_catalog()`` run the kernel checker
+for the artifact's own target and stamp ``artifact.json`` with
+``checks: {passed, codes}``.
+
+Only the diagnostic records live at package level — the passes import
+models/serve machinery, so pull them in explicitly
+(``from repro.analysis import kernels``) to keep this package cheap to
+import from inside the engine.
+"""
+from repro.analysis.diagnostics import (DIAGNOSTIC_CODES, ERROR, WARNING,
+                                        AnalysisReport, Diagnostic)
+
+__all__ = [
+    "DIAGNOSTIC_CODES",
+    "ERROR",
+    "WARNING",
+    "AnalysisReport",
+    "Diagnostic",
+]

@@ -1,0 +1,148 @@
+"""Front door: ``python -m repro.analysis`` — all passes, one exit code.
+
+Runs the kernel static checker over a config x target matrix, the jaxpr
+auditor per config, and the paged-KV sanitizer against a short
+end-to-end serve of each paged-compatible config's *reduced* variant
+(real engine, ``debug_kv=True``, mixed direct/chunked/shared-prefix
+admissions). Exits non-zero iff any pass reports an error; warnings
+print but don't fail.
+
+    python -m repro.analysis                                # everything
+    python -m repro.analysis --config granite_moe_1b_a400m \
+        --targets tpu_v5e,edge
+    python -m repro.analysis --passes kernels,jaxpr         # skip serve
+
+``launch/check.py`` is a thin alias for environments that invoke repo
+scripts by path.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.diagnostics import AnalysisReport
+
+
+def _parse(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static kernel/jaxpr checks + paged-KV sanitizer")
+    ap.add_argument("--config", default="all",
+                    help="comma-separated config names (default: all "
+                         "shipped configs)")
+    ap.add_argument("--targets", default="tpu_v5e",
+                    help="comma-separated target names for the kernel "
+                         "pass (default: tpu_v5e)")
+    ap.add_argument("--passes", default="kernels,jaxpr,kv",
+                    help="subset of kernels,jaxpr,kv to run")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print only the final summary line")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(argv)
+    from repro.analysis import jaxpr_audit, kernels
+    from repro.api.targets import get_target
+    from repro.configs import all_configs, get_config
+
+    if args.config == "all":
+        cfgs = [get_config(n) for n in all_configs()]
+    else:
+        cfgs = [get_config(n) for n in args.config.split(",")]
+    targets = [get_target(t) for t in args.targets.split(",")]
+    passes = set(args.passes.split(","))
+    unknown = passes - {"kernels", "jaxpr", "kv"}
+    if unknown:
+        print(f"unknown pass(es): {sorted(unknown)}", file=sys.stderr)
+        return 2
+
+    report = AnalysisReport()
+
+    def emit(pass_name: str, what: str, diags) -> None:
+        report.extend(diags)
+        errs = sum(1 for d in diags if d.severity == "error")
+        if not args.quiet:
+            print(f"[{pass_name}] {what}: {len(diags)} finding(s), "
+                  f"{errs} error(s)")
+            for d in diags:
+                print(f"  {d}")
+
+    if "kernels" in passes:
+        for cfg in cfgs:
+            for tgt in targets:
+                emit("kernels", f"{cfg.name} @ {tgt.name}",
+                     kernels.check_model_kernels(
+                         cfg, tgt, max_batch=args.max_batch,
+                         max_seq=args.max_seq))
+
+    if "jaxpr" in passes:
+        from repro.serve.scheduler import SchedulerConfig
+        for cfg in cfgs:
+            emit("jaxpr", cfg.name,
+                 jaxpr_audit.audit_model(cfg, max_batch=args.max_batch,
+                                         max_seq=args.max_seq))
+        emit("jaxpr", "serve shapes",
+             jaxpr_audit.audit_serve_shapes(
+                 SchedulerConfig(), max_batch=args.max_batch,
+                 max_seq=args.max_seq))
+
+    if "kv" in passes:
+        emit_kv(cfgs, emit, quiet=args.quiet)
+
+    print(f"repro.analysis: {report.summary().splitlines()[0]}"
+          f"{' — FAIL' if not report.ok else ''}")
+    return 0 if report.ok else 1
+
+
+def emit_kv(cfgs, emit, *, quiet: bool = False) -> None:
+    """Serve each paged-compatible config's reduced variant end-to-end
+    under ``debug_kv=True`` — direct, shared-prefix, and chunked
+    admissions — plus the donation audit on the live engine. A sanitizer
+    violation surfaces as its diagnostics (the engine raises them)."""
+    import jax
+    import numpy as np
+
+    from repro.analysis.jaxpr_audit import audit_engine_donation
+    from repro.analysis.kv_sanitizer import KVSanitizerError
+    from repro.configs import get_reduced_config
+    from repro.models.paged_cache import paged_compatible
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.scheduler import SchedulerConfig
+
+    for cfg in cfgs:
+        if not paged_compatible(cfg):
+            if not quiet:
+                print(f"[kv] {cfg.name}: skipped (not paged-compatible)")
+            continue
+        rcfg = get_reduced_config(cfg.name)
+        from repro.models.model import init_params
+        params = init_params(jax.random.PRNGKey(0), rcfg)
+        chunkable = rcfg.rope != "mrope" and rcfg.frontend == "none"
+        sched = SchedulerConfig(debug_kv=True, page_size=8,
+                                prefill_chunk=16 if chunkable else 0)
+        eng = ServeEngine(rcfg, params, max_batch=4, max_seq=64,
+                          scheduler=sched)
+        rng = np.random.default_rng(0)
+        shared = rng.integers(1, 50, 11).astype(np.int32)
+        prompts = [shared, shared.copy(),                 # shared prefix
+                   rng.integers(1, 50, 5).astype(np.int32),
+                   rng.integers(1, 50, 24).astype(np.int32)]
+        if chunkable:                                      # chunked path
+            prompts.append(rng.integers(1, 50, 40).astype(np.int32))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        try:
+            stats = eng.serve_forever()
+        except KVSanitizerError as e:
+            emit("kv", f"{cfg.name} (reduced serve)", e.diagnostics)
+            continue
+        emit("kv", f"{cfg.name} (reduced serve, "
+                   f"{stats['kv_debug_checks']} checks)", [])
+        emit("kv", f"{cfg.name} (donation)", audit_engine_donation(eng))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Structured diagnostics shared by every analysis pass.
+
+A :class:`Diagnostic` is one named finding — ``K003 vmem-overflow at
+layer.qkv`` — with a severity and a fix hint. Passes return lists of
+them; :class:`AnalysisReport` aggregates lists across passes and decides
+the process exit code (errors fail, warnings don't), so the CLI, the
+export stamp, and the test fixtures all consume the same records.
+
+Code namespaces: ``K***`` kernel static checker (:mod:`.kernels`),
+``J***`` jaxpr auditor (:mod:`.jaxpr_audit`), ``V***`` paged-KV
+sanitizer (:mod:`.kv_sanitizer`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+ERROR = "error"
+WARNING = "warning"
+SEVERITIES = (ERROR, WARNING)
+
+#: code -> short meaning (the README table mirrors this)
+DIAGNOSTIC_CODES: Dict[str, str] = {
+    "K001": "tile-not-divisible",
+    "K002": "grid-bounds",
+    "K003": "vmem-overflow",
+    "K004": "dtype-rule",
+    "J001": "f32-promotion",
+    "J002": "host-transfer",
+    "J003": "missed-donation",
+    "J004": "recompile-hazard",
+    "V001": "kv-leak",
+    "V002": "kv-refcount-mismatch",
+    "V003": "kv-dangling-entry",
+    "V004": "kv-cow-violation",
+    "V005": "kv-accounting",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One named finding from an analysis pass."""
+
+    code: str            # e.g. "K003"
+    severity: str        # "error" | "warning"
+    site: str            # where: kernel call / jaxpr eqn / block id
+    message: str         # what is wrong, with the numbers
+    fix_hint: str = ""   # what to change
+
+    def __post_init__(self):
+        if self.code not in DIAGNOSTIC_CODES:
+            raise ValueError(f"unknown diagnostic code {self.code!r}")
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    @property
+    def name(self) -> str:
+        return DIAGNOSTIC_CODES[self.code]
+
+    def __str__(self) -> str:
+        hint = f" (fix: {self.fix_hint})" if self.fix_hint else ""
+        return (f"{self.code} {self.name} [{self.severity}] "
+                f"{self.site}: {self.message}{hint}")
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """Aggregated findings across passes; ``ok`` gates the exit code."""
+
+    diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
+
+    def extend(self, diags: Iterable[Diagnostic]) -> "AnalysisReport":
+        self.diagnostics.extend(diags)
+        return self
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == WARNING]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    @property
+    def codes(self) -> List[str]:
+        """Distinct codes present, sorted (the export stamp records this)."""
+        return sorted({d.code for d in self.diagnostics})
+
+    def summary(self) -> str:
+        head = (f"{len(self.errors)} error(s), "
+                f"{len(self.warnings)} warning(s)")
+        if not self.diagnostics:
+            return head
+        return head + "\n" + "\n".join(f"  {d}" for d in self.diagnostics)

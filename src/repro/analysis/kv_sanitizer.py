@@ -1,0 +1,183 @@
+"""ASAN-style sanitizer for the paged KV cache's host-side bookkeeping.
+
+The :class:`~repro.models.paged_cache.BlockAllocator` and the per-group
+block tables (:class:`~repro.serve.scheduler.PagedSlotGroup`) are pure
+host state, so their whole invariant set can be checked exactly between
+scheduler quanta — no device sync, no probes in the hot loop:
+
+``V001 kv-leak``
+    a block holds references but no live table row reaches it (the
+    registry holds no refcount of its own, so unreachable + referenced
+    means the refs can never be returned — the pool shrank for good).
+``V002 kv-refcount-mismatch``
+    a block's refcount differs from its live-table occurrence count; a
+    deficit means a future release will double-free it under other rows.
+``V003 kv-dangling-entry``
+    a live table row references a block that is on the free list — its
+    contents can be reallocated and overwritten under the row.
+``V004 kv-cow-violation``
+    the block a live row last decoded into is shared (refcount > 1):
+    the write mutated another row's data without a copy-on-write split.
+``V005 kv-accounting``
+    free list + referenced blocks + reserved ids must tile the pool
+    exactly (no duplicates, no reserved ids on the free list, no
+    refcounts on free blocks), and the share registry must be involutive
+    (``registry[key] == bid`` <-> ``block_key[bid] == key``).
+
+:func:`check_engine` snapshots a :class:`ServeEngine`'s allocator and
+live groups; the engine calls it after every :meth:`step` when
+``SchedulerConfig(debug_kv=True)`` (or ``REPRO_DEBUG_KV=1``) is set and
+raises :class:`KVSanitizerError` on the first violation.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.diagnostics import ERROR, Diagnostic
+from repro.models.paged_cache import RESERVED_BLOCKS, BlockAllocator
+
+
+class KVSanitizerError(RuntimeError):
+    """A paged-KV invariant violation (carries the diagnostics)."""
+
+    def __init__(self, diagnostics: List[Diagnostic]):
+        self.diagnostics = list(diagnostics)
+        lines = "\n".join(f"  {d}" for d in self.diagnostics)
+        super().__init__(
+            f"paged-KV sanitizer: {len(self.diagnostics)} violation(s)\n"
+            f"{lines}")
+
+
+def check_allocator(alloc: BlockAllocator,
+                    tables: Iterable[np.ndarray]) -> List[Diagnostic]:
+    """Reachability + accounting sweep: the allocator's refcounts, free
+    list, and share registry against the live block ``tables``. (The
+    COW check V004 needs per-group decode positions — see
+    :func:`check_engine`.)"""
+    diags: List[Diagnostic] = []
+
+    # occurrences of each block id across every live table entry
+    occ: Counter = Counter()
+    for table in tables:
+        for bid in np.asarray(table).ravel():
+            if bid >= RESERVED_BLOCKS:
+                occ[int(bid)] += 1
+
+    free_list = list(alloc._free)
+    free_set = set(free_list)
+    ref = alloc._ref
+
+    # V005: structural accounting first — everything else assumes it
+    if len(free_list) != len(free_set):
+        dup = sorted(b for b, c in Counter(free_list).items() if c > 1)
+        diags.append(Diagnostic(
+            "V005", ERROR, "allocator",
+            f"free list holds duplicate block ids {dup[:8]}",
+            fix_hint="a block was freed twice; audit the decref path"))
+    bad_reserved = sorted(b for b in free_set if b < RESERVED_BLOCKS)
+    if bad_reserved:
+        diags.append(Diagnostic(
+            "V005", ERROR, "allocator",
+            f"reserved block ids {bad_reserved} are on the free list",
+            fix_hint="ids < RESERVED_BLOCKS must never be allocated"))
+    referenced = {int(b) for b in np.flatnonzero(ref > 0)}
+    expected = set(range(RESERVED_BLOCKS, alloc.n_blocks))
+    untracked = expected - free_set - referenced
+    if untracked:
+        diags.append(Diagnostic(
+            "V005", ERROR, "allocator",
+            f"blocks {sorted(untracked)[:8]} are neither free nor "
+            f"referenced (free {len(free_set)} + referenced "
+            f"{len(referenced)} + reserved {RESERVED_BLOCKS} != "
+            f"{alloc.n_blocks})",
+            fix_hint="blocks_in_use + blocks_free + reserved must equal "
+                     "n_blocks"))
+    both = free_set & referenced
+    if both:
+        diags.append(Diagnostic(
+            "V005", ERROR, "allocator",
+            f"blocks {sorted(both)[:8]} are on the free list with a "
+            f"positive refcount",
+            fix_hint="decref must zero the refcount before freeing"))
+    for key, bid in alloc._registry.items():
+        if alloc._block_key.get(bid) != key:
+            diags.append(Diagnostic(
+                "V005", ERROR, f"block {bid}",
+                "share registry entry has no matching reverse mapping",
+                fix_hint="publish/decref must keep registry and "
+                         "block_key in lockstep"))
+
+    # V001/V002/V003: refcounts vs table reachability
+    for bid in sorted(referenced - set(occ)):
+        diags.append(Diagnostic(
+            "V001", ERROR, f"block {bid}",
+            f"refcount {int(ref[bid])} but unreachable from any live "
+            f"table row — leaked",
+            fix_hint="decref blocks acquired for a cohort that never "
+                     "became a live group (admission failure paths)"))
+    for bid, n in sorted(occ.items()):
+        r = int(ref[bid])
+        if bid in free_set or r == 0:
+            diags.append(Diagnostic(
+                "V003", ERROR, f"block {bid}",
+                f"referenced by {n} live table "
+                f"entr{'y' if n == 1 else 'ies'} but the block is free",
+                fix_hint="a row outlived its blocks; release/compact "
+                         "decref'd a block still in a table"))
+        elif r != n:
+            diags.append(Diagnostic(
+                "V002", ERROR, f"block {bid}",
+                f"refcount {r} != {n} live table occurrence(s)",
+                fix_hint="every table entry must hold exactly one "
+                         "reference (the share registry holds none)"))
+    return diags
+
+
+def check_cow(alloc: BlockAllocator, table: np.ndarray,
+              live: Sequence[bool], *, pos: int, plen: int,
+              block_size: int, label: str = "group") -> List[Diagnostic]:
+    """V004 for one group: the column decode last wrote (position
+    ``pos - 1``) must be private (or reserved scratch) for every live
+    row. Skipped when no decode write has happened (``pos <= plen``)."""
+    diags: List[Diagnostic] = []
+    table = np.asarray(table)
+    if pos <= plen or table.size == 0:
+        return diags
+    col = (pos - 1) // block_size
+    if col >= table.shape[1]:
+        return diags
+    for i, is_live in enumerate(live):
+        if not is_live:
+            continue
+        bid = int(table[i, col])
+        if bid >= RESERVED_BLOCKS and alloc.refcount(bid) > 1:
+            diags.append(Diagnostic(
+                "V004", ERROR, f"block {bid}",
+                f"{label} row {i} decoded into a block shared by "
+                f"{alloc.refcount(bid)} references",
+                fix_hint="the write frontier must be a private block "
+                         "(copy-on-write split on incref)"))
+    return diags
+
+
+def check_engine(engine) -> List[Diagnostic]:
+    """One full sweep of an engine's paged-KV state (empty for
+    contiguous engines). Duck-typed to avoid a serve<->analysis import
+    cycle — anything with ``kv_allocator`` and paged ``groups`` works."""
+    alloc = getattr(engine, "kv_allocator", None)
+    if alloc is None:
+        return []
+    from repro.serve.scheduler import PagedSlotGroup
+    paged = [g for g in engine.groups if isinstance(g, PagedSlotGroup)]
+    diags = check_allocator(alloc, [g.table for g in paged])
+    for gi, g in enumerate(paged):
+        if g.prefilling:
+            continue
+        diags.extend(check_cow(
+            alloc, g.table, [r is not None for r in g.requests],
+            pos=g.pos, plen=g.plen, block_size=g.block_size,
+            label=f"group[{gi}]"))
+    return diags

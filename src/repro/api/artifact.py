@@ -152,6 +152,9 @@ class DeploymentArtifact:
     metadata: Dict[str, Any]
     path: Optional[str] = None
     schema_version: int = SCHEMA_VERSION
+    # export-time static-analysis stamp ({"passed": bool, "codes": [...]});
+    # None for in-memory artifacts not yet saved and for pre-stamp files
+    checks: Optional[Dict[str, Any]] = None
 
     # -- identity -----------------------------------------------------------
 
@@ -290,6 +293,7 @@ class DeploymentArtifact:
                 f"cannot save an artifact whose target is not a "
                 f"TargetSpec-style dataclass: {type(self.target).__name__}")
         oracle_blob, log = self._oracle_blob()
+        checks = self.run_checks()
         os.makedirs(path, exist_ok=True)
         flat = _flatten_params(self.params)
         tmp = os.path.join(path, "params.npz.tmp")
@@ -322,23 +326,45 @@ class DeploymentArtifact:
                 "params": _params_digest(flat),
             },
             "metadata": self.metadata,
+            # export-time static-analysis stamp: the kernel checker run
+            # against this artifact's own target + tuned table.
+            # load(strict_checks=True) refuses artifacts without it.
+            "checks": checks,
         }
         tmp = os.path.join(path, "artifact.json.tmp")
         with open(tmp, "w") as f:
             json.dump(blob, f, indent=1)
         os.replace(tmp, os.path.join(path, "artifact.json"))
         self.path = path
+        self.checks = checks
         return path
 
+    def run_checks(self) -> Dict[str, Any]:
+        """Run the static kernel checker against this artifact's own
+        target + tuned table and return the stamp ``save`` writes:
+        ``{"passed": bool, "codes": [...]}`` (distinct diagnostic codes
+        seen, warnings included). Pure — no global tuner/oracle state is
+        touched and nothing runs on a device."""
+        from repro.analysis.kernels import check_artifact_kernels
+        diags = check_artifact_kernels(self)
+        return {"passed": not any(d.severity == "error" for d in diags),
+                "codes": sorted({d.code for d in diags})}
+
     @classmethod
-    def load(cls, path: str) -> "DeploymentArtifact":
+    def load(cls, path: str, *,
+             strict_checks: bool = False) -> "DeploymentArtifact":
         """Read + validate an artifact directory. Refuses (with a clear
         :class:`ArtifactError`) any artifact that is missing, malformed,
         or whose schema version is unknown or whose params/target/oracle/
         table fingerprints do not agree — a table tuned for a different
-        target or oracle is never served."""
+        target or oracle is never served.
+
+        ``strict_checks=True`` additionally requires the export-time
+        static-analysis stamp (``checks: {passed: true}``) — artifacts
+        from before the stamp existed, or stamped with errors, are
+        refused. The default keeps them loadable with a warning."""
         try:
-            return cls._load(path)
+            return cls._load(path, strict_checks=strict_checks)
         except ArtifactError:
             raise
         except (OSError, json.JSONDecodeError, KeyError, IndexError,
@@ -348,7 +374,8 @@ class DeploymentArtifact:
                 f"{type(e).__name__}: {e}") from e
 
     @classmethod
-    def _load(cls, path: str) -> "DeploymentArtifact":
+    def _load(cls, path: str, *,
+              strict_checks: bool = False) -> "DeploymentArtifact":
         meta_path = os.path.join(path, "artifact.json")
         if not os.path.exists(meta_path):
             raise ArtifactError(f"no deployment artifact at {path!r} "
@@ -360,6 +387,27 @@ class DeploymentArtifact:
             raise ArtifactError(
                 f"unsupported artifact schema version {ver!r} "
                 f"(this build reads version {SCHEMA_VERSION})")
+        checks = blob.get("checks")
+        if checks is not None and not checks.get("passed", False):
+            # a stamp recording errors is refused outright: the exporter
+            # knew the kernels cannot launch on the artifact's target
+            raise ArtifactError(
+                f"artifact at {path!r} is stamped with failing static "
+                f"checks (codes {checks.get('codes')}); re-export after "
+                f"fixing, or re-plan for a bigger target")
+        if checks is None:
+            if strict_checks:
+                raise ArtifactError(
+                    f"strict_checks=True: artifact at {path!r} carries no "
+                    f"static-analysis stamp (exported before "
+                    f"repro.analysis existed) — re-export it, or load "
+                    f"with strict_checks=False")
+            warnings.warn(
+                f"artifact at {path!r} has no static-analysis stamp "
+                f"(pre-repro.analysis export); loading anyway — "
+                f"re-export to stamp it, or opt into "
+                f"load(strict_checks=True) to refuse unstamped artifacts",
+                stacklevel=3)
         cfg_d = dict(blob["config"])
         cfg_d["block_pattern"] = tuple(cfg_d["block_pattern"])
         cfg = ModelConfig(**cfg_d)
@@ -439,7 +487,7 @@ class DeploymentArtifact:
                    oracle=orc, workload=workload,
                    seq_len=blob.get("seq_len", 128), table=table,
                    metadata=blob.get("metadata", {}), path=path,
-                   schema_version=ver)
+                   schema_version=ver, checks=checks)
 
     # -- serving / inspection ----------------------------------------------
 

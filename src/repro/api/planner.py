@@ -179,6 +179,9 @@ class Plan:
                 "accuracy": c.accuracy, "latency_s": c.latency_s,
                 "predicted_step_s": art.metadata.get("predicted_step_s"),
                 "tuned_digest": art.tuned_digest,
+                # the export-time static-analysis stamp, surfaced so a
+                # router can see a whole fleet's check status in one read
+                "checks": art.checks,
             })
         blob = {"version": CATALOG_VERSION,
                 "accuracy_floor": self.accuracy_floor,

@@ -1,0 +1,16 @@
+"""``launch/check.py`` — thin alias for ``python -m repro.analysis``.
+
+Runs the static kernel checker, the jaxpr auditor, and the paged-KV
+sanitizer over a config x target matrix and exits non-zero on errors:
+
+  PYTHONPATH=src python -m repro.launch.check \
+      --config granite_moe_1b_a400m --targets tpu_v5e,edge
+
+All flags are forwarded verbatim — see ``python -m repro.analysis -h``.
+"""
+import sys
+
+from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    sys.exit(main())

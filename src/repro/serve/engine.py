@@ -183,6 +183,12 @@ class ServeEngine:
             self._prefill_padded = jax.jit(
                 lambda p, b, ms: self.model.prefill(p, b, ms),
                 static_argnums=2)
+        # paged-KV sanitizer (repro.analysis.kv_sanitizer) at every
+        # quantum boundary: SchedulerConfig(debug_kv=True), or
+        # REPRO_DEBUG_KV=1 to flip it on without touching call sites
+        self._debug_kv = self.kv_layout == "paged" and (
+            self.scheduler.config.debug_kv
+            or os.environ.get("REPRO_DEBUG_KV", "0") not in ("", "0"))
         self.reset_stats()
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq))
@@ -276,34 +282,52 @@ class ServeEngine:
         own work (the router round-robins it across engines)."""
         t0 = time.perf_counter()
         try:
-            free = self.max_batch - sum(g.width for g in self.groups)
-            batch = self.scheduler.select(free,
-                                          live_groups=len(self.groups))
-            if batch:
-                try:
-                    self._admit(batch)
-                except Exception:
-                    # an admission crash (e.g. injected prefill OOM) must
-                    # not lose the cohort: the scheduler already popped
-                    # it, so hand it back before propagating — the
-                    # supervisor then finds every request in in_flight()
-                    for r in batch:
-                        self.scheduler.submit(r)
-                    raise
-                return {"event": "prefill", "admitted": len(batch),
-                        "prompt_len": len(batch[0].prompt),
-                        "live_groups": len(self.groups)}
-            if self.groups:
-                new_tokens = self._decode_tick()
-                return {"event": "decode",
-                        "live_groups": len(self.groups),
-                        "new_tokens": new_tokens}
-            return {"event": "idle", "pending": len(self.scheduler)}
+            result = self._step_inner()
         finally:
             # wall time accrues per quantum, so an engine driven by an
             # external loop (the router round-robin) still reports a
             # meaningful tokens_per_s
             self._wall_s += time.perf_counter() - t0
+        if self._debug_kv:
+            self._kv_debug_sweep()
+        return result
+
+    def _kv_debug_sweep(self) -> None:
+        """Quantum-boundary sanitizer sweep (``debug_kv``): every paged-KV
+        invariant over the allocator + live tables, raising
+        ``KVSanitizerError`` on the first violation. Host-side only — no
+        device sync — but O(pool), so it stays behind the debug flag."""
+        from repro.analysis.kv_sanitizer import (KVSanitizerError,
+                                                 check_engine)
+        diags = check_engine(self)
+        self._kv_debug_checks += 1
+        if diags:
+            self._kv_debug_violations += len(diags)
+            raise KVSanitizerError(diags)
+
+    def _step_inner(self) -> Dict[str, Any]:
+        free = self.max_batch - sum(g.width for g in self.groups)
+        batch = self.scheduler.select(free, live_groups=len(self.groups))
+        if batch:
+            try:
+                self._admit(batch)
+            except Exception:
+                # an admission crash (e.g. injected prefill OOM) must
+                # not lose the cohort: the scheduler already popped
+                # it, so hand it back before propagating — the
+                # supervisor then finds every request in in_flight()
+                for r in batch:
+                    self.scheduler.submit(r)
+                raise
+            return {"event": "prefill", "admitted": len(batch),
+                    "prompt_len": len(batch[0].prompt),
+                    "live_groups": len(self.groups)}
+        if self.groups:
+            new_tokens = self._decode_tick()
+            return {"event": "decode",
+                    "live_groups": len(self.groups),
+                    "new_tokens": new_tokens}
+        return {"event": "idle", "pending": len(self.scheduler)}
 
     def serve_forever(self, deadline_s: Optional[float] = None
                       ) -> Dict[str, Any]:
@@ -403,42 +427,59 @@ class ServeEngine:
         rows_s: List[int] = []   # scatter worklist into the U prefill rows
         cols_s: List[int] = []
         bids_s: List[int] = []
+        # every reference acquired below, in order — pool exhaustion
+        # mid-table must return them all before the cohort is re-queued,
+        # or the pool shrinks for good (a V001 leak under debug_kv)
+        acquired: List[int] = []
         u_tables = np.zeros((U, ncb), np.int32)
-        for u, p in enumerate(u_prompts):
-            for j in range(ncb):
-                full = (j + 1) * bs <= plen
-                bid = None
-                if share and full:
-                    # plen and U are part of the key: k/v bits can differ
-                    # across padded lengths / batch widths, and a shared
-                    # block must be byte-for-byte one computation
-                    key = (plen, U, p[:(j + 1) * bs].tobytes())
-                    bid = alloc.share(key)
-                    if bid is None:
+        try:
+            for u, p in enumerate(u_prompts):
+                for j in range(ncb):
+                    full = (j + 1) * bs <= plen
+                    bid = None
+                    if share and full:
+                        # plen and U are part of the key: k/v bits can
+                        # differ across padded lengths / batch widths, and
+                        # a shared block must be byte-for-byte one
+                        # computation
+                        key = (plen, U, p[:(j + 1) * bs].tobytes())
+                        bid = alloc.share(key)
+                        if bid is not None:
+                            acquired.append(bid)
+                        else:
+                            bid = alloc.alloc()
+                            acquired.append(bid)
+                            alloc.publish(key, bid)
+                            rows_s.append(u); cols_s.append(j)
+                            bids_s.append(bid)
+                    else:
                         bid = alloc.alloc()
-                        alloc.publish(key, bid)
+                        acquired.append(bid)
                         rows_s.append(u); cols_s.append(j); bids_s.append(bid)
-                else:
-                    bid = alloc.alloc()
-                    rows_s.append(u); cols_s.append(j); bids_s.append(bid)
-                u_tables[u, j] = bid
-        table = np.zeros((W, ncb), np.int32)
-        seen_u: Dict[int, int] = {}
-        frontier = ncb - 1 if plen % bs else None
-        for i in range(W):
-            u = row_to_u[i]
-            if u not in seen_u:
-                seen_u[u] = i
-                table[i] = u_tables[u]
-                continue
-            for j in range(ncb):
-                if j == frontier:
-                    bid = alloc.alloc()   # private frontier per duplicate
-                    rows_s.append(u); cols_s.append(j); bids_s.append(bid)
-                else:
-                    bid = int(u_tables[u, j])
-                    alloc.incref(bid, shared=True)
-                table[i, j] = bid
+                    u_tables[u, j] = bid
+            table = np.zeros((W, ncb), np.int32)
+            seen_u: Dict[int, int] = {}
+            frontier = ncb - 1 if plen % bs else None
+            for i in range(W):
+                u = row_to_u[i]
+                if u not in seen_u:
+                    seen_u[u] = i
+                    table[i] = u_tables[u]
+                    continue
+                for j in range(ncb):
+                    if j == frontier:
+                        bid = alloc.alloc()  # private frontier per duplicate
+                        acquired.append(bid)
+                        rows_s.append(u); cols_s.append(j); bids_s.append(bid)
+                    else:
+                        bid = int(u_tables[u, j])
+                        alloc.incref(bid, shared=True)
+                        acquired.append(bid)
+                    table[i, j] = bid
+        except BaseException:
+            for bid in reversed(acquired):
+                alloc.decref(bid)
+            raise
         self._pools = scatter_prefill_blocks(
             self._pools, caches, rows_s, cols_s, bids_s, block_size=bs)
 
@@ -474,9 +515,19 @@ class ServeEngine:
         total_cols = n_chunks * C // bs
         ncb_real = -(-plen // bs)
         table = np.full((W, total_cols), SCRATCH_BLOCK, np.int32)
-        for i in range(W):
-            for j in range(ncb_real):
-                table[i, j] = alloc.alloc()
+        acquired: List[int] = []
+        try:
+            for i in range(W):
+                for j in range(ncb_real):
+                    bid = alloc.alloc()
+                    acquired.append(bid)
+                    table[i, j] = bid
+        except BaseException:
+            # pool exhausted mid-table: return every block already taken
+            # before the cohort is re-queued, or they leak for good
+            for bid in reversed(acquired):
+                alloc.decref(bid)
+            raise
         prompt_padded = np.zeros((W, n_chunks * C), np.int32)
         for i, r in enumerate(reqs):
             prompt_padded[i, :plen] = r.prompt
@@ -610,6 +661,8 @@ class ServeEngine:
         self._prefill_tokens = 0
         self._chunk_steps = 0
         self._copy_counter["rows"] = 0
+        self._kv_debug_checks = 0
+        self._kv_debug_violations = 0
         self._peak_kv_slots = self._live_kv_slots
         if self.kv_allocator is not None:
             self.kv_allocator.reset_stats()
@@ -704,6 +757,11 @@ class ServeEngine:
                                  if self.kv_allocator is not None else 0),
             "kv_shared_blocks": (self.kv_allocator.shared_hits
                                  if self.kv_allocator is not None else 0),
+            # paged-KV sanitizer accounting (debug_kv): quantum-boundary
+            # sweeps run and invariant violations seen (violations also
+            # raise, so a drained run should report checks > 0, 0 here)
+            "kv_debug_checks": self._kv_debug_checks,
+            "kv_debug_violations": self._kv_debug_violations,
             "peak_kv_bytes": (
                 self.kv_allocator.peak_blocks
                 * self.scheduler.config.page_size * self._kv_row_bytes

@@ -84,6 +84,9 @@ class CatalogEntry:
     latency_s: float                # the plan's ranked whole-model latency
     predicted_step_s: Optional[float]   # oracle decode step @ serve defaults
     tuned_digest: Optional[str]
+    # export-time static-analysis stamp ({"passed": bool, "codes": [...]});
+    # None in manifests written before repro.analysis existed
+    checks: Optional[Dict[str, Any]] = None
 
     def describe(self) -> str:
         step = ("?" if self.predicted_step_s is None

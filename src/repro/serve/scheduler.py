@@ -88,6 +88,14 @@ class SchedulerConfig:
     prompts longer than this are prefilled ``prefill_chunk`` tokens per
     engine tick, interleaved with other groups' decode ticks instead of
     stalling them behind one long prefill (paged only, text-only models).
+
+    ``debug_kv``: run the paged-KV sanitizer
+    (:mod:`repro.analysis.kv_sanitizer`) at every scheduler quantum
+    boundary — refcount/reachability/COW invariants over the whole
+    allocator + live tables. Exact but host-side-only work per quantum;
+    a violation raises ``KVSanitizerError`` from ``engine.step()``.
+    The ``REPRO_DEBUG_KV=1`` environment variable turns it on without
+    touching call sites (paged only; ignored for contiguous layouts).
     """
 
     policy: str = "bucketed"
@@ -96,6 +104,7 @@ class SchedulerConfig:
     share_prefix: bool = True
     page_size: int = 16
     prefill_chunk: int = 0
+    debug_kv: bool = False
 
     def __post_init__(self):
         if self.policy not in POLICIES:
