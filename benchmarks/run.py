@@ -22,6 +22,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serve_autopilot    drift-triggered autopilot: injected decode drift ->
                      recalibrated replan -> atomic hot-swap (swap must
                      happen, violation rate must drop, zero dropped)
+  serve_distributed  tensor-parallel serving: tp=2 sharded greedy decode
+                     bit-identical to single-device (subprocess, 4 host
+                     devices), 2-replica least-loaded fleet >= solo
+                     throughput, zero lost requests across one injected
+                     crash (re-queues land on the surviving replica)
   serve_paged        paged KV cache vs the contiguous layout at batch 64
                      on a heavy-tailed mix (throughput + strict peak-KV
                      gates, zero compaction copies, bit-identical greedy
@@ -37,11 +42,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (artifact_smoke, fig1_correlation,
-                            fig6_iterations, fig8_cross_target,
-                            fig11_search_cost, kernels_bench,
-                            measured_smoke, roofline, serve_bench,
-                            session_targets, table1_methods,
+    from benchmarks import (artifact_smoke, distributed_bench,
+                            fig1_correlation, fig6_iterations,
+                            fig8_cross_target, fig11_search_cost,
+                            kernels_bench, measured_smoke, roofline,
+                            serve_bench, session_targets, table1_methods,
                             table2_ablations, tuner_bench)
     from benchmarks import common
 
@@ -58,6 +63,7 @@ def main() -> None:
         ("serve_bench", serve_bench.run),
         ("serve_chaos", serve_bench.run_chaos),
         ("serve_autopilot", serve_bench.run_autopilot),
+        ("serve_distributed", distributed_bench.run),
         ("serve_paged", serve_bench.run_paged),
         ("fig11_search_cost", fig11_search_cost.run),
         ("tuner_bench", tuner_bench.run),

@@ -6,7 +6,7 @@ Three passes, one front door:
 * :mod:`~repro.analysis.kernels` — static Pallas-kernel checker
   (``K001``-``K004``): tile divisibility, grid bounds, dtype rules, and
   per-call VMEM footprints against a ``TargetSpec``, without compiling.
-* :mod:`~repro.analysis.jaxpr_audit` — jaxpr auditor (``J001``-``J004``):
+* :mod:`~repro.analysis.jaxpr_audit` — jaxpr auditor (``J001``-``J005``):
   abstract traces of the decode/prefill/train steps walked for f32
   promotions, host transfers, missed donation, recompile hazards.
 * :mod:`~repro.analysis.kv_sanitizer` — ASAN-style paged-KV sanitizer

@@ -37,6 +37,9 @@ def _parse(argv=None) -> argparse.Namespace:
                     help="subset of kernels,jaxpr,kv to run")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--tp", type=int, default=2,
+                    help="model-parallel degree for the J005 "
+                         "replicated-param audit (default: 2; 1 skips it)")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="print only the final summary line")
     return ap.parse_args(argv)
@@ -84,6 +87,8 @@ def main(argv=None) -> int:
             emit("jaxpr", cfg.name,
                  jaxpr_audit.audit_model(cfg, max_batch=args.max_batch,
                                          max_seq=args.max_seq))
+            emit("jaxpr", f"{cfg.name} sharding (tp={args.tp})",
+                 jaxpr_audit.audit_param_sharding(cfg, tp=args.tp))
         emit("jaxpr", "serve shapes",
              jaxpr_audit.audit_serve_shapes(
                  SchedulerConfig(), max_batch=args.max_batch,

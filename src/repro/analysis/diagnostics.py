@@ -29,6 +29,7 @@ DIAGNOSTIC_CODES: Dict[str, str] = {
     "J002": "host-transfer",
     "J003": "missed-donation",
     "J004": "recompile-hazard",
+    "J005": "replicated-param",
     "V001": "kv-leak",
     "V002": "kv-refcount-mismatch",
     "V003": "kv-dangling-entry",

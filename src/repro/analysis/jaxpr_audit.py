@@ -25,10 +25,24 @@ pass works identically on CPU and TPU hosts.
     ``compact="exact"`` retraces per width, a non-pow2 ``max_batch``
     adds a stray width, a ``max_seq`` off the page grid strays off the
     pow2-padded table column set.
+``J005 replicated-param``
+    a large parameter that resolves to fully-replicated under a sharded
+    ``(data, model)`` mesh spec — every model shard holds a full copy,
+    so tensor parallelism buys no HBM for it. Advisory: small tables
+    (norm scales, router gates) are *meant* to replicate; the check only
+    names leaves above a size floor.
 
-Severities: shipped configs must audit error-free, so J001/J004 are
-warnings (observations about numerics/compile behavior) and J002/J003 —
-which are outright serving bugs — are errors.
+The sharding-related checks are device-free: J005 uses
+:class:`repro.sharding.rules.SpecMesh` (spec math reads only the mesh
+*shape*), and :func:`audit_engine_donation` / :func:`audit_engine_steps`
+audit a live engine's own jits, which is the same abstract tracing
+whether the engine is single-device or a mesh-sharded
+:class:`~repro.serve.distributed.ShardedServeEngine` — so J002/J003 run
+under a tp=2 mesh exactly as under one device.
+
+Severities: shipped configs must audit error-free, so J001/J004/J005 are
+warnings (observations about numerics/layout/compile behavior) and
+J002/J003 — which are outright serving bugs — are errors.
 """
 from __future__ import annotations
 
@@ -252,6 +266,80 @@ def audit_serve_shapes(scheduler_config, *, max_batch: int = 8,
             f"grid",
             fix_hint="round max_seq to a page_size multiple"))
     return out
+
+
+def audit_param_sharding(cfg: ModelConfig, *, tp: int = 2,
+                         min_mib: float = 1.0) -> List[Diagnostic]:
+    """J005: params left fully replicated by the sharding rules under a
+    ``(1, tp)`` mesh spec. Device-free — the rule table is resolved
+    against a :class:`~repro.sharding.rules.SpecMesh`, so a 100B config
+    audits on a 1-CPU host."""
+    from repro.sharding import rules
+    if tp < 2:
+        return []
+    mesh = rules.SpecMesh({"data": 1, "model": int(tp)})
+    avals = param_avals(cfg)
+    pspecs = rules.param_pspecs(avals, mesh)
+    floor = int(min_mib * (1 << 20))
+    out: List[Diagnostic] = []
+
+    def model_sharded(spec) -> bool:
+        # the data axis is size 1 on a serving mesh, so only a 'model'
+        # entry means the param is actually split across shards
+        for ax in tuple(spec):
+            axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+            if "model" in axes:
+                return True
+        return False
+
+    def walk(avals, specs, prefix=""):
+        for k in sorted(avals):
+            path = f"{prefix}/{k}" if prefix else k
+            a, s = avals[k], specs[k]
+            if isinstance(a, dict):
+                walk(a, s, path)
+                continue
+            nbytes = int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+            if nbytes < floor or model_sharded(s):
+                continue
+            out.append(Diagnostic(
+                "J005", WARNING, f"{cfg.name}/{path}",
+                f"param {path} ({nbytes / (1 << 20):.1f} MiB, shape "
+                f"{list(a.shape)}) is not sharded over the model axis "
+                f"under a (1, {tp}) (data, model) mesh — each of the "
+                f"{tp} model shards holds a full copy",
+                fix_hint="add a trailing-dim rule for it in "
+                         "repro.sharding.rules (or accept replication "
+                         "for small/irregular tables)"))
+
+    walk(avals, pspecs)
+    return out
+
+
+def audit_engine_steps(engine) -> List[Diagnostic]:
+    """J001/J002 over a live engine's *actual* jitted decode step.
+    Tracing is abstract and placement-blind, so this runs identically
+    for a single-device engine and a tp>1
+    :class:`~repro.serve.distributed.ShardedServeEngine` — the mesh
+    changes where buffers live, not what the jaxpr contains."""
+    bf16 = engine.cfg.dtype == "bfloat16"
+    site = f"{engine.cfg.name}@tp{getattr(engine, 'tp', 1)}"
+    params = _abstract(engine.params)
+    cur = _sds((engine.max_batch, 1), np.int32)
+    if getattr(engine, "kv_layout", "contiguous") == "paged":
+        sc = engine.scheduler.config
+        n_cols = max(1, -(-engine.max_seq // sc.page_size))
+        pools = _abstract(engine._pools)
+        table = _sds((engine.max_batch, n_cols), np.int32)
+        pos = _sds((), np.int32)
+        jaxpr = jax.make_jaxpr(engine.model.decode_step_paged)(
+            params, cur, pools, table, pos)
+        return audit_jaxpr(jaxpr, site=f"{site}/decode_step_paged",
+                           expect_bf16=bf16)
+    caches = jax.eval_shape(
+        lambda: engine.model.init_caches(engine.max_batch, engine.max_seq))
+    jaxpr = jax.make_jaxpr(engine.model.decode_step)(params, cur, caches)
+    return audit_jaxpr(jaxpr, site=f"{site}/decode_step", expect_bf16=bf16)
 
 
 def audit_engine_donation(engine) -> List[Diagnostic]:

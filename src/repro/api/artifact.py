@@ -125,13 +125,40 @@ def _decode_step_report(cfg: ModelConfig, sites, wl: Workload,
     full report (the task/fixed split parameterizes serve-time
     recalibration, not just the total). ``kv_layout="paged"`` prices the
     attention term through the paged-decode kernel when the oracle can
-    measure it."""
-    wl_d = Workload(tokens_global=max_batch, dp=1, tp=1,
+    measure it. The decode workload inherits ``wl``'s tensor-parallel
+    degree: a tp=2 artifact is priced as per-shard GEMMs plus the
+    analytic all-reduce term, not as one big chip."""
+    wl_d = Workload(tokens_global=max_batch, dp=1, tp=wl.tp,
                     dtype_bytes=wl.dtype_bytes)
     table = tuner.build_tuned_table(sites, wl_d)
     return latency.model_latency(cfg, sites, table, seq_len=1,
                                  decode_kv_len=max_seq,
                                  kv_layout=kv_layout)
+
+
+def _partition_blob(params: Dict[str, Any], tp: int) -> Dict[str, Any]:
+    """The artifact's ``PartitionSpec`` section for a ``tp``-way model
+    mesh: the per-param named-axis layout resolved from
+    :mod:`repro.sharding.rules` against a ``{"data": 1, "model": tp}``
+    spec mesh (pure spec math — no devices touched at export time)."""
+    from repro.sharding import rules
+
+    mesh_axes = {"data": 1, "model": int(tp)}
+    pspecs = rules.param_pspecs(params, rules.SpecMesh(mesh_axes))
+
+    def flatten(tree, prefix=""):
+        out: Dict[str, Any] = {}
+        for k, v in tree.items():
+            p = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, dict):
+                out.update(flatten(v, p))
+            else:
+                out[p] = [list(ax) if isinstance(ax, tuple) else ax
+                          for ax in tuple(v)]
+        return out
+
+    return {"tp": int(tp), "mesh_axes": mesh_axes,
+            "params": flatten(pspecs)}
 
 
 @dataclasses.dataclass
@@ -155,6 +182,10 @@ class DeploymentArtifact:
     # export-time static-analysis stamp ({"passed": bool, "codes": [...]});
     # None for in-memory artifacts not yet saved and for pre-stamp files
     checks: Optional[Dict[str, Any]] = None
+    # optional PartitionSpec section ({"tp", "mesh_axes", "params"}),
+    # present only for tensor-parallel (tp > 1) exports — tp=1 artifacts
+    # stay byte-identical to the pre-partition schema (still version 1)
+    partition: Optional[Dict[str, Any]] = None
 
     # -- identity -----------------------------------------------------------
 
@@ -179,8 +210,8 @@ class DeploymentArtifact:
 
     @classmethod
     def from_session(cls, session, *, max_batch: int = 8, max_seq: int = 512,
-                     predict_step: bool = True,
-                     include_table: bool = True) -> "DeploymentArtifact":
+                     predict_step: bool = True, include_table: bool = True,
+                     tp: Optional[int] = None) -> "DeploymentArtifact":
         """Snapshot a session's current (pruned) model as an artifact.
 
         With ``include_table`` (the deployable form), the tuned program
@@ -190,8 +221,21 @@ class DeploymentArtifact:
         ``include_table=False`` builds a lightweight serving snapshot
         (params + decode-step prediction only) that cannot be saved —
         it is what :meth:`PruningSession.serve` rides on.
+
+        ``tp`` overrides the session workload's tensor-parallel degree:
+        the tuned table and every latency number are then priced as
+        per-shard GEMMs + collectives, and (for tp > 1) the artifact
+        carries a ``PartitionSpec`` section deriving the per-param
+        named-axis layout from the sharding rules. ``None`` inherits the
+        session workload; tp=1 artifacts are byte-identical to exports
+        from before partitioning existed.
         """
         target, orc = session.target, session.oracle
+        tp = session.workload.tp if tp is None else int(tp)
+        if tp < 1:
+            raise ArtifactError(f"tp must be >= 1, got {tp}")
+        wl = session.workload if tp == session.workload.tp \
+            else dataclasses.replace(session.workload, tp=tp)
         export_oracle = orc
         if include_table:
             if not dataclasses.is_dataclass(target):
@@ -202,14 +246,12 @@ class DeploymentArtifact:
                 # phase 1: measure (into the record) everything the
                 # artifact will need, then re-express deterministically
                 with target.activate(), oracle_mod.use_oracle(orc):
-                    t0 = tuner.build_tuned_table(session.sites,
-                                                 session.workload)
+                    t0 = tuner.build_tuned_table(session.sites, wl)
                     latency.model_latency(session.cfg, session.sites, t0,
                                           seq_len=session.pcfg.seq_len)
                     if predict_step:
                         _decode_step_report(session.cfg, session.sites,
-                                            session.workload, max_batch,
-                                            max_seq)
+                                            wl, max_batch, max_seq)
                 export_oracle = ReplayOracle(orc.record.copy())
             elif not isinstance(orc, (AnalyticOracle, MeasuredOracle,
                                       ReplayOracle)):
@@ -222,16 +264,14 @@ class DeploymentArtifact:
         with tuner.target_activation(target), \
                 oracle_mod.use_oracle(export_oracle):
             if include_table:
-                table = tuner.build_tuned_table(session.sites,
-                                                session.workload)
+                table = tuner.build_tuned_table(session.sites, wl)
                 report = latency.model_latency(session.cfg, session.sites,
                                                table,
                                                seq_len=session.pcfg.seq_len)
             if predict_step:
                 try:
                     step_rep = _decode_step_report(session.cfg,
-                                                   session.sites,
-                                                   session.workload,
+                                                   session.sites, wl,
                                                    max_batch, max_seq)
                 except KeyError:
                     # a replay log recorded for another workload cannot
@@ -252,11 +292,12 @@ class DeploymentArtifact:
             "predicted_step_fixed_s": step_rep.fixed_s if step_rep else None,
             "serve_defaults": {"max_batch": max_batch, "max_seq": max_seq},
         }
+        partition = _partition_blob(session.params, tp) if tp > 1 else None
         return cls(cfg=session.cfg, params=session.params,
                    sites=list(session.sites), target=target,
-                   oracle=export_oracle, workload=session.workload,
+                   oracle=export_oracle, workload=wl,
                    seq_len=session.pcfg.seq_len, table=table,
-                   metadata=metadata)
+                   metadata=metadata, partition=partition)
 
     # -- persistence --------------------------------------------------------
 
@@ -307,6 +348,10 @@ class DeploymentArtifact:
             "config": dataclasses.asdict(self.cfg),
             "target_spec": dataclasses.asdict(self.target),
             "workload": dataclasses.asdict(self.workload),
+            # PartitionSpec section only exists for tp > 1 exports, so a
+            # tp=1 artifact.json is byte-identical to the pre-partition
+            # schema (and old readers never see an unknown key)
+            **({"partition": self.partition} if self.partition else {}),
             "seq_len": self.seq_len,
             "site_dims": {s.site_id: s.dim for s in self.sites},
             "oracle": oracle_blob,
@@ -352,7 +397,8 @@ class DeploymentArtifact:
 
     @classmethod
     def load(cls, path: str, *,
-             strict_checks: bool = False) -> "DeploymentArtifact":
+             strict_checks: bool = False,
+             check_devices: bool = True) -> "DeploymentArtifact":
         """Read + validate an artifact directory. Refuses (with a clear
         :class:`ArtifactError`) any artifact that is missing, malformed,
         or whose schema version is unknown or whose params/target/oracle/
@@ -362,9 +408,18 @@ class DeploymentArtifact:
         ``strict_checks=True`` additionally requires the export-time
         static-analysis stamp (``checks: {passed: true}``) — artifacts
         from before the stamp existed, or stamped with errors, are
-        refused. The default keeps them loadable with a warning."""
+        refused. The default keeps them loadable with a warning.
+
+        A partition-stamped (tp > 1) artifact is also checked against
+        this process's device count — loading for serving on a host that
+        cannot build the mesh fails here, by name, instead of deep inside
+        a jit. ``check_devices=False`` skips only that check (structure
+        and fingerprints still validate): the export-side re-read uses
+        it, since exporting *for* a pod from a small host is the normal
+        plan-here-deploy-there flow."""
         try:
-            return cls._load(path, strict_checks=strict_checks)
+            return cls._load(path, strict_checks=strict_checks,
+                             check_devices=check_devices)
         except ArtifactError:
             raise
         except (OSError, json.JSONDecodeError, KeyError, IndexError,
@@ -375,7 +430,8 @@ class DeploymentArtifact:
 
     @classmethod
     def _load(cls, path: str, *,
-              strict_checks: bool = False) -> "DeploymentArtifact":
+              strict_checks: bool = False,
+              check_devices: bool = True) -> "DeploymentArtifact":
         meta_path = os.path.join(path, "artifact.json")
         if not os.path.exists(meta_path):
             raise ArtifactError(f"no deployment artifact at {path!r} "
@@ -414,6 +470,33 @@ class DeploymentArtifact:
         target = TargetSpec(**blob["target_spec"])
         workload = Workload(**blob["workload"])
         fps = blob["fingerprints"]
+
+        partition = blob.get("partition")
+        if partition is not None:
+            part_tp = int(partition.get("tp", 0))
+            if part_tp < 2:
+                raise ArtifactError(
+                    f"artifact at {path!r} carries a partition section "
+                    f"with tp={partition.get('tp')!r}; partitioned "
+                    f"artifacts must declare an integer tp >= 2 (tp=1 "
+                    f"artifacts carry no partition section at all)")
+            if part_tp != workload.tp:
+                raise ArtifactError(
+                    f"artifact at {path!r} is partitioned for tp="
+                    f"{part_tp} but its workload records tp="
+                    f"{workload.tp} — the artifact was modified after "
+                    f"export")
+            # availability check mirrors launch/mesh.make_test_mesh: the
+            # model axis needs part_tp devices, so refuse (clearly) here
+            # rather than deep inside a jit with a sharding error
+            import jax
+            if check_devices and (avail := len(jax.devices())) < part_tp:
+                raise ArtifactError(
+                    f"artifact at {path!r} requires a mesh with tp="
+                    f"{part_tp} model shards but only {avail} device(s) "
+                    f"are available — run under >= {part_tp} devices "
+                    f"(e.g. XLA_FLAGS=--xla_force_host_platform_device_"
+                    f"count={part_tp} for a host-device test mesh)")
 
         with np.load(os.path.join(path, "params.npz")) as z:
             flat = {k: z[k] for k in z.files}
@@ -487,7 +570,7 @@ class DeploymentArtifact:
                    oracle=orc, workload=workload,
                    seq_len=blob.get("seq_len", 128), table=table,
                    metadata=blob.get("metadata", {}), path=path,
-                   schema_version=ver, checks=checks)
+                   schema_version=ver, checks=checks, partition=partition)
 
     # -- serving / inspection ----------------------------------------------
 
@@ -509,22 +592,34 @@ class DeploymentArtifact:
         hashes target+oracle identity, which frontier siblings share)."""
         return f"{self.cfg.name}@{self.params_digest}"
 
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel degree this artifact was exported for (1 for
+        unpartitioned artifacts)."""
+        if self.partition is not None:
+            return int(self.partition["tp"])
+        return int(self.workload.tp)
+
     def predict_step_s(self, max_batch: int, max_seq: int, *,
                        oracle: Optional[LatencyOracle] = None,
-                       kv_layout: str = "contiguous"
-                       ) -> Optional[float]:
+                       kv_layout: str = "contiguous",
+                       tp: Optional[int] = None) -> Optional[float]:
         """Oracle-predicted seconds per decode step at ``max_batch`` with a
         ``max_seq``-deep KV cache (None when a replay log cannot score the
         decode shapes). ``oracle`` overrides the artifact's own backend —
         e.g. a recalibrated replay oracle. ``kv_layout="paged"`` predicts
         the paged-decode step — a measuring oracle times the paged kernel
-        itself, so the prediction tracks the engine's actual layout."""
+        itself, so the prediction tracks the engine's actual layout.
+        ``tp`` overrides the tensor-parallel degree (default: the
+        artifact's own) — per-shard GEMMs plus the analytic all-reduce
+        term, so sharding and pruning are priced on the same axis."""
+        wl = self.workload if tp is None \
+            else dataclasses.replace(self.workload, tp=int(tp))
         with tuner.target_activation(self.target), \
                 oracle_mod.use_oracle(oracle or self.oracle):
             try:
-                return _decode_step_report(self.cfg, self.sites,
-                                           self.workload, max_batch,
-                                           max_seq,
+                return _decode_step_report(self.cfg, self.sites, wl,
+                                           max_batch, max_seq,
                                            kv_layout=kv_layout).total_s
             except KeyError:
                 return None

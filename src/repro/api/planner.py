@@ -64,10 +64,20 @@ class PlanCandidate:
     meets_budget: bool
     session: PruningSession
     result: PruneResult
+    # tensor-parallel degree this arm was priced (and exports) at; the
+    # session's workload carries the same value, so ``export`` stamps it
+    tp: int = 1
 
     @property
     def feasible(self) -> bool:
         return self.meets_floor and self.meets_budget
+
+    @property
+    def name(self) -> str:
+        """Catalog entry name: ``<strategy>@<target>``, qualified by the
+        tp degree for sharded arms so tp variants never collide."""
+        base = f"{self.strategy}@{self.target}"
+        return base if self.tp == 1 else f"{base}@tp{self.tp}"
 
     def export(self, path: str, **kw) -> DeploymentArtifact:
         """Emit this candidate's :class:`DeploymentArtifact` at ``path``."""
@@ -76,7 +86,8 @@ class PlanCandidate:
     def describe(self) -> str:
         flag = "ok" if self.feasible else (
             "acc<floor" if not self.meets_floor else "lat>budget")
-        return (f"{self.strategy:>10s} @ {self.target:<8s} "
+        shard = "" if self.tp == 1 else f" tp={self.tp}"
+        return (f"{self.strategy:>10s} @ {self.target:<8s}{shard} "
                 f"acc={self.accuracy:.3f}  latency={self.latency_s*1e3:.3f}ms"
                 f"  fps_x={self.fps_increase:.2f}  [{flag}]")
 
@@ -100,6 +111,7 @@ class PlanInputs:
     params: Optional[Dict]
     strategy_kwargs: Optional[Dict[str, Dict]]
     seed: int
+    tp: Union[int, Sequence[int], None] = None
 
 
 @dataclasses.dataclass
@@ -170,7 +182,7 @@ class Plan:
         os.makedirs(path, exist_ok=True)
         entries = []
         for c in cands:
-            name = f"{c.strategy}@{c.target}"
+            name = c.name
             art = c.export(os.path.join(path, name), max_batch=max_batch,
                            max_seq=max_seq)
             entries.append({
@@ -182,6 +194,9 @@ class Plan:
                 # the export-time static-analysis stamp, surfaced so a
                 # router can see a whole fleet's check status in one read
                 "checks": art.checks,
+                # tensor-parallel degree (partition stamp) — 1 when the
+                # artifact is unsharded, so old manifests parse unchanged
+                "tp": art.tp,
             })
         blob = {"version": CATALOG_VERSION,
                 "accuracy_floor": self.accuracy_floor,
@@ -191,7 +206,10 @@ class Plan:
         with open(tmp, "w") as f:
             json.dump(blob, f, indent=1)
         os.replace(tmp, os.path.join(path, CATALOG_NAME))
-        return ArtifactCatalog.load(path)
+        # verification re-read: a catalog is routinely exported on a
+        # smaller host than the pod it targets, so skip only the
+        # device-availability check of any tp > 1 members
+        return ArtifactCatalog.load(path, check_devices=False)
 
     def summary(self) -> str:
         lines = [c.describe() for c in self.candidates]
@@ -210,7 +228,8 @@ def plan(cfg: ModelConfig, *, accuracy_floor: float,
          params: Optional[Dict] = None,
          oracle: Union[str, LatencyOracle, None] = None,
          strategy_kwargs: Optional[Dict[str, Dict]] = None,
-         seed: int = 0, verbose: bool = False) -> Plan:
+         seed: int = 0, verbose: bool = False,
+         tp: Union[int, Sequence[int], None] = None) -> Plan:
     """Sweep strategy x target under one set of constraints.
 
     Every arm starts from the *same* initial params (``params``, or a
@@ -219,6 +238,13 @@ def plan(cfg: ModelConfig, *, accuracy_floor: float,
     kwargs (e.g. ``{"uniform_l1": {"ratio": 0.25}}``). Latencies are each
     target's own cost-model estimate — comparable within a target and a
     deploy-time budget check across targets.
+
+    ``tp`` adds tensor-parallel degrees to the sweep (``tp=[1, 2]`` runs
+    every strategy x target arm at both): sharded arms are priced as
+    per-shard GEMMs plus the analytic all-reduce term, so sharding
+    competes with pruning on the same latency axis, and their exported
+    artifacts carry the partition stamp. ``None`` inherits ``workload``'s
+    degree (default 1).
 
     The floor is threaded into the search itself, not just checked after
     the fact: when no ``pcfg`` is given, the sessions run with
@@ -230,34 +256,49 @@ def plan(cfg: ModelConfig, *, accuracy_floor: float,
         params = init_params(jax.random.PRNGKey(seed), cfg)
     if pcfg is None:
         pcfg = CPruneConfig(a_g=accuracy_floor)
+    if tp is None:
+        tps = (workload.tp if workload is not None else 1,)
+    elif isinstance(tp, int):
+        tps = (tp,)
+    else:
+        tps = tuple(int(t) for t in tp)
+    if any(t < 1 for t in tps):
+        raise PlanError(f"tp degrees must be >= 1, got {tps}")
     kwargs = strategy_kwargs or {}
     candidates: List[PlanCandidate] = []
     for target in targets:
         tspec = get_target(target)
         for strategy in strategies:
-            session = PruningSession(cfg, params=params, target=tspec,
-                                     oracle=oracle, workload=workload,
-                                     hooks=hooks, pcfg=pcfg)
-            result = session.prune(strategy=strategy,
-                                   **kwargs.get(strategy, {}))
-            lat = result.final_latency.total_s
-            acc = result.final_acc
-            cand = PlanCandidate(
-                strategy=strategy, target=tspec.name, accuracy=acc,
-                latency_s=lat, fps_increase=result.fps_increase,
-                meets_floor=acc >= accuracy_floor,
-                meets_budget=(latency_budget_s is None
-                              or lat <= latency_budget_s),
-                session=session, result=result)
-            candidates.append(cand)
-            if verbose:
-                print(cand.describe())
+            for t in tps:
+                if workload is None:
+                    wl_arm = None if t == 1 \
+                        else Workload(tokens_global=65536, tp=t)
+                else:
+                    wl_arm = workload if workload.tp == t \
+                        else dataclasses.replace(workload, tp=t)
+                session = PruningSession(cfg, params=params, target=tspec,
+                                         oracle=oracle, workload=wl_arm,
+                                         hooks=hooks, pcfg=pcfg)
+                result = session.prune(strategy=strategy,
+                                       **kwargs.get(strategy, {}))
+                lat = result.final_latency.total_s
+                acc = result.final_acc
+                cand = PlanCandidate(
+                    strategy=strategy, target=tspec.name, accuracy=acc,
+                    latency_s=lat, fps_increase=result.fps_increase,
+                    meets_floor=acc >= accuracy_floor,
+                    meets_budget=(latency_budget_s is None
+                                  or lat <= latency_budget_s),
+                    session=session, result=result, tp=t)
+                candidates.append(cand)
+                if verbose:
+                    print(cand.describe())
     inputs = PlanInputs(cfg=cfg, accuracy_floor=accuracy_floor,
                         latency_budget_s=latency_budget_s,
                         targets=tuple(targets), strategies=tuple(strategies),
                         workload=workload, hooks=hooks, pcfg=pcfg,
                         params=params, strategy_kwargs=strategy_kwargs,
-                        seed=seed)
+                        seed=seed, tp=tp)
     return Plan(accuracy_floor=accuracy_floor,
                 latency_budget_s=latency_budget_s, candidates=candidates,
                 inputs=inputs)
@@ -295,4 +336,4 @@ def replan(prior: Plan, *, oracle: Union[str, LatencyOracle, None],
                 workload=ins.workload, hooks=ins.hooks, pcfg=ins.pcfg,
                 params=ins.params, oracle=oracle,
                 strategy_kwargs=ins.strategy_kwargs, seed=ins.seed,
-                verbose=verbose)
+                verbose=verbose, tp=ins.tp)

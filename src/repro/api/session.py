@@ -200,7 +200,8 @@ class PruningSession:
     # -- export / serve -----------------------------------------------------
 
     def export(self, path: str, *, max_batch: int = 8,
-               max_seq: int = 512) -> DeploymentArtifact:
+               max_seq: int = 512,
+               tp: Optional[int] = None) -> DeploymentArtifact:
         """Package the current (pruned) model as a self-contained
         :class:`~repro.api.artifact.DeploymentArtifact` at ``path``:
         params, model config, target constants, the tuned program table,
@@ -214,10 +215,20 @@ class PruningSession:
         parameterize the recorded decode-step prediction. Returns the
         artifact re-read from disk, so what you get is exactly what was
         persisted (validation included).
+
+        ``tp`` exports for a tensor-parallel mesh: the tuned table and
+        latency metadata are priced per shard (plus collectives) and the
+        artifact carries a ``PartitionSpec`` section the sharded engine
+        loads against a real mesh. ``None`` inherits the session
+        workload's degree; tp=1 artifacts are byte-identical to before
+        partitioning existed.
         """
         DeploymentArtifact.from_session(
-            self, max_batch=max_batch, max_seq=max_seq).save(path)
-        return DeploymentArtifact.load(path)
+            self, max_batch=max_batch, max_seq=max_seq, tp=tp).save(path)
+        # the verification re-read skips only the device-availability
+        # check: exporting *for* a pod from a small host is the normal
+        # plan-here-deploy-there flow (serving still re-checks at load)
+        return DeploymentArtifact.load(path, check_devices=False)
 
     def serve(self, *, params: Optional[Dict[str, Any]] = None,
               max_batch: int = 8, max_seq: int = 512,

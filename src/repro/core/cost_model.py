@@ -189,3 +189,25 @@ def scan_cost(batch: int, seq: int, width: int, state_bytes: int) -> float:
     """Latency of a linear-recurrence scan (RG-LRU / WKV): bandwidth bound."""
     bytes_total = batch * seq * width * 4 + state_bytes
     return bytes_total * 3 / HBM_BW + CALL_OVERHEAD_S
+
+
+def collective_cost(n_bytes: int, tp: int, *, op: str = "all_reduce") -> float:
+    """Latency of one tensor-parallel collective over ``tp`` ICI-linked
+    shards (ring algorithm, bandwidth bound).
+
+    An all-reduce moves ``2 * (tp-1)/tp`` of the payload over the wire
+    (reduce-scatter + all-gather halves); an all-gather / reduce-scatter
+    moves half that. ``tp <= 1`` is free — a single shard has nothing to
+    exchange — so tp=1 plans price identically to before collectives
+    existed.
+    """
+    if tp <= 1 or n_bytes <= 0:
+        return 0.0
+    if op == "all_reduce":
+        wire = 2 * (tp - 1) * n_bytes / tp
+    elif op in ("all_gather", "reduce_scatter"):
+        wire = (tp - 1) * n_bytes / tp
+    else:
+        raise ValueError(f"unknown collective op {op!r}; expected "
+                         "all_reduce / all_gather / reduce_scatter")
+    return wire / ICI_BW + CALL_OVERHEAD_S

@@ -139,6 +139,12 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
     tp = wl.tp
     tune = (lambda *a, **k: tuner.tune_gemm(*a, stats=stats, **k)) \
         if use_tuning else tuner.untuned_gemm
+    # TP collectives: oracle-probed like paged_attention_cost so custom
+    # scoring backends can override; every shipped backend prices them
+    # with the same analytic ring formula (tp=1 -> exactly 0.0)
+    coll = getattr(orc, "collective_cost", None)
+    if tp > 1 and coll is None:
+        coll = oracle_mod.AnalyticOracle().collective_cost
     bd: Dict[str, float] = {}
 
     def add(name: str, sec: float):
@@ -207,10 +213,21 @@ def fixed_latency(cfg: ModelConfig, sites: Sequence[PruneSite], wl: Workload,
                 batch_local, seq_len, d // tp,
                 4 * (H // tp + 1) * cfg.rwkv_head_dim ** 2) * mult)
 
+    if tp > 1:
+        # Megatron-style layer sharding leaves partial sums at the two
+        # row-parallel projections per layer (mixer output + FFN/MoE
+        # down): one all-reduce of the residual activation each
+        add("collective", 2 * cfg.n_layers
+            * coll(m * d * wl.dtype_bytes, tp, op="all_reduce"))
+
     # embedding gather + unembed GEMM (vocab TP-sharded)
     add("embed", orc.hbm_bytes_cost(m * d * wl.dtype_bytes))
     un = tune(m, d, max(1, cfg.vocab_size // tp), dtype_bytes=wl.dtype_bytes)
     add("unembed", un.latency)
+    if tp > 1:
+        # vocab-sharded logits gathered once per step for sampling
+        add("collective", coll(m * max(1, cfg.vocab_size // tp)
+                               * wl.dtype_bytes, tp, op="all_gather"))
     total = sum(bd.values())
     if memo_key is not None:
         _FIXED_CACHE[memo_key] = (total, dict(bd))

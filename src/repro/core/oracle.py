@@ -87,6 +87,9 @@ class LatencyOracle(Protocol):
 
     def hbm_bytes_cost(self, n_bytes: int) -> float: ...
 
+    def collective_cost(self, n_bytes: int, tp: int, *,
+                        op: str = "all_reduce") -> float: ...
+
 
 class AnalyticOracle:
     """The closed-form cost model of the *active* target constants —
@@ -136,6 +139,13 @@ class AnalyticOracle:
 
     def hbm_bytes_cost(self, n_bytes) -> float:
         return n_bytes / cost_model.HBM_BW
+
+    def collective_cost(self, n_bytes, tp, *, op="all_reduce") -> float:
+        """One TP collective (ring over ICI). Analytic in every backend —
+        collectives are not Pallas programs a measuring oracle could time
+        on a single host — so fingerprints (and every tuning cache keyed
+        on them) are unchanged."""
+        return cost_model.collective_cost(n_bytes, tp, op=op)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -399,6 +409,9 @@ class _MeasurementOracle:
 
     def hbm_bytes_cost(self, n_bytes) -> float:
         return self._analytic.hbm_bytes_cost(n_bytes)
+
+    def collective_cost(self, *a, **kw) -> float:
+        return self._analytic.collective_cost(*a, **kw)
 
 
 # distinguishes each *recording* MeasuredOracle in cache fingerprints:

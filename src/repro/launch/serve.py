@@ -121,11 +121,55 @@ def _parser():
                          "unlimited)")
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--dp", type=int, default=1)
-    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel serving degree: >1 shards "
+                         "params and KV over the mesh's model axis "
+                         "(ShardedServeEngine); the mesh must supply tp "
+                         "devices — errors name the shortfall")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit (data, model) serving mesh as DxM "
+                         "(e.g. 1x2); must agree with --tp and fit "
+                         "--devices — mismatches raise MeshError naming "
+                         "both shapes")
+    ap.add_argument("--replicas-per-entry", type=int, default=None,
+                    help="catalog mode: supervised engine replicas per "
+                         "catalog entry (overrides --replicas there; "
+                         "each replica of a tp>1 entry gets the full "
+                         "sharded mesh)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     return ap
+
+
+def _serving_mesh(args):
+    """The (data, model) serving mesh implied by --mesh/--tp, or None
+    for plain single-device serving. Every failure mode raises
+    :class:`~repro.launch.mesh.MeshError` naming the shapes involved:
+    a --mesh string whose model axis disagrees with --tp, or a mesh
+    that needs more devices than --devices forced into existence."""
+    if args.mesh is None and args.tp <= 1:
+        return None
+    from repro.launch.mesh import MeshError, make_test_mesh
+    from repro.serve.distributed import validate_mesh
+    if args.mesh is not None:
+        try:
+            data, model = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(
+                f"--mesh must be DATAxMODEL (e.g. 1x2), got {args.mesh!r}")
+        if args.tp > 1 and model != args.tp:
+            raise MeshError(
+                f"--mesh {args.mesh} has a model axis of {model} but "
+                f"--tp {args.tp} asks for {args.tp} model shards — a "
+                f"({data}, {model}) (data, model) mesh cannot serve "
+                f"tp={args.tp}; pass --mesh {data}x{args.tp} or drop --tp")
+        mesh = make_test_mesh(n_devices=data * model, model=model)
+    else:
+        mesh = make_test_mesh(n_devices=args.tp, model=args.tp)
+    validate_mesh(mesh, tp=args.tp if args.tp > 1 else None,
+                  what=f"--tp {args.tp}")
+    return mesh
 
 
 def _requests(args, cfg, budgets):
@@ -214,6 +258,12 @@ def main():
     budgets = [float(b) * 1e-3 for b in args.budget_ms.split(",")] \
         if args.budget_ms else None
 
+    mesh = _serving_mesh(args)
+    if mesh is not None:
+        print(f"serving mesh: "
+              f"{dict((k, int(v)) for k, v in dict(mesh.shape).items())} "
+              f"(tp={int(dict(mesh.shape)['model'])})")
+
     faults = _chaos_injector() if args.chaos else None
     retry = None
     if args.retry_budget != 2 or args.chaos:
@@ -230,8 +280,9 @@ def main():
         router = Router(catalog, policy=args.route_policy,
                         on_unroutable=args.on_unroutable,
                         scheduler=args.scheduler, measurements=log,
-                        replicas=args.replicas, max_queue=args.max_queue,
-                        retry=retry, faults=faults)
+                        replicas=args.replicas_per_entry or args.replicas,
+                        max_queue=args.max_queue,
+                        retry=retry, faults=faults, mesh=mesh)
         cfg = catalog.artifact(catalog.names[0]).cfg
         pilot = None
         if args.autopilot:
@@ -292,7 +343,9 @@ def main():
             faults=faults, retry=retry, max_queue=args.max_queue,
             engine_kwargs=dict(max_batch=min(8, args.requests),
                                max_seq=args.prompt_len + args.max_new,
-                               scheduler=args.scheduler, measurements=log))
+                               scheduler=args.scheduler, measurements=log,
+                               **({"mesh": mesh}
+                                  if mesh is not None else {})))
         print(f"supervising {args.replicas} replica(s) of {args.artifact} "
               f"(model={cfg.name}, chaos={'on' if args.chaos else 'off'})")
         for req in _requests(args, cfg, budgets):
@@ -309,15 +362,22 @@ def main():
         eng = ServeEngine.from_artifact(
             art, max_batch=min(8, args.requests),
             max_seq=args.prompt_len + args.max_new,
-            scheduler=args.scheduler, measurements=log)
+            scheduler=args.scheduler, measurements=log, mesh=mesh)
         print(f"serving artifact {args.artifact} "
               f"(model={cfg.name}, target={art.target.name}, "
               f"oracle={art.oracle.name}, tuned_digest={art.tuned_digest})")
     else:
         params = init_params(jax.random.PRNGKey(0), cfg)
-        eng = ServeEngine(cfg, params, max_batch=min(8, args.requests),
-                          max_seq=args.prompt_len + args.max_new,
-                          scheduler=args.scheduler, measurements=log)
+        if mesh is not None:
+            from repro.serve.distributed import ShardedServeEngine
+            eng = ShardedServeEngine(
+                cfg, params, mesh=mesh, max_batch=min(8, args.requests),
+                max_seq=args.prompt_len + args.max_new,
+                scheduler=args.scheduler, measurements=log)
+        else:
+            eng = ServeEngine(cfg, params, max_batch=min(8, args.requests),
+                              max_seq=args.prompt_len + args.max_new,
+                              scheduler=args.scheduler, measurements=log)
     for req in _requests(args, cfg, budgets):
         eng.submit(req)
     stats = eng.run()

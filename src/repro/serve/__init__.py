@@ -1,11 +1,16 @@
 from repro.serve.engine import Engine, Request, ServeEngine
-from repro.serve.fleet import ReplicaSupervisor, RetryPolicy, RouteError
+from repro.serve.fleet import (ReplicaSet, ReplicaSupervisor, RetryPolicy,
+                               RouteError, outstanding_tokens)
 from repro.serve.router import ArtifactCatalog, CatalogEntry, Router
 from repro.serve.scheduler import (PagedSlotGroup, Scheduler,
                                    SchedulerConfig, SlotGroup)
 from repro.serve.autopilot import Autopilot, AutopilotConfig, replan_from
+from repro.serve.distributed import (ShardedServeEngine, mesh_for_artifact,
+                                     validate_mesh)
 
 __all__ = ["ArtifactCatalog", "Autopilot", "AutopilotConfig",
-           "CatalogEntry", "Engine", "PagedSlotGroup", "ReplicaSupervisor",
-           "Request", "RetryPolicy", "RouteError", "Router", "Scheduler",
-           "SchedulerConfig", "ServeEngine", "SlotGroup", "replan_from"]
+           "CatalogEntry", "Engine", "PagedSlotGroup", "ReplicaSet",
+           "ReplicaSupervisor", "Request", "RetryPolicy", "RouteError",
+           "Router", "Scheduler", "SchedulerConfig", "ServeEngine",
+           "ShardedServeEngine", "SlotGroup", "mesh_for_artifact",
+           "outstanding_tokens", "replan_from", "validate_mesh"]

@@ -203,8 +203,8 @@ class ServeEngine:
                       measurements: Optional[MeasurementLog] = None,
                       faults: Optional[FaultInjector] = None,
                       fault_tag: Optional[str] = None,
-                      straggler: Optional[StragglerMonitor] = None
-                      ) -> "ServeEngine":
+                      straggler: Optional[StragglerMonitor] = None,
+                      mesh=None) -> "ServeEngine":
         """Serve a :class:`~repro.api.artifact.DeploymentArtifact` (an
         instance or a directory path) without constructing a
         ``PruningSession`` — the cheap, restartable half of the pipeline.
@@ -213,10 +213,27 @@ class ServeEngine:
         defaults, in which case the export-time decode-step prediction is
         reused; other shapes re-derive the prediction from the artifact's
         own target + oracle (None when its replay log cannot score them).
+
+        ``mesh`` (a ``(data, model)`` device mesh) serves the artifact
+        sharded through :class:`repro.serve.distributed.ShardedServeEngine`;
+        a partition-stamped (tp > 1) artifact gets its default ``(1, tp)``
+        mesh even without one. The mesh is validated against the
+        artifact's partition with errors naming the mesh shape.
         """
         if isinstance(artifact, (str, os.PathLike)):
             from repro.api.artifact import DeploymentArtifact
             artifact = DeploymentArtifact.load(os.fspath(artifact))
+        extra: Dict[str, Any] = {}
+        if mesh is not None or int(getattr(artifact, "tp", 1)) > 1:
+            from repro.serve.distributed import ShardedServeEngine
+            if not issubclass(cls, ShardedServeEngine):
+                return ShardedServeEngine.for_artifact(
+                    artifact, mesh=mesh, max_batch=max_batch,
+                    max_seq=max_seq, seed=seed, predict_step=predict_step,
+                    scheduler=scheduler, measurements=measurements,
+                    faults=faults, fault_tag=fault_tag,
+                    straggler=straggler)
+            extra["mesh"] = mesh
         defaults = artifact.metadata.get("serve_defaults") or {}
         if max_batch is None:
             max_batch = defaults.get("max_batch", 8)
@@ -236,7 +253,8 @@ class ServeEngine:
                    max_seq=max_seq, seed=seed, predicted_step_s=predicted,
                    scheduler=scheduler, measurements=measurements,
                    measurement_tag=artifact.measurement_tag,
-                   faults=faults, fault_tag=fault_tag, straggler=straggler)
+                   faults=faults, fault_tag=fault_tag, straggler=straggler,
+                   **extra)
 
     # -- queueing -----------------------------------------------------------
 

@@ -18,9 +18,11 @@ oracle-estimated serve time is rejected with :class:`RouteError` at
 submit time — load is shed before it wastes decode ticks, not after.
 
 *Dispatch.* Each supervisor quantum drains the intake front (earliest
-deadline first) onto the least-loaded live replica, keeping per-engine
-queues shallow so the deadline ordering stays in the intake where it is
-still mutable. Deadlines order and gate admission; once admitted, a
+deadline first) onto the live replica with the fewest **outstanding
+tokens** (tokens still owed to its in-flight requests — two half-done
+long requests weigh more than three nearly-finished short ones),
+keeping per-engine queues shallow so the deadline ordering stays in the
+intake where it is still mutable. Deadlines order and gate admission; once admitted, a
 request is never killed by the wall clock — overruns are *reported*
 (the router's ``budget_violation_rate``), matching how the rest of the
 stack treats the oracle-priced SLO.
@@ -53,6 +55,14 @@ import numpy as np
 
 from repro.serve.engine import Request, ServeEngine
 from repro.util.faults import StragglerMonitor
+
+
+def outstanding_tokens(eng: ServeEngine) -> int:
+    """Tokens the engine still owes its in-flight requests — the load
+    signal the balancer dispatches by. Request *count* undercounts a
+    replica stuck with long generations; the token debt does not."""
+    return sum(max(0, r.max_new_tokens - len(r.output))
+               for r in eng.in_flight())
 
 
 class RouteError(ValueError):
@@ -140,6 +150,11 @@ class ReplicaSupervisor:
         self.straggler_steps = 0                # harvested from dead engines
         self.last_error: Optional[str] = None
         self._wall_s = 0.0
+        # fleet-balancer accounting: where did requests actually land?
+        self.dispatched = [0] * replicas        # per-replica dispatch histogram
+        self.requeued_to_survivor = 0           # crash re-queues that landed
+        #                                         on a *different* live replica
+        self._last_replica: Dict[int, int] = {}  # rid -> last dispatch target
 
     # -- construction -------------------------------------------------------
 
@@ -334,10 +349,21 @@ class ReplicaSupervisor:
             # estimate at admission and again on crash re-queue.
             # Keep per-engine queues shallow: deadline order lives in the
             # intake, engines only ever hold ~2 cohorts of lookahead.
-            rep = min(live, key=lambda r: len(r.engine.in_flight()))
+            # Least-loaded = fewest OUTSTANDING TOKENS, not fewest
+            # requests: the unit of engine work is the decode tick, and a
+            # replica's backlog is the tokens it still owes.
+            rep = min(live, key=lambda r: outstanding_tokens(r.engine))
             if len(rep.engine.in_flight()) >= 2 * rep.engine.max_batch:
                 break
             _, _, req = heapq.heappop(self._intake)
+            prev = self._last_replica.get(req.rid)
+            if prev is not None and prev != rep.index:
+                # a crash re-queue landing on a *surviving* replica —
+                # recovery did not wait for the cold rebuild of the one
+                # that died
+                self.requeued_to_survivor += 1
+            self._last_replica[req.rid] = rep.index
+            self.dispatched[rep.index] += 1
             rep.engine.submit(req)
 
     def _build(self, rep: _Replica) -> ServeEngine:
@@ -504,6 +530,18 @@ class ReplicaSupervisor:
             "crashes": self.crashes,
             "rebuilds": self.rebuilds,
             "requeued": self.requeued,
+            "requeued_to_survivor": self.requeued_to_survivor,
+            "dispatch_histogram": list(self.dispatched),
+            "per_replica_occupancy": [
+                {"replica": r.index,
+                 "live": r.engine is not None,
+                 "in_flight": (len(r.engine.in_flight())
+                               if r.engine is not None else 0),
+                 "outstanding_tokens": (outstanding_tokens(r.engine)
+                                        if r.engine is not None else 0),
+                 "dispatched": self.dispatched[r.index],
+                 "crashes": r.crashes}
+                for r in self._replicas],
             "retried_requests": sum(1 for r in done if r.retries),
             "max_retries_seen": max((r.retries for r in done + self.failed),
                                     default=0),
@@ -532,5 +570,18 @@ class ReplicaSupervisor:
         self._harvested_step_times = []
         self.submitted = self.in_flight_count
         self.crashes = self.rebuilds = self.requeued = self.shed = 0
+        self.requeued_to_survivor = 0
+        self.dispatched = [0] * len(self._replicas)
+        live = {r.rid for e in self.engines for r in e.in_flight()}
+        live.update(req.rid for _, _, req in self._intake)
+        self._last_replica = {rid: idx
+                              for rid, idx in self._last_replica.items()
+                              if rid in live}
         self.straggler_steps = 0
         self._wall_s = 0.0
+
+
+# The router-facing name: the Router holds one ReplicaSet per catalog
+# entry. Same object — the supervisor IS the fleet balancer; the alias
+# names the role it plays above (dispatch + containment), not a subclass.
+ReplicaSet = ReplicaSupervisor

@@ -87,12 +87,16 @@ class CatalogEntry:
     # export-time static-analysis stamp ({"passed": bool, "codes": [...]});
     # None in manifests written before repro.analysis existed
     checks: Optional[Dict[str, Any]] = None
+    # tensor-parallel degree of the artifact's partition stamp; 1 in
+    # manifests written before sharded serving existed
+    tp: int = 1
 
     def describe(self) -> str:
         step = ("?" if self.predicted_step_s is None
                 else f"{self.predicted_step_s * 1e3:.3f}ms")
+        shard = "" if self.tp == 1 else f"  tp={self.tp}"
         return (f"{self.name:>20s}  acc={self.accuracy:.3f}  "
-                f"step={step}")
+                f"step={step}{shard}")
 
 
 class ArtifactCatalog:
@@ -156,13 +160,24 @@ class ArtifactCatalog:
                 f"artifact's metadata (manifest claims {claimed!r}, "
                 f"artifact records {recorded!r}) — the manifest or the "
                 f"artifact was modified after export")
+        if art.tp != entry.tp:
+            raise ArtifactError(
+                f"catalog entry {entry.name!r} claims tp={entry.tp} but "
+                f"its artifact is partitioned for tp={art.tp} — the "
+                f"manifest or the artifact was modified after export")
 
     def summary(self) -> str:
         return "\n".join(e.describe() for e in self.entries)
 
     @classmethod
-    def load(cls, root: str, *, lazy: bool = False) -> "ArtifactCatalog":
+    def load(cls, root: str, *, lazy: bool = False,
+             check_devices: bool = True) -> "ArtifactCatalog":
         """Load the manifest and — by default — every member artifact.
+
+        ``check_devices=False`` skips only the per-member device-count
+        validation of partition-stamped (tp > 1) artifacts — the
+        export-side verification re-read uses it, since a catalog is
+        often exported on a smaller host than it serves on.
 
         ``lazy=True`` defers member loading (and its fingerprint
         validation) to the first :meth:`artifact` call per entry. This is
@@ -205,7 +220,8 @@ class ArtifactCatalog:
                 # fingerprint validation — the catalog adds no second
                 # scheme — and the manifest's routing numbers must agree
                 # with the artifact's own metadata
-                art = DeploymentArtifact.load(os.path.join(root, entry.path))
+                art = DeploymentArtifact.load(os.path.join(root, entry.path),
+                                              check_devices=check_devices)
                 cls._check_entry(entry, art)
                 artifacts[entry.name] = art
             entries.append(entry)
@@ -254,7 +270,8 @@ class Router:
                  retry: Optional[RetryPolicy] = None,
                  breaker_k: int = 3,
                  probe_every: int = 64,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 mesh=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown routing policy {policy!r}; "
                              f"policies: {list(POLICIES)}")
@@ -276,6 +293,10 @@ class Router:
         self.breaker_k = breaker_k
         self.probe_every = probe_every
         self.faults = faults
+        # serving mesh shared by every fleet engine (None = single
+        # device; partition-stamped entries get their default mesh from
+        # ServeEngine.from_artifact regardless)
+        self.mesh = mesh
         self._fleets: Dict[str, ReplicaSupervisor] = {}
         self._quarantined: Dict[str, Dict[str, Any]] = {}
         self._histogram: Dict[str, int] = {}
@@ -381,7 +402,9 @@ class Router:
                 engine_kwargs=dict(
                     max_batch=self.max_batch, max_seq=self.max_seq,
                     scheduler=self.scheduler,
-                    measurements=self.measurements))
+                    measurements=self.measurements,
+                    **({"mesh": self.mesh}
+                       if self.mesh is not None else {})))
             sup.start()                 # propagate build errors eagerly
             self._fleets[name] = sup
         return self._fleets[name]

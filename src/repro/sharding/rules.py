@@ -25,6 +25,18 @@ from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
 Axis = Optional[Any]
 
 
+class SpecMesh:
+    """Shape-only stand-in for a :class:`jax.sharding.Mesh`.
+
+    Everything in this module that computes bare PartitionSpecs (not
+    NamedShardings) only reads ``mesh.shape``, so the spec math can run
+    with no devices at all — artifact partition stamping and rule
+    coverage tests use this instead of forcing backend init."""
+
+    def __init__(self, shape: Dict[str, int]):
+        self.shape = dict(shape)
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
